@@ -1,0 +1,39 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_arch
+from repro.core.ir import Workload, bert_large_workload
+
+#: the seven evaluation networks of Fig. 7 / Fig. 9 (the paper does not name
+#: them; we use Bert-large + six assigned architectures' operator mixes)
+SEVEN_WORKLOADS = (
+    "bert-large", "yi-6b", "gemma-7b", "falcon-mamba-7b",
+    "granite-moe-3b-a800m", "mixtral-8x7b", "whisper-small",
+)
+
+
+def get_workload(name: str, seq: int = 512) -> Workload:
+    if name == "bert-large":
+        return bert_large_workload(seq)
+    return get_arch(name).workload(seq=seq)
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+def geomean(xs):
+    import math
+    xs = list(xs)
+    return math.exp(sum(math.log(max(x, 1e-12)) for x in xs) / len(xs))

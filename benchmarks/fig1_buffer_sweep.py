@@ -1,0 +1,31 @@
+"""Paper Fig. 1: systolic-array latency vs buffer share under a fixed area
+budget (scale-sim analogue) -- the motivation that compute/storage balance
+has an optimum."""
+from __future__ import annotations
+
+from benchmarks.common import csv_line, timed
+from repro.core.systolic import buffer_sweep
+
+
+def run() -> list[str]:
+    lines = []
+    for dataflow in ("ws", "is"):
+        rows, dt = timed(
+            buffer_sweep, area_budget_mm2=5.0, m=512, k=2048, n=2048,
+            dataflow=dataflow)
+        best = min(rows, key=lambda r: r["total_cycles"])
+        worst = max(rows, key=lambda r: r["total_cycles"])
+        curve = ";".join(f"{r['buf_kb']}KB:{r['total_cycles']}" for r in rows)
+        # the motivation claim: a U-shaped optimum exists (ends worse than min)
+        u_shaped = (rows[0]["total_cycles"] > best["total_cycles"]
+                    or rows[-1]["total_cycles"] > best["total_cycles"])
+        lines.append(csv_line(
+            f"fig1_{dataflow}", dt * 1e6,
+            f"best={best['buf_kb']}KB worst/best="
+            f"{worst['total_cycles']/best['total_cycles']:.2f} "
+            f"u_shaped={u_shaped} curve={curve}"))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,53 @@
+"""Paper Fig. 7: CIM-Tuner's scheduling+tiling (ST) space vs the spatial-
+only (SO) mapping of [19], under the SAME hardware-mapping co-exploration
+with a 5 mm^2 budget, across the seven evaluation networks.
+
+Paper claims: average 1.58x energy efficiency and 2.11x throughput."""
+from __future__ import annotations
+
+from benchmarks.common import SEVEN_WORKLOADS, csv_line, geomean, get_workload, timed
+from repro.core import DesignSpace, co_explore, get_macro
+
+BUDGET = 5.0
+
+
+def one_network(name: str, macro) -> dict:
+    wl = get_workload(name)
+    out = {}
+    for sset in ("so", "st"):
+        ee = co_explore(macro, wl, BUDGET, objective="ee",
+                        strategy_set=sset, method="exhaustive")
+        th = co_explore(macro, wl, BUDGET, objective="th",
+                        strategy_set=sset, method="exhaustive")
+        out[sset] = {"tops_w": ee.metrics["tops_w"],
+                     "gops": th.metrics["gops"],
+                     "ee_cfg": ee.config.as_tuple(),
+                     "th_cfg": th.config.as_tuple()}
+    out["ee_gain"] = out["st"]["tops_w"] / out["so"]["tops_w"]
+    out["th_gain"] = out["st"]["gops"] / out["so"]["gops"]
+    return out
+
+
+def run() -> list[str]:
+    macro = get_macro("vanilla-dcim")
+    lines = []
+    ee_gains, th_gains = [], []
+    for name in SEVEN_WORKLOADS:
+        res, dt = timed(one_network, name, macro)
+        ee_gains.append(res["ee_gain"])
+        th_gains.append(res["th_gain"])
+        lines.append(csv_line(
+            f"fig7_{name}", dt * 1e6,
+            f"EE {res['so']['tops_w']:.2f}->{res['st']['tops_w']:.2f} "
+            f"TOPS/W (x{res['ee_gain']:.2f})  "
+            f"Th {res['so']['gops']:.0f}->{res['st']['gops']:.0f} GOPS "
+            f"(x{res['th_gain']:.2f})"))
+    lines.append(csv_line(
+        "fig7_average", 0.0,
+        f"EE_gain_geomean=x{geomean(ee_gains):.2f} (paper x1.58)  "
+        f"Th_gain_geomean=x{geomean(th_gains):.2f} (paper x2.11)"))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,73 @@
+"""Paper Fig. 8: energy breakdown of three Bert-large operators under two
+CIM macros (FPCIM-like long-AL vs LCC-CIM-like short-AL) for the MS-1
+(NR-IP-AF) vs MS-2 (NR-IP-PF) strategies on fixed hardware
+(MR,MC,SCR,IS,OS) = (2,2,16,1024,128).
+
+Claims reproduced: AF trades Input-SRAM energy for Output-SRAM relief; PF
+the reverse; with the limited 128 KB OS, PF spills partial sums to external
+memory (EMA), which blows up energy -- worse for the short-AL macro."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_line, timed
+from repro.core import AcceleratorConfig, Strategy, get_macro
+from repro.core.calibration import DEFAULT_TECH
+from repro.core.cost_model import area_mm2_jnp, matmul_cost
+from repro.core.ir import bert_large_fig8_ops
+
+CFG = AcceleratorConfig(2, 2, 16, 1024, 128)
+STRATS = {"MS-1": Strategy("NR", "IP", "AF"), "MS-2": Strategy("NR", "IP", "PF")}
+
+
+def breakdown(macro, op, strat) -> dict:
+    cfg_row = jnp.asarray(
+        [CFG.mr, CFG.mc, CFG.scr, CFG.is_kb, CFG.os_kb, CFG.bw], dtype=float)
+    cb = matmul_cost(
+        op.m, op.k, op.n,
+        float(strat.spatial == "R"), float(strat.temporal == "WP"),
+        float(strat.tiling == "PF"),
+        CFG.mr, CFG.mc, CFG.scr, CFG.is_kb, CFG.os_kb, CFG.bw,
+        area_mm2_jnp(cfg_row, macro), macro)
+    t = DEFAULT_TECH
+    return {
+        "mac": float(cb.macs) * macro.mac_energy_pj(t),
+        "is": float(cb.is_rd_bits + cb.is_wr_bits) * t.e_sram_rd_pj_bit,
+        "os": float(cb.os_rd_bits + cb.os_wr_bits) * t.e_sram_rd_pj_bit,
+        "ema": float(cb.ema_bits) * t.e_ema_pj_bit,
+        "spill": float(cb.spill_ema_bits) * t.e_ema_pj_bit,
+    }
+
+
+def run() -> list[str]:
+    lines = []
+    checks = []
+    for mname in ("fpcim", "lcc-cim"):
+        macro = get_macro(mname)
+        for op in bert_large_fig8_ops().ops:
+            rows, dt = timed(lambda: {
+                k: breakdown(macro, op, s) for k, s in STRATS.items()})
+            af, pf = rows["MS-1"], rows["MS-2"]
+            checks.append((mname, op.name,
+                           af["is"] >= pf["is"],       # AF reads IS more
+                           pf["os"] >= af["os"],       # PF hits OS more
+                           pf["spill"] >= af["spill"]))
+            tot_af = sum(af.values()) - af["spill"]
+            tot_pf = sum(pf.values()) - pf["spill"]
+            lines.append(csv_line(
+                f"fig8_{mname}_{op.name}", dt * 1e6,
+                f"AF(pJ): is={af['is']:.3g} os={af['os']:.3g} "
+                f"ema={af['ema']:.3g} total={tot_af:.3g} | "
+                f"PF: is={pf['is']:.3g} os={pf['os']:.3g} "
+                f"ema={pf['ema']:.3g} (spill={pf['spill']:.3g}) "
+                f"total={tot_pf:.3g}"))
+    ok = all(c[2] and c[3] and c[4] for c in checks)
+    lines.append(csv_line(
+        "fig8_claims", 0.0,
+        f"AF>=PF IS-energy, PF>=AF OS-energy, PF>=AF spill: all={ok}"))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,54 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (plus section markers).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig7,table2]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = (
+    ("fig1_buffer_sweep", "Fig.1 systolic compute/storage motivation"),
+    ("fig2_motivation", "Fig.2 CIM hardware-proportion x strategy sweep"),
+    ("fig7_mapping", "Fig.7 ST vs SO mapping-space comparison (7 nets)"),
+    ("fig8_breakdown", "Fig.8 Bert energy breakdown (AF vs PF, 2 macros)"),
+    ("table2_sota", "Table II SOTA accelerators (TranCIM / TP-DCIM)"),
+    ("fig9_runtime", "Fig.9 runtime: operator merging + space pruning"),
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module prefixes")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
+
+    failures = 0
+    t_all = time.perf_counter()
+    for mod_name, title in MODULES:
+        if only and not any(mod_name.startswith(o) for o in only):
+            continue
+        print(f"# === {mod_name}: {title} ===", flush=True)
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            t0 = time.perf_counter()
+            for line in mod.run():
+                print(line, flush=True)
+            print(f"# {mod_name} done in {time.perf_counter()-t0:.1f}s",
+                  flush=True)
+        except Exception:   # noqa: BLE001 -- report all benches
+            failures += 1
+            print(f"# {mod_name} FAILED:\n{traceback.format_exc()}",
+                  flush=True)
+    print(f"# total {time.perf_counter()-t_all:.1f}s, failures={failures}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

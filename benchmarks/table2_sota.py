@@ -1,0 +1,60 @@
+"""Paper Table II: CIM-Tuner applied to two SOTA accelerators (TranCIM [10],
+TP-DCIM [16]) on Bert-Large with the area budget fixed at the baseline area;
+co-exploration re-balances (MR, MC, SCR, IS, OS) for energy efficiency (EE.)
+and throughput (Th.) separately.  Other hardware parameters (macro, BW) are
+fixed, as in the paper."""
+from __future__ import annotations
+
+from benchmarks.common import csv_line, timed
+from repro.core import AcceleratorConfig, co_explore, evaluate_config
+from repro.core.ir import bert_large_workload
+from repro.core.macro import TPDCIM_MACRO, TRANCIM_MACRO
+from repro.core.template import accelerator_area_mm2
+
+BASELINES = {
+    "TranCIM": (TRANCIM_MACRO, AcceleratorConfig(3, 1, 1, 64, 128),
+                {"ee": 2.54, "th": 1002.3, "area": 3.52,
+                 "ee_gain": 1.34, "th_gain": 1.03}),
+    "TP-DCIM": (TPDCIM_MACRO, AcceleratorConfig(2, 4, 1, 16, 16),
+                {"ee": 1.89, "th": 460.9, "area": 2.23,
+                 "ee_gain": 2.31, "th_gain": 2.88}),
+}
+
+
+def run() -> list[str]:
+    wl = bert_large_workload()
+    lines = []
+    for name, (macro, base_cfg, paper) in BASELINES.items():
+        budget = accelerator_area_mm2(base_cfg, macro)
+
+        def explore():
+            base = evaluate_config(macro, base_cfg, wl)
+            ee = co_explore(macro, wl, budget, objective="ee",
+                            method="exhaustive")
+            th = co_explore(macro, wl, budget, objective="th",
+                            method="exhaustive")
+            return base, ee, th
+
+        (base, ee, th), dt = timed(explore)
+        ee_gain = ee.metrics["tops_w"] / base["tops_w"]
+        th_gain = th.metrics["gops"] / base["gops"]
+        lines.append(csv_line(
+            f"table2_{name}_base", dt * 1e6,
+            f"cfg={base_cfg.as_tuple()} EE={base['tops_w']:.2f} TOPS/W "
+            f"(paper {paper['ee']}) Th={base['gops']:.0f} GOPS "
+            f"(paper {paper['th']}) area={budget:.2f} (paper {paper['area']})"))
+        lines.append(csv_line(
+            f"table2_{name}_EE", 0.0,
+            f"cfg={ee.config.as_tuple()} EE={ee.metrics['tops_w']:.2f} TOPS/W "
+            f"area={ee.metrics['area_mm2']:.2f} gain=x{ee_gain:.2f} "
+            f"(paper x{paper['ee_gain']})"))
+        lines.append(csv_line(
+            f"table2_{name}_Th", 0.0,
+            f"cfg={th.config.as_tuple()} Th={th.metrics['gops']:.0f} GOPS "
+            f"area={th.metrics['area_mm2']:.2f} gain=x{th_gain:.2f} "
+            f"(paper x{paper['th_gain']})"))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

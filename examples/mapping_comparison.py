@@ -1,0 +1,33 @@
+"""Fig. 7-style comparison on one network: CIM-Tuner's full scheduling +
+tiling space (ST) vs the spatial-only space of prior work [19] (SO), under
+identical co-exploration.
+
+    PYTHONPATH=src python examples/mapping_comparison.py [arch-id]
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_arch
+from repro.core import co_explore, get_macro
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "yi-6b"
+wl = get_arch(arch).workload(seq=512)
+macro = get_macro("vanilla-dcim")
+
+print(f"workload: {arch} ({len(wl.ops)} merged GEMM shapes, "
+      f"{wl.total_macs/1e9:.1f} GMACs)")
+for sset, label in (("so", "SO (spatial-only, prior work [19])"),
+                    ("st", "ST (CIM-Tuner: scheduling + tiling)")):
+    ee = co_explore(macro, wl, 5.0, objective="ee", strategy_set=sset,
+                    method="exhaustive")
+    th = co_explore(macro, wl, 5.0, objective="th", strategy_set=sset,
+                    method="exhaustive")
+    print(f"\n{label}")
+    print(f"  best-EE {ee.config.as_tuple()}: "
+          f"{ee.metrics['tops_w']:.2f} TOPS/W")
+    print(f"  best-Th {th.config.as_tuple()}: {th.metrics['gops']:.0f} GOPS")
+    if sset == "st":
+        print("  per-op strategies (EE point):")
+        for op, strat in ee.per_op_strategy.items():
+            print(f"    {op:16s} {strat}")

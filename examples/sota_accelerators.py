@@ -1,0 +1,33 @@
+"""Reproduce paper Table II: rebalance TranCIM and TP-DCIM under their own
+area budgets on Bert-Large.
+
+    PYTHONPATH=src python examples/sota_accelerators.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import AcceleratorConfig, co_explore, evaluate_config
+from repro.core.ir import bert_large_workload
+from repro.core.macro import TPDCIM_MACRO, TRANCIM_MACRO
+from repro.core.template import accelerator_area_mm2
+
+wl = bert_large_workload()
+for name, macro, base_cfg in (
+    ("TranCIM", TRANCIM_MACRO, AcceleratorConfig(3, 1, 1, 64, 128)),
+    ("TP-DCIM", TPDCIM_MACRO, AcceleratorConfig(2, 4, 1, 16, 16)),
+):
+    budget = accelerator_area_mm2(base_cfg, macro)
+    base = evaluate_config(macro, base_cfg, wl)
+    print(f"\n=== {name} (area budget {budget:.2f} mm^2) ===")
+    print(f"  base {base_cfg.as_tuple()}: "
+          f"{base['tops_w']:.2f} TOPS/W, {base['gops']:.0f} GOPS")
+    for objective, label in (("ee", "EE."), ("th", "Th.")):
+        opt = co_explore(macro, wl, budget, objective=objective,
+                         method="exhaustive")
+        key = "tops_w" if objective == "ee" else "gops"
+        gain = opt.metrics[key] / base[key]
+        print(f"  {label:4s} {opt.config.as_tuple()}: "
+              f"{opt.metrics['tops_w']:.2f} TOPS/W, "
+              f"{opt.metrics['gops']:.0f} GOPS, "
+              f"{opt.metrics['area_mm2']:.2f} mm^2  (x{gain:.2f} on {key})")

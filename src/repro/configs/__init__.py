@@ -1,0 +1,4 @@
+"""Per-architecture configs (``--arch <id>``).  See base.py for the registry."""
+from repro.configs.base import ARCH_IDS, SHAPES, ArchConfig, ShapeSpec, all_archs, get_arch
+
+__all__ = ["ARCH_IDS", "SHAPES", "ArchConfig", "ShapeSpec", "all_archs", "get_arch"]

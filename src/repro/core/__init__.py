@@ -1,0 +1,57 @@
+"""CIM-Tuner core: hardware-mapping co-exploration for SRAM-CIM accelerators.
+
+Public API:
+    MacroSpec / MACRO_LIBRARY       -- matrix abstraction of CIM macros
+    AcceleratorConfig               -- generalized accelerator template point
+    MatmulOp / Workload             -- operator IR (+ size-aware merging)
+    Strategy / ALL_STRATEGIES       -- two-level mapping strategy space
+    matmul_cost / workload_cost     -- closed-form vectorized cost model
+    compile_schedule / compile_trace / replay_trace -- instruction flows
+    simulate_schedule               -- cycle simulator
+    co_explore / evaluate_config    -- the co-exploration tool
+    distributed_co_explore          -- multi-pod DSE (shard_map)
+"""
+from repro.core.calibration import DEFAULT_TECH, TechConstants
+from repro.core.compiler import (
+    compile_schedule,
+    compile_trace,
+    replay_trace,
+    schedule_totals,
+    strategy_feasible,
+)
+from repro.core.cost_model import (
+    CostBreakdown,
+    matmul_cost,
+    strategy_table,
+    workload_cost,
+    workload_metrics,
+)
+from repro.core.distributed import DistributedResult, distributed_co_explore
+from repro.core.explorer import (ExploreResult, co_explore,
+                                 co_explore_macros, evaluate_config,
+                                 pareto_explore)
+from repro.core.ir import MatmulOp, Workload, bert_large_workload
+from repro.core.macro import MACRO_LIBRARY, MacroSpec, get_macro
+from repro.core.pruning import DesignSpace, prune_space
+from repro.core.annealing import SASettings, exhaustive_search, simulated_annealing
+from repro.core.simulator import analytic_latency_bounds, simulate_schedule
+from repro.core.strategies import ALL_STRATEGIES, SPATIAL_ONLY, Strategy
+from repro.core.template import AcceleratorConfig, accelerator_area_mm2
+
+__all__ = [
+    "DEFAULT_TECH", "TechConstants",
+    "MacroSpec", "MACRO_LIBRARY", "get_macro",
+    "AcceleratorConfig", "accelerator_area_mm2",
+    "MatmulOp", "Workload", "bert_large_workload",
+    "Strategy", "ALL_STRATEGIES", "SPATIAL_ONLY",
+    "CostBreakdown", "matmul_cost", "strategy_table", "workload_cost",
+    "workload_metrics",
+    "compile_schedule", "compile_trace", "replay_trace", "schedule_totals",
+    "strategy_feasible",
+    "simulate_schedule", "analytic_latency_bounds",
+    "DesignSpace", "prune_space",
+    "SASettings", "simulated_annealing", "exhaustive_search",
+    "co_explore", "co_explore_macros", "pareto_explore",
+    "evaluate_config", "ExploreResult",
+    "distributed_co_explore", "DistributedResult",
+]

@@ -1,0 +1,145 @@
+"""Simulated-annealing engine for the hardware-mapping co-exploration
+(paper Sec. III-D / IV-A: "hardware configurations are iteratively adjusted
+... through the simulated annealing algorithm").
+
+Fully jittable: chains are ``vmap``-ed, steps run under ``lax.scan``, so the
+same function drops into ``shard_map`` for the multi-pod distributed DSE
+(``core/distributed.py``).
+
+The walk moves through index space of the (power-of-two constrained) axis
+value lists; the area budget enters as a smooth penalty inside the objective
+(``cost_model.make_objective_fn``) so chains can skirt the boundary.
+Acceptance uses relative deltas (exp(-(new-old)/old / T)) to stay scale-free
+across objectives (energy pJ vs latency cycles differ by ~6 orders).
+"""
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pruning import DesignSpace
+
+
+class SAResult(typing.NamedTuple):
+    best_cfg: jax.Array        # [6] (mr, mc, scr, is_kb, os_kb, bw)
+    best_value: jax.Array      # scalar
+    best_per_chain: jax.Array  # [chains]
+    trace_best: jax.Array      # [steps] population-best value per step
+
+
+@dataclasses.dataclass(frozen=True)
+class SASettings:
+    n_chains: int = 64
+    n_steps: int = 400
+    t0: float = 0.3
+    alpha: float = 0.985
+    jump_prob: float = 0.15   # occasional uniform redraw of one axis
+    seed: int = 0
+
+
+def _axes_matrix(space: DesignSpace) -> tuple[np.ndarray, np.ndarray]:
+    """Pad per-axis value lists into a [5, Lmax] matrix + length vector."""
+    axes = space.axes()
+    lmax = max(len(a) for a in axes)
+    mat = np.zeros((5, lmax), dtype=np.float64)
+    lens = np.zeros(5, dtype=np.int32)
+    for i, vals in enumerate(axes):
+        mat[i, : len(vals)] = vals
+        mat[i, len(vals):] = vals[-1]
+        lens[i] = len(vals)
+    return mat, lens
+
+
+def simulated_annealing(
+    objective_fn,              # cfg_row[6] -> scalar (lower is better)
+    space: DesignSpace,
+    bw: int,
+    settings: SASettings = SASettings(),
+    key: jax.Array | None = None,
+) -> SAResult:
+    mat, lens = _axes_matrix(space)
+    mat_j = jnp.asarray(mat)
+    lens_j = jnp.asarray(lens)
+    bw_f = jnp.asarray(float(bw))
+
+    def cfg_of(idx):
+        vals = mat_j[jnp.arange(5), idx]
+        return jnp.concatenate([vals, bw_f[None]])
+
+    def chain_init(k):
+        idx = jax.random.randint(k, (5,), 0, lens_j)
+        val = objective_fn(cfg_of(idx))
+        return idx, val
+
+    def chain_step(state, xs):
+        idx, val, best_idx, best_val = state
+        k, temp = xs
+        k1, k2, k3, k4 = jax.random.split(k, 4)
+        axis = jax.random.randint(k1, (), 0, 5)
+        lo, hi = 0, lens_j[axis]
+        jump = jax.random.uniform(k2) < settings.jump_prob
+        delta = jnp.where(jax.random.uniform(k3) < 0.5, -1, 1)
+        new_pos = jnp.where(
+            jump,
+            jax.random.randint(k2, (), 0, 1_000_000) % hi,
+            jnp.clip(idx[axis] + delta, lo, hi - 1),
+        )
+        new_idx = idx.at[axis].set(new_pos)
+        new_val = objective_fn(cfg_of(new_idx))
+        rel = (new_val - val) / jnp.maximum(val, 1e-30)
+        accept = (new_val < val) | (
+            jax.random.uniform(k4) < jnp.exp(-rel / jnp.maximum(temp, 1e-9))
+        )
+        idx = jnp.where(accept, new_idx, idx)
+        val = jnp.where(accept, new_val, val)
+        better = val < best_val
+        best_idx = jnp.where(better, idx, best_idx)
+        best_val = jnp.where(better, val, best_val)
+        return (idx, val, best_idx, best_val), best_val
+
+    def run_chain(k):
+        k0, ks = k[0], k[1]
+        idx, val = chain_init(k0)
+        temps = settings.t0 * settings.alpha ** jnp.arange(settings.n_steps)
+        keys = jax.random.split(ks, settings.n_steps)
+        (_, _, best_idx, best_val), best_hist = jax.lax.scan(
+            chain_step, (idx, val, idx, val), (keys, temps)
+        )
+        return best_idx, best_val, best_hist
+
+    if key is None:
+        key = jax.random.PRNGKey(settings.seed)
+    chain_keys = jax.random.split(key, settings.n_chains * 2).reshape(
+        settings.n_chains, 2, -1
+    )
+    best_idx, best_val, hists = jax.vmap(run_chain)(chain_keys)
+    winner = jnp.argmin(best_val)
+    return SAResult(
+        best_cfg=cfg_of(best_idx[winner]),
+        best_value=best_val[winner],
+        best_per_chain=best_val,
+        trace_best=jnp.min(hists, axis=0),
+    )
+
+
+def exhaustive_search(
+    objective_fn,
+    candidates: np.ndarray,    # [C, 6] cfg rows (pruned space + bw column)
+    batch: int = 4096,
+) -> tuple[np.ndarray, float]:
+    """Ground-truth optimum over an (already pruned) candidate list."""
+    eval_batch = jax.jit(jax.vmap(objective_fn))
+    best_val = np.inf
+    best_cfg = None
+    for i in range(0, len(candidates), batch):
+        chunk = jnp.asarray(candidates[i: i + batch])
+        vals = np.asarray(eval_batch(chunk))
+        j = int(np.argmin(vals))
+        if vals[j] < best_val:
+            best_val = float(vals[j])
+            best_cfg = np.asarray(candidates[i + j])
+    return best_cfg, best_val

@@ -1,0 +1,418 @@
+"""Closed-form latency/energy cost model for the generalized accelerator
+template, covering all 8 mapping strategies (paper Sec. III-B/III-C).
+
+The model is written as pure ``jnp`` arithmetic over scalars so that a single
+``vmap`` stack evaluates *candidates x operators x strategies* in one shot --
+this is what lets the hardware-mapping co-exploration be jitted, vmapped over
+SA chains and sharded over a pod (``core/distributed.py``).
+
+Loop-nest semantics (NR orientation; R swaps M<->N and streamed/stationary
+data widths).  ``V`` = streamed matrix (M x K, via Input SRAM), ``S`` =
+stationary matrix (K x N, resident in CIM planes), output M x N via Output
+SRAM.  The macro grid covers a physical tile of ``Kp x Np`` per plane
+(Kp = MR*AL, Np = MC*PC); S is tiled into tK x tN planes; SCR planes are
+co-resident.
+
+    IP-AF:  for n_tile(tN): for k_group(G=ceil(tK/SCR)): for m: for plane
+    IP-PF:  for n_group(H=ceil(tN/SCR)): for k_tile(tK): for m: for plane
+    WP-AF:  for m_batch(B): for n_tile: for k_group: for m: for plane
+    WP-PF:  for m_batch(B): for n_group: for k_tile: for m: for plane
+
+Traffic/latency identities implemented below are matched *exactly* (integer
+for integer) by the instruction-flow compiler's schedule sums
+(``core/compiler.py``) -- property-tested in tests/test_cost_vs_compiler.py.
+Latency uses a global three-stage-pipeline overlap bound; the cycle-accurate
+simulator's per-set latency is sandwiched between the model's overlapped and
+non-overlapped bounds (tests/test_simulator.py).
+
+All arithmetic is float; run under ``jax.experimental.enable_x64`` for exact
+integer semantics (counts < 2^53), float32 otherwise (plenty for SA ordering).
+"""
+from __future__ import annotations
+
+import typing
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.calibration import DEFAULT_TECH, TechConstants
+from repro.core.macro import MacroSpec
+from repro.core.strategies import ALL_STRATEGIES, STRATEGY_SETS
+
+INFEASIBLE = 1e30
+
+
+class CostBreakdown(typing.NamedTuple):
+    """Per-operator-call cost terms (cycles, bits, pJ)."""
+
+    latency_cycles: jax.Array
+    compute_cycles: jax.Array
+    update_cycles: jax.Array
+    ema_cycles: jax.Array
+    ema_bits: jax.Array          # total external traffic
+    v_ema_bits: jax.Array        # streamed-matrix fetch
+    s_ema_bits: jax.Array        # stationary-matrix (CIM update) fetch
+    spill_ema_bits: jax.Array    # psum spills
+    y_ema_bits: jax.Array        # output writeback
+    is_rd_bits: jax.Array
+    is_wr_bits: jax.Array
+    os_rd_bits: jax.Array
+    os_wr_bits: jax.Array
+    update_bits: jax.Array       # CIM write traffic (== s_ema_bits)
+    macs: jax.Array              # padded MACs actually executed
+    energy_pj: jax.Array
+    feasible: jax.Array
+
+
+def _ceil(a, b):
+    return jnp.ceil(a / b)
+
+
+def _fdiv(a, b):
+    return jnp.floor(a / b)
+
+
+def matmul_cost(
+    # operator (already oriented? no -- raw op dims)
+    m, k, n,
+    # strategy bits (0/1 floats): reversed, weight_priority, parallel_first
+    rev, wp, pf,
+    # accelerator config
+    mr, mc, scr, is_kb, os_kb, bw, area_mm2,
+    # macro
+    macro: MacroSpec,
+    tech: TechConstants = DEFAULT_TECH,
+) -> CostBreakdown:
+    """Cost of one (m x k) @ (k x n) call under one strategy on one config.
+
+    ``macro``/``tech`` are static (python) -- the paper fixes the macro during
+    accelerator exploration; everything else may be traced/vmapped.
+    """
+    one = jnp.float32(1.0).astype(jnp.result_type(float))
+    m, k, n = (jnp.asarray(x) * one for x in (m, k, n))
+    rev, wp, pf = (jnp.asarray(x) * one for x in (rev, wp, pf))
+    mr, mc, scr = (jnp.asarray(x) * one for x in (mr, mc, scr))
+    is_bits = jnp.asarray(is_kb) * one * 1024.0 * 8.0
+    os_bits = jnp.asarray(os_kb) * one * 1024.0 * 8.0
+    bw = jnp.asarray(bw) * one
+
+    # ---- spatial scheduling: orientation + data widths -------------------
+    M = jnp.where(rev > 0, n, m)
+    N = jnp.where(rev > 0, m, n)
+    K = k
+    dws = jnp.where(rev > 0, float(macro.dw_w), float(macro.dw_in))   # streamed
+    dwt = jnp.where(rev > 0, float(macro.dw_in), float(macro.dw_w))   # stationary
+    dw_psum = float(macro.dw_psum)
+    dw_out = float(macro.dw_out)
+
+    # per-plane-op / per-plane-update cycles (eqns 3-5); depend on which
+    # operand streams through the input drivers
+    cyc_c = jnp.maximum(1.0, _ceil(dws * macro.al, float(macro.icw)))
+    cyc_u = jnp.maximum(1.0, _ceil(macro.al * dwt, float(macro.wuw)))
+
+    # ---- geometry ---------------------------------------------------------
+    Kp = mr * float(macro.al)
+    Np = mc * float(macro.pc)
+    tK = _ceil(K, Kp)
+    tN = _ceil(N, Np)
+    Kpad = tK * Kp
+    Npad = tN * Np
+    planes = tK * tN
+
+    G = _ceil(tK, scr)                      # AF groups per output column
+    remK = tK - (G - 1.0) * scr             # planes in last AF group
+    H = _ceil(tN, scr)                      # PF groups per K tile
+    remN = tN - (H - 1.0) * scr             # planes in last PF group
+    scr_n = jnp.minimum(scr, tN)
+
+    # ---- Input SRAM residency --------------------------------------------
+    # WP keeps full rows (width Kpad) resident across the whole weight sweep.
+    rows_res_raw = _fdiv(is_bits, Kpad * dws)
+    wp_feasible = rows_res_raw >= 1.0
+    rows_res = jnp.clip(rows_res_raw, 1.0, M)
+    B = _ceil(M, rows_res)                  # WP input batches
+    remB = M - (B - 1.0) * rows_res         # rows in last batch
+    # minimal functional IS requirement: one plane-chunk of the streamed row
+    is_feasible = is_bits >= Kp * dws
+    fits_all_v = M * Kpad * dws <= is_bits  # whole streamed matrix cached
+
+    # ---- streamed-matrix (V) external traffic ----------------------------
+    v_refetch_ip = jnp.where(fits_all_v, 1.0, jnp.where(pf > 0, H, tN))
+    v_bits = M * Kpad * dws * jnp.where(wp > 0, 1.0, v_refetch_ip)
+
+    # ---- stationary-matrix (S) external traffic + CIM updates ------------
+    fits_all_s = planes <= scr
+    s_loads = planes * jnp.where(
+        (wp > 0) & ~fits_all_s, B, 1.0
+    )                                        # plane loads from DRAM
+    s_bits = s_loads * Kp * Np * dwt
+    update_cycles = s_loads * cyc_u
+
+    # ---- compute ----------------------------------------------------------
+    compute_cycles = M * planes * cyc_c      # strategy-invariant
+    macs = M * Kpad * Npad                   # padded MACs executed
+
+    # ---- Input SRAM access ------------------------------------------------
+    is_wr = v_bits                            # every fetched bit lands in IS
+    # reads are compute-driven; PF reuses the row chunk across the group
+    is_rd = M * Kpad * dws * jnp.where(pf > 0, H, tN)
+
+    # ---- Output SRAM access + psum spills --------------------------------
+    # AF: psum row width Np, accumulation transitions (G-1) per output column
+    os_rows_af = _fdiv(os_bits, Np * dw_psum)
+    # PF: psum working-set width q*Np for a group of q planes
+    def _os_rows_pf(q):
+        return _fdiv(os_bits, q * Np * dw_psum)
+
+    def _spill(workrows, osrows):
+        return jnp.maximum(0.0, workrows - osrows)
+
+    # --- AF spills ---
+    spill_af_ip = 2.0 * (G - 1.0) * _spill(M, os_rows_af) * Np * dw_psum * tN
+    spill_af_wp = (
+        2.0 * (G - 1.0) * Np * dw_psum * tN
+        * ((B - 1.0) * _spill(rows_res, os_rows_af) + _spill(remB, os_rows_af))
+    )
+    spill_af = jnp.where(wp > 0, spill_af_wp, spill_af_ip)
+
+    # --- PF spills (full groups of width scr_n, remainder group remN) ---
+    nfull = H - 1.0
+    def _pf_spill_rows(workrows):
+        return (
+            nfull * _spill(workrows, _os_rows_pf(scr_n)) * scr_n
+            + _spill(workrows, _os_rows_pf(remN)) * remN
+        )
+    spill_pf_ip = 2.0 * (tK - 1.0) * Np * dw_psum * _pf_spill_rows(M)
+    spill_pf_wp = 2.0 * (tK - 1.0) * Np * dw_psum * (
+        (B - 1.0) * _pf_spill_rows(rows_res) + _pf_spill_rows(remB)
+    )
+    spill_pf = jnp.where(wp > 0, spill_pf_wp, spill_pf_ip)
+    spill_bits = jnp.where(pf > 0, spill_pf, spill_af)
+
+    # --- OS read/write (every psum passes through OS) ---
+    groups_per_col = jnp.where(pf > 0, tK, G)   # psum writes per (row, col)
+    os_wr = M * tN * groups_per_col * Np * dw_psum
+    os_rd = M * tN * (groups_per_col - 1.0) * Np * dw_psum + M * Npad * dw_psum
+    os_feasible = os_bits >= jnp.where(pf > 0, 1.0, 1.0) * Np * dw_psum
+
+    # ---- output writeback --------------------------------------------------
+    y_bits = M * Npad * dw_out
+
+    # ---- totals ------------------------------------------------------------
+    ema_bits = v_bits + s_bits + spill_bits + y_bits
+    ema_cycles = _ceil(ema_bits, bw)
+
+    overlap = float(macro.update_during_compute) * (scr >= 2.0)
+    busy = jnp.maximum(compute_cycles, ema_cycles)
+    latency = jnp.where(
+        overlap,
+        jnp.maximum(busy, update_cycles),
+        busy + update_cycles,
+    )
+
+    feasible = is_feasible & os_feasible & ((wp == 0) | wp_feasible)
+
+    # ---- energy ------------------------------------------------------------
+    e_dyn = (
+        macs * macro.mac_energy_pj(tech)
+        + s_bits * tech.e_cim_update_pj_bit
+        + (is_rd + os_rd) * tech.e_sram_rd_pj_bit
+        + (is_wr + os_wr) * tech.e_sram_wr_pj_bit
+        + ema_bits * tech.e_ema_pj_bit
+    ) * tech.sys_energy_overhead
+    lat_s = latency / (macro.freq_mhz * 1e6)
+    e_leak = tech.p_leak_mw_mm2 * area_mm2 * lat_s * 1e9  # mW*s -> pJ
+    energy = e_dyn + e_leak
+
+    latency = jnp.where(feasible, latency, INFEASIBLE)
+    energy = jnp.where(feasible, energy, INFEASIBLE)
+
+    return CostBreakdown(
+        latency_cycles=latency,
+        compute_cycles=compute_cycles,
+        update_cycles=update_cycles,
+        ema_cycles=ema_cycles,
+        ema_bits=ema_bits,
+        v_ema_bits=v_bits,
+        s_ema_bits=s_bits,
+        spill_ema_bits=spill_bits,
+        y_ema_bits=y_bits,
+        is_rd_bits=is_rd,
+        is_wr_bits=is_wr,
+        os_rd_bits=os_rd,
+        os_wr_bits=os_wr,
+        update_bits=s_bits,
+        macs=macs,
+        energy_pj=energy,
+        feasible=feasible,
+    )
+
+
+# ---------------------------------------------------------------------- #
+# vectorized stacks
+# ---------------------------------------------------------------------- #
+_STRAT_BITS = jnp.array(
+    [[float(s.spatial == "R"), float(s.temporal == "WP"),
+      float(s.tiling == "PF")] for s in ALL_STRATEGIES]
+)  # [8, 3]
+
+
+def strategy_table(op_row, cfg_row, area_mm2, macro, tech=DEFAULT_TECH):
+    """Costs of one op under all 8 strategies.  op_row = (m,k,n,count,static),
+    cfg_row = (mr,mc,scr,is_kb,os_kb,bw)."""
+    def _one(bits):
+        return matmul_cost(
+            op_row[0], op_row[1], op_row[2],
+            bits[0], bits[1], bits[2],
+            cfg_row[0], cfg_row[1], cfg_row[2], cfg_row[3], cfg_row[4],
+            cfg_row[5], area_mm2, macro, tech,
+        )
+    return jax.vmap(_one)(_STRAT_BITS)
+
+
+def area_mm2_jnp(cfg_row, macro: MacroSpec, tech: TechConstants = DEFAULT_TECH):
+    """jnp version of template.accelerator_area_mm2 (traced cfg)."""
+    mr, mc, scr, is_kb, os_kb = (cfg_row[i] for i in range(5))
+    cells = macro.al * macro.pc * scr * macro.dw_w * tech.a_cell_um2_bit
+    cus = macro.al * macro.pc * tech.a_cu_um2
+    macro_area = (cells + cus) * 1e-6 + tech.a_macro_fixed_mm2
+    sram = lambda kb: kb * 8.0 / 1024.0 * tech.a_sram_mm2_per_mb + tech.a_sram_fixed_mm2
+    return mr * mc * macro_area + sram(is_kb) + sram(os_kb) + tech.a_fixed_mm2
+
+
+def bandwidth_ok_jnp(cfg_row, macro: MacroSpec):
+    bw = cfg_row[5]
+    return (macro.icw * cfg_row[0] >= bw) & (
+        macro.wuw * cfg_row[0] * cfg_row[1] >= bw
+    )
+
+
+def workload_cost_core(
+    ops_arr, cfg_row, strat_bits, allowed, macro: MacroSpec,
+    tech: TechConstants = DEFAULT_TECH, objective: str = "ee",
+):
+    """workload_cost with the strategy tables passed in explicitly (lets the
+    Pallas strategy_eval kernel feed them through refs instead of capturing
+    module-level constants)."""
+    area = area_mm2_jnp(cfg_row, macro, tech)
+
+    def per_op(op_row):
+        def _one(bits):
+            return matmul_cost(
+                op_row[0], op_row[1], op_row[2],
+                bits[0], bits[1], bits[2],
+                cfg_row[0], cfg_row[1], cfg_row[2], cfg_row[3], cfg_row[4],
+                cfg_row[5], area, macro, tech,
+            )
+        tbl = jax.vmap(_one)(strat_bits)
+        lat = jnp.where(allowed > 0, tbl.latency_cycles, INFEASIBLE)
+        en = jnp.where(allowed > 0, tbl.energy_pj, INFEASIBLE)
+        if objective == "th":
+            score = lat
+        elif objective == "edp":
+            score = lat * en
+        else:
+            score = en
+        idx = jnp.argmin(score)
+        return lat[idx], en[idx], idx
+
+    lat, en, idx = jax.vmap(per_op)(ops_arr)
+    counts = ops_arr[:, 3]
+    total_lat = jnp.sum(lat * counts)
+    total_en = jnp.sum(en * counts)
+    return total_lat, total_en, idx
+
+
+def strategy_mask(strategy_set: str):
+    return jnp.array(
+        [1.0 if s in STRATEGY_SETS[strategy_set] else 0.0
+         for s in ALL_STRATEGIES]
+    )
+
+
+def workload_cost(
+    ops_arr,                # [P, 5] (m, k, n, count, static); count==0 -> pad
+    cfg_row,                # [6]
+    macro: MacroSpec,
+    tech: TechConstants = DEFAULT_TECH,
+    objective: str = "ee",  # "ee" (energy) | "th" (latency) | "edp"
+    strategy_set: str = "st",
+):
+    """Best-strategy-per-operator workload cost on one accelerator config.
+
+    Returns (total_latency_cycles, total_energy_pj, per_op_strategy_idx).
+    The per-op argmin implements the fine-grained mapping exploration; the
+    restriction mask reproduces the spatial-only baseline of [19].
+    """
+    return workload_cost_core(
+        ops_arr, cfg_row, _STRAT_BITS, strategy_mask(strategy_set),
+        macro, tech, objective)
+
+
+def objective_value(total_lat, total_en, objective: str):
+    if objective == "th":
+        return total_lat
+    if objective == "edp":
+        return total_lat * total_en
+    return total_en
+
+
+def make_objective_fn(
+    ops_arr,
+    macro: MacroSpec,
+    tech: TechConstants = DEFAULT_TECH,
+    objective: str = "ee",
+    strategy_set: str = "st",
+    area_budget_mm2: float | None = None,
+    penalty_scale: float = 1e3,
+):
+    """Scalar objective(cfg_row) for the SA / exhaustive explorers.
+
+    Area-budget violation enters as a smooth multiplicative penalty so SA can
+    walk the boundary; bandwidth-infeasible configs get the hard INFEASIBLE.
+    """
+    ops_arr = jnp.asarray(ops_arr)
+
+    def fn(cfg_row):
+        lat, en, _ = workload_cost(
+            ops_arr, cfg_row, macro, tech, objective, strategy_set
+        )
+        val = objective_value(lat, en, objective)
+        if area_budget_mm2 is not None:
+            area = area_mm2_jnp(cfg_row, macro, tech)
+            excess = jnp.maximum(0.0, area - area_budget_mm2) / area_budget_mm2
+            val = val * (1.0 + penalty_scale * excess)
+        val = jnp.where(bandwidth_ok_jnp(cfg_row, macro), val, INFEASIBLE)
+        return val
+
+    return fn
+
+
+def workload_metrics(
+    workload_ops_arr,
+    cfg_row,
+    macro: MacroSpec,
+    tech: TechConstants = DEFAULT_TECH,
+    objective: str = "ee",
+    strategy_set: str = "st",
+) -> dict:
+    """Human-facing PPA metrics for a config (TOPS/W, GOPS, mm^2, ...)."""
+    lat, en, idx = workload_cost(
+        workload_ops_arr, cfg_row, macro, tech, objective, strategy_set
+    )
+    ops_arr = jnp.asarray(workload_ops_arr)
+    true_ops = 2.0 * jnp.sum(
+        ops_arr[:, 0] * ops_arr[:, 1] * ops_arr[:, 2] * ops_arr[:, 3]
+    )
+    lat_s = lat / (macro.freq_mhz * 1e6)
+    energy_j = en * 1e-12
+    return {
+        "latency_cycles": float(lat),
+        "latency_s": float(lat_s),
+        "energy_pj": float(en),
+        "tops_w": float(true_ops / energy_j / 1e12),
+        "gops": float(true_ops / lat_s / 1e9),
+        "area_mm2": float(area_mm2_jnp(jnp.asarray(cfg_row), macro, tech)),
+        "strategy_idx": [int(i) for i in idx],
+    }

@@ -1,0 +1,227 @@
+"""Multi-pod distributed hardware-mapping co-exploration.
+
+The paper runs its simulated annealing on a single host.  Because our whole
+evaluation pipeline (cost model x operators x strategies) is pure ``jnp``,
+the chain population can be sharded across an entire TPU pod (or two) with
+``shard_map``: every device anneals its local chains, and every
+``sync_every`` steps the incumbent best (value + config) is exchanged with
+``lax.pmin``/``psum`` collectives; each device then re-seeds its worst chain
+with the global best (exploit) while the rest keep exploring.
+
+Production concerns handled here:
+  * fault tolerance -- search state (chain indices, values, RNG key, round)
+    checkpoints to an .npz after every round; ``resume_round`` restarts from
+    the latest checkpoint after a failure;
+  * elasticity -- on resume the population is re-padded to whatever device
+    count the new mesh has (chains are embarrassingly parallel);
+  * stragglers -- rounds are fixed-work (``sync_every`` steps), so a slow
+    host delays at most one collective; there is no long-tail barrier.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import cost_model
+from repro.core.annealing import SASettings, _axes_matrix
+from repro.core.calibration import DEFAULT_TECH, TechConstants
+from repro.core.ir import Workload
+from repro.core.macro import MacroSpec
+from repro.core.pruning import DesignSpace
+from repro.core.template import AcceleratorConfig
+
+
+@dataclasses.dataclass
+class DistributedResult:
+    config: AcceleratorConfig
+    best_value: float
+    rounds: int
+    n_chains: int
+    trace: list[float]
+
+
+def _round_body(
+    objective_fn, mat_j, lens_j, bw_f, settings: SASettings, steps: int,
+    axis_names: tuple[str, ...],
+):
+    """Builds the shard_map body: anneal local chains `steps` steps, then
+    exchange the global best and re-seed each device's worst chain."""
+
+    def cfg_of(idx):
+        vals = mat_j[jnp.arange(5), idx]
+        return jnp.concatenate([vals, bw_f[None]])
+
+    def chain_step(state, xs):
+        idx, val, best_idx, best_val = state
+        k, temp = xs
+        k1, k2, k3, k4 = jax.random.split(k, 4)
+        axis = jax.random.randint(k1, (), 0, 5)
+        hi = lens_j[axis]
+        jump = jax.random.uniform(k2) < settings.jump_prob
+        delta = jnp.where(jax.random.uniform(k3) < 0.5, -1, 1)
+        new_pos = jnp.where(
+            jump,
+            jax.random.randint(k2, (), 0, 1_000_000) % hi,
+            jnp.clip(idx[axis] + delta, 0, hi - 1),
+        )
+        new_idx = idx.at[axis].set(new_pos)
+        new_val = objective_fn(cfg_of(new_idx))
+        rel = (new_val - val) / jnp.maximum(val, 1e-30)
+        accept = (new_val < val) | (
+            jax.random.uniform(k4) < jnp.exp(-rel / jnp.maximum(temp, 1e-9))
+        )
+        idx = jnp.where(accept, new_idx, idx)
+        val = jnp.where(accept, new_val, val)
+        better = val < best_val
+        return (
+            idx, val,
+            jnp.where(better, idx, best_idx),
+            jnp.where(better, val, best_val),
+        ), None
+
+    def run_chain(idx, val, best_idx, best_val, key, t_round):
+        temps = t_round * settings.alpha ** jnp.arange(steps)
+        keys = jax.random.split(key, steps)
+        (idx, val, best_idx, best_val), _ = jax.lax.scan(
+            chain_step, (idx, val, best_idx, best_val), (keys, temps)
+        )
+        return idx, val, best_idx, best_val
+
+    def body(idx, val, best_idx, best_val, keys, t_round):
+        # local per-chain annealing ([local_chains, ...] block)
+        step_keys = jax.vmap(lambda k: jax.random.fold_in(k, 1))(keys)
+        idx, val, best_idx, best_val = jax.vmap(
+            run_chain, in_axes=(0, 0, 0, 0, 0, None)
+        )(idx, val, best_idx, best_val, step_keys, t_round[0])
+
+        # ---- global best exchange ----
+        local_best = jnp.min(best_val)
+        local_arg = jnp.argmin(best_val)
+        g_best = jax.lax.pmin(local_best, axis_names)
+        winner = (local_best <= g_best).astype(best_idx.dtype)
+        contrib = best_idx[local_arg] * winner
+        n_win = jax.lax.psum(winner, axis_names)
+        g_idx = (
+            jax.lax.psum(contrib, axis_names) // jnp.maximum(n_win, 1)
+        )
+        # re-seed the locally-worst chain with the global best config
+        worst = jnp.argmax(val)
+        idx = idx.at[worst].set(g_idx)
+        val = val.at[worst].set(g_best)
+        new_keys = jax.vmap(lambda k: jax.random.fold_in(k, 2))(keys)
+        return idx, val, best_idx, best_val, new_keys, g_best[None]
+
+    return body
+
+
+def distributed_co_explore(
+    mesh: Mesh,
+    macro: MacroSpec,
+    workload: Workload,
+    area_budget_mm2: float,
+    objective: str = "ee",
+    strategy_set: str = "st",
+    space: DesignSpace | None = None,
+    bw: int = 256,
+    tech: TechConstants = DEFAULT_TECH,
+    settings: SASettings = SASettings(),
+    chains_per_device: int = 4,
+    rounds: int = 8,
+    sync_every: int = 50,
+    checkpoint_dir: str | None = None,
+    resume: bool = False,
+) -> DistributedResult:
+    space = space or DesignSpace()
+    wl = workload.merged()
+    objective_fn = cost_model.make_objective_fn(
+        wl.as_arrays(), macro, tech, objective, strategy_set,
+        area_budget_mm2=area_budget_mm2,
+    )
+    mat, lens = _axes_matrix(space)
+    mat_j, lens_j = jnp.asarray(mat), jnp.asarray(lens)
+    bw_f = jnp.asarray(float(bw))
+    axis_names = tuple(mesh.axis_names)
+    n_dev = int(np.prod(mesh.devices.shape))
+    n_chains = n_dev * chains_per_device
+
+    # ---- init population (possibly from a checkpoint; re-pad if the mesh
+    # size changed = elastic resume) ----
+    start_round = 0
+    rng = np.random.default_rng(settings.seed)
+    idx0 = rng.integers(0, lens[None, :], size=(n_chains, 5)).astype(np.int32)
+    key0 = np.asarray(
+        jax.vmap(jax.random.PRNGKey)(np.arange(settings.seed, settings.seed + n_chains))
+    )
+    trace: list[float] = []
+    ckpt_path = (
+        os.path.join(checkpoint_dir, "dse_state.npz") if checkpoint_dir else None
+    )
+    if resume and ckpt_path and os.path.exists(ckpt_path):
+        st = np.load(ckpt_path)
+        old = st["idx"]
+        reps = -(-n_chains // len(old))
+        idx0 = np.tile(old, (reps, 1))[:n_chains].astype(np.int32)
+        key0 = np.tile(st["keys"], (reps, 1))[:n_chains]
+        start_round = int(st["round"])
+        trace = [float(x) for x in st["trace"]]
+
+    spec = P(axis_names)
+    rspec = P()
+
+    def cfg_of_np(idx_row):
+        vals = mat[np.arange(5), idx_row]
+        return np.concatenate([vals, [float(bw)]])
+
+    eval_cfg = jax.jit(jax.vmap(lambda i: objective_fn(
+        jnp.concatenate([mat_j[jnp.arange(5), i], bw_f[None]])
+    )))
+    val0 = np.asarray(eval_cfg(jnp.asarray(idx0)))
+
+    body = _round_body(
+        objective_fn, mat_j, lens_j, bw_f, settings, sync_every, axis_names
+    )
+    smapped = jax.jit(
+        jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(spec, spec, spec, spec, spec, rspec),
+            out_specs=(spec, spec, spec, spec, spec, rspec),
+        )
+    )
+
+    idx = jnp.asarray(idx0)
+    val = jnp.asarray(val0)
+    best_idx, best_val = idx, val
+    keys = jnp.asarray(key0)
+    for r in range(start_round, rounds):
+        t_round = jnp.asarray([settings.t0 * (0.5 ** r)])
+        idx, val, best_idx, best_val, keys, g_best = smapped(
+            idx, val, best_idx, best_val, keys, t_round
+        )
+        trace.append(float(g_best[0]))
+        if ckpt_path:
+            os.makedirs(checkpoint_dir, exist_ok=True)
+            tmp = ckpt_path + ".tmp.npz"
+            np.savez(
+                tmp, idx=np.asarray(idx), keys=np.asarray(keys),
+                round=r + 1, trace=np.asarray(trace),
+            )
+            os.replace(tmp, ckpt_path)
+
+    bv = np.asarray(best_val)
+    bi = np.asarray(best_idx)
+    w = int(np.argmin(bv))
+    cfg_vals = cfg_of_np(bi[w])
+    cfg = AcceleratorConfig(*[int(round(v)) for v in cfg_vals[:5]], bw=bw)
+    return DistributedResult(
+        config=cfg,
+        best_value=float(bv[w]),
+        rounds=rounds,
+        n_chains=n_chains,
+        trace=trace,
+    )

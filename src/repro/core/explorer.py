@@ -1,0 +1,237 @@
+"""Top-level hardware-mapping co-exploration API (paper Fig. 3).
+
+``co_explore`` is the tool a designer calls: given a macro, a workload, an
+area budget and an optimization target, it returns the optimal accelerator
+sizing (MR, MC, SCR, IS_SIZE, OS_SIZE) together with the optimal per-operator
+mapping strategy and PPA metrics.  Mapping exploration (the per-operator
+8-strategy argmin) runs as a sub-process of hardware exploration, exactly as
+in the paper's workflow.
+
+Two search methods:
+  * ``sa``          -- the paper's simulated annealing (vectorized chains);
+  * ``exhaustive``  -- ground truth over the pruned space (feasible because
+    the whole evaluation is one vmapped jnp expression); used to validate SA
+    quality in tests and available to users for small spaces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model
+from repro.core.annealing import SAResult, SASettings, exhaustive_search, simulated_annealing
+from repro.core.calibration import DEFAULT_TECH, TechConstants
+from repro.core.ir import Workload
+from repro.core.macro import MacroSpec
+from repro.core.pruning import DesignSpace, candidates_with_bw, prune_space
+from repro.core.strategies import ALL_STRATEGIES, Strategy
+from repro.core.template import AcceleratorConfig, accelerator_area_mm2
+
+
+@dataclasses.dataclass
+class ExploreResult:
+    config: AcceleratorConfig
+    macro: MacroSpec
+    workload: str
+    objective: str
+    strategy_set: str
+    per_op_strategy: dict[str, str]
+    metrics: dict
+    search: dict                      # method, runtime, space stats
+    sa: SAResult | None = None
+
+    def summary(self) -> str:
+        c = self.config
+        return (
+            f"[{self.workload} | {self.macro.name} | {self.objective}/"
+            f"{self.strategy_set}] (MR,MC,SCR,IS,OS)="
+            f"({c.mr},{c.mc},{c.scr},{c.is_kb},{c.os_kb}) "
+            f"EE={self.metrics['tops_w']:.2f} TOPS/W "
+            f"Th={self.metrics['gops']:.1f} GOPS "
+            f"area={self.metrics['area_mm2']:.2f} mm^2"
+        )
+
+
+def co_explore(
+    macro: MacroSpec,
+    workload: Workload,
+    area_budget_mm2: float,
+    objective: str = "ee",
+    strategy_set: str = "st",
+    method: str = "sa",
+    space: DesignSpace | None = None,
+    fixed: dict | None = None,
+    bw: int = 256,
+    tech: TechConstants = DEFAULT_TECH,
+    sa_settings: SASettings = SASettings(),
+    merge_ops: bool = True,
+) -> ExploreResult:
+    t_start = time.perf_counter()
+    space = space or DesignSpace()
+    if fixed:
+        space = space.fix(**fixed)
+    wl = workload.merged() if merge_ops else workload
+    ops_arr = wl.as_arrays()
+
+    objective_fn = cost_model.make_objective_fn(
+        ops_arr, macro, tech, objective, strategy_set,
+        area_budget_mm2=area_budget_mm2,
+    )
+
+    sa_result = None
+    search_stats: dict = {"method": method, "merged_ops": len(wl.ops),
+                          "raw_ops": len(workload.ops)}
+    if method == "sa":
+        sa_result = simulated_annealing(objective_fn, space, bw, sa_settings)
+        best_cfg = np.asarray(sa_result.best_cfg)
+        # SA walks the raw grid with an area penalty; snap-verify feasibility
+        cfg = AcceleratorConfig(*[int(round(v)) for v in best_cfg[:5]], bw=bw)
+        if accelerator_area_mm2(cfg, macro, tech) > area_budget_mm2 * 1.001:
+            # fall back to best feasible neighbour via exhaustive over the
+            # pruned space (rare: penalty almost always keeps SA in budget)
+            cands, stats = prune_space(space, macro, area_budget_mm2, bw, tech)
+            search_stats.update(stats)
+            if len(cands) == 0:
+                raise ValueError("no feasible hardware point under budget")
+            best_row, _ = exhaustive_search(
+                objective_fn, candidates_with_bw(cands, bw)
+            )
+            cfg = AcceleratorConfig(*[int(v) for v in best_row[:5]], bw=bw)
+    elif method == "exhaustive":
+        cands, stats = prune_space(space, macro, area_budget_mm2, bw, tech)
+        search_stats.update(stats)
+        if len(cands) == 0:
+            raise ValueError("no feasible hardware point under budget")
+        best_row, _ = exhaustive_search(
+            objective_fn, candidates_with_bw(cands, bw)
+        )
+        cfg = AcceleratorConfig(*[int(v) for v in best_row[:5]], bw=bw)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+
+    cfg_row = jnp.asarray(
+        [cfg.mr, cfg.mc, cfg.scr, cfg.is_kb, cfg.os_kb, cfg.bw], dtype=float
+    )
+    metrics = cost_model.workload_metrics(
+        ops_arr, cfg_row, macro, tech, objective, strategy_set
+    )
+    per_op = {
+        op.name or f"op{i}": str(ALL_STRATEGIES[metrics["strategy_idx"][i]])
+        for i, op in enumerate(wl.ops)
+    }
+    search_stats["runtime_s"] = time.perf_counter() - t_start
+    return ExploreResult(
+        config=cfg,
+        macro=macro,
+        workload=workload.name,
+        objective=objective,
+        strategy_set=strategy_set,
+        per_op_strategy=per_op,
+        metrics={k: v for k, v in metrics.items() if k != "strategy_idx"},
+        search=search_stats,
+        sa=sa_result,
+    )
+
+
+def co_explore_macros(
+    macros: list[MacroSpec],
+    workload: Workload,
+    area_budget_mm2: float,
+    **kw,
+) -> tuple[ExploreResult, list[ExploreResult]]:
+    """Macro-library co-exploration: the paper fixes the macro during
+    accelerator exploration; this wrapper additionally selects the best
+    macro *family* from a library under the same budget/objective (the
+    AutoDCIM-style outer loop the paper cites as complementary).
+
+    Returns (best result, all per-macro results)."""
+    results = [co_explore(m, workload, area_budget_mm2, **kw)
+               for m in macros]
+    objective = kw.get("objective", "ee")
+    key = (lambda r: -r.metrics["tops_w"]) if objective == "ee" else \
+        (lambda r: -r.metrics["gops"]) if objective == "th" else \
+        (lambda r: r.metrics["latency_s"] * r.metrics["energy_pj"])
+    best = min(results, key=key)
+    return best, results
+
+
+def pareto_explore(
+    macro: MacroSpec,
+    workload: Workload,
+    area_budget_mm2: float,
+    strategy_set: str = "st",
+    space: DesignSpace | None = None,
+    bw: int = 256,
+    tech: TechConstants = DEFAULT_TECH,
+) -> list[dict]:
+    """Energy-efficiency vs throughput Pareto frontier over the pruned
+    hardware space (the EE./Th. columns of Table II are this frontier's two
+    endpoints).  Returns frontier points sorted by throughput, each with
+    config + metrics."""
+    import jax
+
+    space = space or DesignSpace()
+    wl = workload.merged()
+    ops_arr = jnp.asarray(wl.as_arrays())
+    cands, _ = prune_space(space, macro, area_budget_mm2, bw, tech)
+    if len(cands) == 0:
+        raise ValueError("no feasible hardware point under budget")
+    rows = jnp.asarray(candidates_with_bw(cands, bw))
+
+    def eval_one(cfg_row):
+        # each metric gets its own best mapping (the per-operator argmin is
+        # objective-dependent)
+        lat_th, _en1, _ = cost_model.workload_cost(
+            ops_arr, cfg_row, macro, tech, "th", strategy_set)
+        _lat2, en_ee, _ = cost_model.workload_cost(
+            ops_arr, cfg_row, macro, tech, "ee", strategy_set)
+        return lat_th, en_ee
+
+    lat, en = jax.jit(jax.vmap(eval_one))(rows)
+    lat, en = np.asarray(lat), np.asarray(en)
+    total_ops = float(wl.total_ops)
+    gops = total_ops / (lat / (macro.freq_mhz * 1e6)) / 1e9
+    tops_w = total_ops / (en * 1e-12) / 1e12
+
+    # Pareto: maximize both gops and tops_w
+    order = np.argsort(-gops)
+    frontier = []
+    best_ee = -np.inf
+    for i in order:
+        if tops_w[i] > best_ee:
+            best_ee = tops_w[i]
+            frontier.append({
+                "config": AcceleratorConfig(*[int(v) for v in cands[i]],
+                                            bw=bw),
+                "gops": float(gops[i]),
+                "tops_w": float(tops_w[i]),
+            })
+    return frontier
+
+
+def evaluate_config(
+    macro: MacroSpec,
+    cfg: AcceleratorConfig,
+    workload: Workload,
+    objective: str = "ee",
+    strategy_set: str = "st",
+    tech: TechConstants = DEFAULT_TECH,
+) -> dict:
+    """PPA of a *given* accelerator on a workload (used for the Table II
+    baselines and for Fig. 8's fixed-hardware breakdowns)."""
+    wl = workload.merged()
+    cfg_row = jnp.asarray(
+        [cfg.mr, cfg.mc, cfg.scr, cfg.is_kb, cfg.os_kb, cfg.bw], dtype=float
+    )
+    m = cost_model.workload_metrics(
+        wl.as_arrays(), cfg_row, macro, tech, objective, strategy_set
+    )
+    m["per_op_strategy"] = {
+        op.name or f"op{i}": str(ALL_STRATEGIES[m["strategy_idx"][i]])
+        for i, op in enumerate(wl.ops)
+    }
+    del m["strategy_idx"]
+    return m

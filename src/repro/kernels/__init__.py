@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+* ``cim_matmul``     -- the paper's AF/PF macro-tiling insight mapped onto
+  TPU loop order / BlockSpec residency (VMEM = IS/OS, SCR = co-resident
+  K-blocks).  See DESIGN.md Sec. 2.
+* ``strategy_eval``  -- the DSE hot loop (candidates x ops x 8 strategies)
+  as a VPU kernel.
+* ``flash_attention``-- streaming-softmax attention for the 32k-prefill
+  cells.
+* ``selective_scan`` -- fused Mamba-1 scan: hidden state resident in VMEM
+  across the sequence, coefficients computed in-kernel (the TPU answer to
+  the Perf-cell-B memory wall).
+
+Each kernel ships ``<name>.py`` (pl.pallas_call + BlockSpec), a jit'd
+wrapper in ``ops.py`` and a pure-jnp oracle in ``ref.py``; kernels are
+validated in interpret mode on CPU (the TPU custom-call path cannot compile
+on this host -- the dry-run lowers the jnp path instead).
+"""

@@ -1,0 +1,105 @@
+"""Flash attention (streaming softmax) Pallas kernel for the 32k-prefill
+cells: O(T * block) VMEM instead of the O(T^2) score matrix.
+
+Grid (batch*heads, q_blocks, kv_blocks); running max / denominator / f32
+accumulator live in VMEM scratch across the kv axis; causal masking prunes
+nothing structurally (blocks above the diagonal are masked, not skipped --
+skipping is a recorded perf lever for real TPU runs).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, bq: int, bk: int, n_kv: int,
+            kv_len: int):
+    kv_step = pl.program_id(2)
+
+    @pl.when(kv_step == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)               # [bq, d]
+    k = k_ref[0].astype(jnp.float32)               # [bk, d]
+    v = v_ref[0].astype(jnp.float32)
+    s = (q @ k.T) * scale                           # [bq, bk]
+
+    kpos = kv_step * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < kv_len                          # right-padded keys
+    if causal:
+        qi = pl.program_id(1)
+        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        mask = mask & (kpos <= qpos)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(kv_step == n_kv - 1)
+    def _emit():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, ...] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,             # [BH, T, d]
+    k: jax.Array,             # [BH, S, d]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, t, d = q.shape
+    s_len = k.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    pq, pk = (-t) % bq, (-s_len) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+    gq, gk_ = q.shape[1] // bq, k.shape[1] // bk
+
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, bq=bq, bk=bk,
+        n_kv=gk_, kv_len=s_len)
+    out = pl.pallas_call(
+        kern,
+        grid=(bh, gq, gk_),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            _vmem((bq,), jnp.float32),
+            _vmem((bq,), jnp.float32),
+            _vmem((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :t]
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

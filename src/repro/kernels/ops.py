@@ -1,0 +1,56 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on CPU hosts (the TPU custom-call path can't
+compile here); on a TPU runtime pass interpret=False (or set
+REPRO_PALLAS_COMPILE=1) for the real kernels.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cim_matmul as _cm
+from repro.kernels import flash_attention as _fa
+from repro.kernels import selective_scan as _ss
+from repro.kernels import strategy_eval as _se
+
+
+def _default_interpret() -> bool:
+    if os.environ.get("REPRO_PALLAS_COMPILE"):
+        return False
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("tiling", "bm", "bn", "bk", "interpret"))
+def cim_matmul(a, b, *, tiling="AF", bm=_cm.DEFAULT_BM, bn=_cm.DEFAULT_BN,
+               bk=_cm.DEFAULT_BK, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _cm.cim_matmul(a, b, tiling=tiling, bm=bm, bn=bn, bk=bk,
+                          interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal=True, bq=128, bk=128, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                               interpret=interpret)
+
+
+def strategy_eval(candidates, ops_arr, macro, *, objective="ee",
+                  interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    fn = partial(_se.strategy_eval, macro=macro, objective=objective,
+                 interpret=interpret)
+    return jax.jit(fn)(jnp.asarray(candidates, jnp.float32),
+                       jnp.asarray(ops_arr, jnp.float32))
+
+
+@partial(jax.jit, static_argnames=("ct", "ci", "interpret"))
+def selective_scan(xi, dt, bmat, cmat, a, h0, *, ct=_ss.DEFAULT_CT,
+                   ci=_ss.DEFAULT_CI, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ss.selective_scan(xi, dt, bmat, cmat, a, h0, ct=ct, ci=ci,
+                              interpret=interpret)

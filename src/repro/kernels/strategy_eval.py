@@ -1,0 +1,92 @@
+"""Batched CIM-Tuner cost-model evaluation as a Pallas VPU kernel.
+
+The DSE hot loop evaluates candidates x operators x 8 strategies of pure
+elementwise arithmetic -- bandwidth-light, VPU-bound.  This kernel tiles the
+candidate axis into VMEM blocks and reuses the *same* closed-form cost model
+(``core.cost_model.workload_cost_core``) inside the kernel body, so kernel
+and oracle can never drift: ref.py is the identical computation without
+pallas_call.  The strategy-bit and mask tables are kernel operands (Pallas
+kernels may not capture array constants).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import cost_model
+from repro.core.calibration import DEFAULT_TECH
+from repro.core.macro import MacroSpec
+from repro.core.strategies import ALL_STRATEGIES, STRATEGY_SETS
+
+CAND_TILE = 256
+
+
+def _strat_tables(strategy_set: str) -> tuple[np.ndarray, np.ndarray]:
+    bits = np.array(
+        [[float(s.spatial == "R"), float(s.temporal == "WP"),
+          float(s.tiling == "PF")] for s in ALL_STRATEGIES], np.float32)
+    allowed = np.array(
+        [1.0 if s in STRATEGY_SETS[strategy_set] else 0.0
+         for s in ALL_STRATEGIES], np.float32)
+    return bits, allowed
+
+
+def _objective_block(cfg_block, ops_arr, bits, allowed, macro, tech,
+                     objective):
+    """[T, 6] candidate block -> [T] best-strategy objective values."""
+    def per_candidate(cfg_row):
+        lat, en, _ = cost_model.workload_cost_core(
+            ops_arr, cfg_row, bits, allowed, macro, tech, objective)
+        val = cost_model.objective_value(lat, en, objective)
+        return jnp.where(
+            cost_model.bandwidth_ok_jnp(cfg_row, macro), val,
+            cost_model.INFEASIBLE)
+    return jax.vmap(per_candidate)(cfg_block)
+
+
+def _kernel(cfg_ref, ops_ref, bits_ref, allowed_ref, o_ref, *, macro, tech,
+            objective):
+    o_ref[...] = _objective_block(
+        cfg_ref[...], ops_ref[...], bits_ref[...], allowed_ref[...],
+        macro, tech, objective).astype(o_ref.dtype)
+
+
+def strategy_eval(
+    candidates: jax.Array,      # [C, 6] (mr, mc, scr, is_kb, os_kb, bw)
+    ops_arr: jax.Array,         # [P, 5]
+    macro: MacroSpec,
+    *,
+    objective: str = "ee",
+    strategy_set: str = "st",
+    tech=DEFAULT_TECH,
+    tile: int = CAND_TILE,
+    interpret: bool = False,
+) -> jax.Array:
+    c = candidates.shape[0]
+    pad = (-c) % tile
+    if pad:
+        candidates = jnp.pad(candidates, ((0, pad), (0, 0)),
+                             constant_values=1.0)
+    bits, allowed = _strat_tables(strategy_set)
+    grid = (candidates.shape[0] // tile,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, macro=macro, tech=tech,
+                          objective=objective),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, 6), lambda i: (i, 0)),
+            pl.BlockSpec(ops_arr.shape, lambda i: (0, 0)),   # replicated
+            pl.BlockSpec(bits.shape, lambda i: (0, 0)),
+            pl.BlockSpec(allowed.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((candidates.shape[0],),
+                                       jnp.float32),
+        interpret=interpret,
+    )(candidates.astype(jnp.float32), ops_arr.astype(jnp.float32),
+      jnp.asarray(bits), jnp.asarray(allowed))
+    return out[:c]

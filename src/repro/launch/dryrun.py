@@ -1,0 +1,255 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS",
+                                         "--xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first backend initialization.  (DRYRUN_XLA_FLAGS exists so tests
+# can run the same driver with 8 fake devices.)
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input shape x mesh) cell:
+    jit(step, in_shardings, out_shardings).lower(*input_specs).compile()
+then record memory_analysis(), cost_analysis() and the collective-traffic
+breakdown parsed from the post-SPMD compiled HLO.  Success here proves the
+distribution config is coherent: sharding mismatches, compile-time OOMs and
+unsupported collectives all surface as hard failures.
+
+Usage:
+    python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all [--mesh both] [--force]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import numpy as np
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+([\w\-]+)")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand sizes of every collective op in post-SPMD HLO.
+
+    Two passes: build a name -> output-bytes table, then for each collective
+    line sum the sizes of its referenced operands.
+    """
+    sizes: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            sizes[m.group(1)] = _type_bytes(m.group(2))
+    out = {c: 0 for c in COLLECTIVES}
+    counts = {c: 0 for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        opcode = m.group(3)
+        base = None
+        for c in COLLECTIVES:
+            if opcode == c or opcode.startswith(c + "-start") or \
+                    opcode.startswith(c + "."):
+                base = c
+                break
+        if base is None:
+            continue
+        # operands: %name tokens inside the call parens
+        call = line[line.find(opcode) + len(opcode):]
+        operands = re.findall(r"%?([\w.\-]+)(?=[,)])",
+                              call[: call.find(")") + 1])
+        op_bytes = sum(sizes.get(o, 0) for o in operands)
+        if op_bytes == 0:
+            op_bytes = _type_bytes(m.group(2))  # fallback: output size
+        out[base] += op_bytes
+        counts[base] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+#: perf-variant switches for the hillclimb iterations (EXPERIMENTS Sec. Perf);
+#: each maps to ArchConfig overrides so baseline-vs-variant is a pure A/B
+VARIANTS: dict[str, dict] = {
+    "moe-row": dict(moe_row_dispatch=True),
+    "fsdp": dict(fsdp=True),
+    "bf16p": dict(cast_params_bf16=True),
+    "remat-dots": dict(remat_policy="dots"),
+    "ssm-fused": dict(ssm_fused_coeffs=True),
+    "ssm-chunk64": dict(ssm_chunk=64),
+    "ssm-fused64": dict(ssm_fused_coeffs=True, ssm_chunk=64),
+    "moe-row-bf16p": dict(moe_row_dispatch=True, cast_params_bf16=True),
+    "moe-row-seqattn": dict(moe_row_dispatch=True, seq_shard_attn=True),
+    "ssm-fused512": dict(ssm_fused_coeffs=True, ssm_chunk=512),
+    "ssm-fused1024": dict(ssm_fused_coeffs=True, ssm_chunk=1024),
+    "ssm-fused2048": dict(ssm_fused_coeffs=True, ssm_chunk=2048),
+    "granite-opt": dict(moe_row_dispatch=True, seq_shard_attn=True,
+                        fsdp=True),
+    "yi-opt": dict(fsdp=True, cast_params_bf16=True),
+    "yi-opt-dots": dict(fsdp=True, cast_params_bf16=True,
+                        remat_policy="dots"),
+    "ssm-full-opt": dict(ssm_fused_coeffs=True, ssm_chunk=64,
+                         cast_params_bf16=True),
+}
+
+
+def run_cell(arch_id: str, shape_id: str, multi_pod: bool, sp_seq: bool = False,
+             variant: str | None = None, microbatches: int = 1,
+             extra: dict | None = None) -> dict:
+    import dataclasses
+
+    import jax
+    from repro.configs import SHAPES, get_arch
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell, input_specs
+
+    cfg = get_arch(arch_id)
+    if variant:
+        cfg = dataclasses.replace(cfg, **VARIANTS[variant])
+    shape = SHAPES[shape_id]
+    rec: dict = {
+        "arch": arch_id, "shape": shape_id,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": len(jax.devices()),
+        "variant": variant or "baseline",
+    }
+    if shape_id in cfg.skip_shapes:
+        rec["status"] = "SKIP"
+        rec["reason"] = ("full-attention arch: 500k-token decode requires "
+                        "sub-quadratic attention (DESIGN.md)")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.perf_counter()
+    jitted, args = build_cell(cfg, shape, mesh, sp_seq=sp_seq,
+                              microbatches=microbatches)
+    lowered = jitted.lower(*args)
+    rec["lower_s"] = round(time.perf_counter() - t0, 2)
+
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.perf_counter() - t0, 2)
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(mem, f, None)
+            if v is not None:
+                rec[f] = int(v)
+    cost = compiled.cost_analysis()
+    if cost:
+        # NOTE: XLA cost analysis counts while-loop bodies ONCE; kept for
+        # reference.  The loop-corrected numbers come from hlo_analysis.
+        rec["xla_flops_per_device_loopbody_once"] = float(
+            cost.get("flops", 0.0))
+        rec["xla_bytes_per_device_loopbody_once"] = float(
+            cost.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    from repro.launch import hlo_analysis
+    g = hlo_analysis.analyze(text)
+    rec["dot_flops_per_device"] = g["dot_flops"]
+    rec["hbm_bytes_per_device"] = g["hbm_bytes"]          # per-consumer reads
+    rec["hbm_write_bytes_per_device"] = g["hbm_write_bytes"]
+    rec["collectives"] = {
+        "bytes": g["collective_bytes"],
+        "counts": g["collective_counts"],
+        "total_bytes": g["collective_total_bytes"],
+    }
+    xf = rec.get("xla_flops_per_device_loopbody_once", 0.0)
+    if xf > 0 and g["dot_flops"] > 0:
+        rec["loop_correction"] = max(1.0, g["dot_flops"] / xf)
+    rec["hlo_size_chars"] = len(text)
+    rec["status"] = "OK"
+    if extra:
+        rec.update(extra)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--sp-seq", action="store_true",
+                    help="sequence-parallel residuals (perf variant)")
+    ap.add_argument("--variant", default=None, choices=sorted(VARIANTS),
+                    help="ArchConfig perf-variant overrides")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="gradient-accumulation slices for train cells")
+    ap.add_argument("--tag", default="", help="suffix for result files")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_IDS, SHAPES
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = ("multi" if multi else "single") + args.tag
+                if args.variant:
+                    tag += f".{args.variant}"
+                path = os.path.join(args.out_dir, f"{arch}_{shape}_{tag}.json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip-existing] {path}")
+                    continue
+                print(f"=== {arch} x {shape} x "
+                      f"{'2x16x16' if multi else '16x16'}"
+                      f"{' [' + args.variant + ']' if args.variant else ''}"
+                      " ===", flush=True)
+                try:
+                    rec = run_cell(arch, shape, multi, sp_seq=args.sp_seq,
+                                   variant=args.variant,
+                                   microbatches=args.microbatches)
+                except Exception as e:  # noqa: BLE001 -- record & continue
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if multi else "16x16",
+                           "status": "FAIL",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                print(f"--> {status} "
+                      + (f"(compile {rec.get('compile_s')}s, "
+                         f"flops/dev {rec.get('hlo_flops_per_device', 0):.3g}, "
+                         f"coll {rec.get('collectives', {}).get('total_bytes', 0):.3g}B)"
+                         if status == "OK" else rec.get("reason", rec.get("error", ""))),
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

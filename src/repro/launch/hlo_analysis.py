@@ -1,0 +1,221 @@
+"""Call-graph-aware analysis of post-SPMD compiled HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified: a
+2-layer and an 8-layer ``lax.scan`` report identical flops), which would
+corrupt the roofline for scanned models.  XLA annotates each while op with
+``backend_config={"known_trip_count":{"n":...}}``, so this module parses the
+computation call graph and walks it with multipliers:
+
+  * dot FLOPs  = 2 * prod(output dims) * prod(lhs contracting dims)
+  * collective operand bytes per opcode (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute)
+
+both multiplied by the product of enclosing-loop trip counts.  The compiled
+module is the per-device SPMD program, so totals are per-device; multiply by
+device count for aggregates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_ONE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s*->")
+# type part matched lazily so tuple types with {layout} braces work; the
+# opcode is the first bare word followed by '(' after the type
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\((.*)$")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_WHILE_REFS = re.compile(r"(?:condition|body)=%?([\w.\-]+)")
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_ONE.search(type_str)
+    if not m:
+        return None, ()
+    dt = m.group(1)
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    return dt, dims
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_ONE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+#: ops that move no HBM bytes of their own
+_FREE_OPS = frozenset((
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "after-all", "partition-id", "replica-id", "iota", "reshape",
+))
+
+
+@dataclasses.dataclass
+class Comp:
+    name: str
+    dot_flops: float = 0.0
+    conv_flops: float = 0.0
+    hbm_bytes: float = 0.0        # operand+output bytes (per-consumer reads)
+    hbm_write_bytes: float = 0.0  # output bytes only (unique materializations)
+    coll_bytes: dict = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES})
+    coll_counts: dict = dataclasses.field(
+        default_factory=lambda: {c: 0 for c in COLLECTIVES})
+    # (callee, multiplier) edges: fusions x1, while body x trip_count
+    edges: list = dataclasses.field(default_factory=list)
+    interior: bool = False     # fusion/reduce interior: no HBM accounting
+
+
+def parse_module(text: str) -> tuple[dict[str, Comp], str]:
+    comps: dict[str, Comp] = {}
+    entry = None
+    cur: Comp | None = None
+    symbols: dict[str, str] = {}   # local instr name -> type string
+
+    for raw in text.splitlines():
+        hdr = _COMP_HDR.match(raw)
+        if hdr and raw.rstrip().endswith("{"):
+            cur = Comp(hdr.group(2))
+            comps[cur.name] = cur
+            if hdr.group(1):
+                entry = cur.name
+            symbols = {}
+            # header params: "name: type, name: type"
+            for pm in re.finditer(r"([\w.\-]+):\s*((?:\([^)]*\))|[a-z0-9]+\[[0-9,]*\]\S*)",
+                                  hdr.group(3)):
+                symbols[pm.group(1)] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        if raw.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR.match(raw)
+        if not m:
+            continue
+        name, out_type, opcode, rest = m.groups()
+        symbols[name] = out_type
+
+        if opcode == "dot":
+            # flops = 2 * prod(out dims) * prod(lhs contracting dims)
+            _, out_dims = _shape_dims(out_type)
+            ops = re.findall(r"%([\w.\-]+)", rest[: rest.find(")") + 1])
+            k = 1
+            cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", raw)
+            if ops and cm:
+                _, lhs_dims = _shape_dims(symbols.get(ops[0], ""))
+                for idx in cm.group(1).split(","):
+                    if idx and int(idx) < len(lhs_dims):
+                        k *= lhs_dims[int(idx)]
+            n = 1
+            for d in out_dims:
+                n *= d
+            cur.dot_flops += 2.0 * n * k
+        elif opcode.startswith("convolution"):
+            _, out_dims = _shape_dims(out_type)
+            n = 1
+            for d in out_dims:
+                n *= d
+            cur.conv_flops += 2.0 * n  # lower bound; convs are rare here
+        else:
+            for c in COLLECTIVES:
+                if opcode == c or opcode.startswith(c + "-start"):
+                    ops = re.findall(r"%([\w.\-]+)",
+                                     rest[: rest.find(")") + 1])
+                    b = sum(_type_bytes(symbols.get(o, "")) for o in ops)
+                    if b == 0:
+                        b = _type_bytes(out_type)
+                    cur.coll_bytes[c] += b
+                    cur.coll_counts[c] += 1
+                    break
+
+        if opcode not in _FREE_OPS:
+            ops = re.findall(r"%([\w.\-]+)",
+                             rest[: rest.find(")") + 1] if ")" in rest
+                             else rest)
+            out_b = _type_bytes(out_type)
+            cur.hbm_write_bytes += out_b
+            cur.hbm_bytes += out_b + sum(
+                _type_bytes(symbols.get(o, "")) for o in set(ops))
+
+        if opcode == "while":
+            trip = 1
+            tm = _TRIP.search(raw)
+            if tm:
+                trip = int(tm.group(1))
+            for ref in _WHILE_REFS.findall(raw):
+                cur.edges.append((ref, trip))
+        else:
+            for callee in _CALLS.findall(raw):
+                cur.edges.append((callee, 1))
+            if opcode == "conditional":
+                for ref in re.findall(r"branch_computations=\{([^}]*)\}", raw):
+                    for c2 in re.findall(r"%?([\w.\-]+)", ref):
+                        cur.edges.append((c2, 1))
+
+    # fusion / to_apply interiors don't touch HBM themselves (the fusion op
+    # at its call site carries the operand/output traffic); while bodies are
+    # referenced via body=/condition= and stay accountable
+    for raw in text.splitlines():
+        for callee in _CALLS.findall(raw):
+            if callee in comps:
+                comps[callee].interior = True
+    return comps, entry or ""
+
+
+def analyze(text: str) -> dict:
+    comps, entry = parse_module(text)
+    totals = {
+        "dot_flops": 0.0,
+        "conv_flops": 0.0,
+        "hbm_bytes": 0.0,
+        "hbm_write_bytes": 0.0,
+        "collective_bytes": {c: 0.0 for c in COLLECTIVES},
+        "collective_counts": {c: 0.0 for c in COLLECTIVES},
+        "max_loop_depth_mult": 1.0,
+    }
+
+    seen_stack: set[str] = set()
+
+    def walk(name: str, mult: float):
+        comp = comps.get(name)
+        if comp is None or name in seen_stack:
+            return
+        seen_stack.add(name)
+        totals["dot_flops"] += comp.dot_flops * mult
+        totals["conv_flops"] += comp.conv_flops * mult
+        if not comp.interior:
+            totals["hbm_bytes"] += comp.hbm_bytes * mult
+            totals["hbm_write_bytes"] += comp.hbm_write_bytes * mult
+        for c in COLLECTIVES:
+            totals["collective_bytes"][c] += comp.coll_bytes[c] * mult
+            totals["collective_counts"][c] += comp.coll_counts[c] * mult
+        totals["max_loop_depth_mult"] = max(
+            totals["max_loop_depth_mult"], mult)
+        for callee, m in comp.edges:
+            walk(callee, mult * m)
+        seen_stack.discard(name)
+
+    walk(entry, 1.0)
+    totals["collective_total_bytes"] = sum(
+        totals["collective_bytes"].values())
+    return totals

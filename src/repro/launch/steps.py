@@ -1,0 +1,184 @@
+"""Step builders + abstract input specs for every (arch x shape) dry-run cell.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStruct stand-ins (no
+device allocation); the same builders are used with real arrays by the
+trainer and the serving engine.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.model import Model, build_model
+from repro.models import sharding as sh
+from repro.optim import AdamW
+
+
+# ---------------------------------------------------------------------- #
+# abstract inputs
+# ---------------------------------------------------------------------- #
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    b, t = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": sds((b, t), jnp.int32),
+        "labels": sds((b, t), jnp.int32),
+    }
+    if cfg.n_memory:
+        batch["memory"] = sds((b, cfg.n_memory, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    b, t = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((b, t), jnp.int32)}
+    if cfg.n_memory:
+        batch["memory"] = sds((b, cfg.n_memory, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def decode_specs(model: Model, shape: ShapeSpec) -> tuple[Any, Any]:
+    """(abstract caches at seq_len occupancy, next-token spec)."""
+    b = shape.global_batch
+    caches = model.abstract_cache(b, shape.seq_len)
+    tokens = sds((b, 1), jnp.int32)
+    return caches, tokens
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, model: Model | None = None
+                ) -> dict:
+    """All abstract inputs of the cell's step function, keyed by arg name."""
+    model = model or build_model(cfg)
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape)}
+    caches, tokens = decode_specs(model, shape)
+    return {"caches": caches, "tokens": tokens}
+
+
+# ---------------------------------------------------------------------- #
+# step functions
+# ---------------------------------------------------------------------- #
+def make_train_step(model: Model, optimizer: AdamW, microbatches: int = 1):
+    """Jittable train step; ``microbatches > 1`` scans gradient accumulation
+    over batch slices, dividing activation temp memory ~linearly (the
+    dry-run's temp-pressure mitigation, EXPERIMENTS Sec. Dry-run)."""
+    if microbatches == 1:
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, batch)
+            new_params, new_state, stats = optimizer.update(
+                grads, opt_state, params)
+            metrics = dict(metrics, loss=loss, **stats)
+            return new_params, new_state, metrics
+        return train_step
+
+    def train_step(params, opt_state, batch):
+        def split(x):
+            assert x.shape[0] % microbatches == 0, (
+                f"global batch {x.shape[0]} not divisible by "
+                f"{microbatches} microbatches")
+            return x.reshape((microbatches, x.shape[0] // microbatches)
+                             + x.shape[1:])
+        mb = jax.tree.map(split, batch)
+
+        def body(acc, mb_batch):
+            gsum, loss_sum = acc
+            (loss, _m), g = jax.value_and_grad(
+                model.loss, has_aux=True)(params, mb_batch)
+            gsum = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), gsum, g)
+            return (gsum, loss_sum + loss), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, loss_sum), _ = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32)), mb)
+        grads = jax.tree.map(lambda g: g / microbatches, gsum)
+        loss = loss_sum / microbatches
+        new_params, new_state, stats = optimizer.update(
+            grads, opt_state, params)
+        metrics = dict(stats, loss=loss,
+                       tokens=jnp.asarray(
+                           batch["tokens"].size, jnp.float32))
+        return new_params, new_state, metrics
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, caches, tokens):
+        return model.decode(params, caches, tokens)
+    return decode_step
+
+
+# ---------------------------------------------------------------------- #
+# jitted + sharded cell assembly (used by dryrun, trainer, server)
+# ---------------------------------------------------------------------- #
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh, *,
+               optimizer: AdamW | None = None, sp_seq: bool = False,
+               microbatches: int = 1):
+    """Returns (jitted_fn, abstract_args) for one (arch x shape x mesh)."""
+    shard_act = sh.make_shard_act(mesh, sp_seq=sp_seq)
+    model = build_model(cfg, shard_act=shard_act)
+    a_params = model.abstract_params()
+    p_sh = sh.param_shardings(cfg, a_params, mesh)
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        optimizer = optimizer or AdamW()
+        a_opt = jax.eval_shape(optimizer.init, a_params)
+        o_sh = sh.tree_shardings(
+            a_opt, mesh, lambda n, s: sh.param_rule(cfg, n, s, mesh))
+        batch = train_batch_specs(cfg, shape)
+        b_sh = sh.batch_shardings(batch, mesh)
+        step = make_train_step(model, optimizer, microbatches=microbatches)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, rep),
+            donate_argnums=(0, 1),
+        )
+        return jitted, (a_params, a_opt, batch)
+
+    if shape.kind == "prefill":
+        batch = prefill_batch_specs(cfg, shape)
+        b_sh = sh.batch_shardings(batch, mesh)
+        a_cache = model.abstract_cache(shape.global_batch, shape.seq_len)
+        c_sh = sh.cache_shardings(cfg, a_cache, mesh)
+        dp = sh.dp_axes(mesh)
+        tp = "model" if "model" in mesh.axis_names else None
+        logits_sh = NamedSharding(mesh, sh._fit(
+            (dp, None, tp),
+            (shape.global_batch, shape.seq_len, cfg.vocab), mesh))
+        step = make_prefill_step(model)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                         out_shardings=(logits_sh, c_sh))
+        return jitted, (a_params, batch)
+
+    # decode
+    a_cache, tokens = decode_specs(model, shape)
+    c_sh = sh.cache_shardings(cfg, a_cache, mesh)
+    t_sh = sh.batch_shardings({"tokens": tokens}, mesh)["tokens"]
+    dp = sh.dp_axes(mesh)
+    tp = "model" if "model" in mesh.axis_names else None
+    logits_sh = NamedSharding(mesh, sh._fit(
+        (dp, None, tp), (shape.global_batch, 1, cfg.vocab), mesh))
+    step = make_decode_step(model)
+    jitted = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh),
+                     out_shardings=(logits_sh, c_sh),
+                     donate_argnums=(1,))
+    return jitted, (a_params, a_cache, tokens)

@@ -1,0 +1,70 @@
+"""Training entry point.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+        --steps 50 --batch 8 --seq 256
+
+``--smoke`` uses the family-faithful reduced config (CPU-runnable); omit it
+on real hardware for the full architecture.  Any ArchConfig field can be
+overridden with ``--set field=value``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--data-file", default=None,
+                    help="flat int32 token file (default: synthetic stream)")
+    ap.add_argument("--mesh", default="1x1",
+                    help="data x model, e.g. 16x16 on a pod")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ArchConfig override field=value")
+    args = ap.parse_args()
+
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_debug_mesh
+    from repro.optim import AdamWConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    for ov in args.set:
+        k, v = ov.split("=", 1)
+        cur = getattr(cfg, k)
+        cfg = dataclasses.replace(cfg, **{k: type(cur)(v) if cur is not None
+                                          else eval(v)})  # noqa: S307
+
+    nd, nm = (int(x) for x in args.mesh.split("x"))
+    mesh = make_debug_mesh(nd, nm)
+    tcfg = TrainerConfig(
+        steps=args.steps, seq_len=args.seq, global_batch=args.batch,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        optimizer=AdamWConfig(peak_lr=args.lr, warmup_steps=args.steps // 10,
+                              total_steps=args.steps),
+    )
+    stream = None
+    if args.data_file:
+        from repro.data.pipeline import DataConfig, TokenFileStream
+        stream = TokenFileStream(
+            DataConfig(seq_len=args.seq, global_batch=args.batch,
+                       vocab=cfg.vocab), args.data_file)
+    trainer = Trainer(cfg, tcfg, mesh, stream=stream)
+    trainer.train()
+    print(f"straggler steps: {trainer.straggler_steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Model zoo substrate: the 10 assigned architectures as native JAX models.
+
+Every architecture is a functional module (explicit param pytrees, scan over
+stacked layers, remat) built from the shared blocks in ``layers.py`` /
+``moe.py`` / ``ssm.py``.  ``model.py`` exposes the uniform factory consumed
+by the trainer, the serving engine and the multi-pod dry-run.
+"""
+from repro.models.model import Model, build_model
+
+__all__ = ["Model", "build_model"]

@@ -1,0 +1,358 @@
+"""Shared neural blocks: norms, RoPE, GQA attention (dense / streaming /
+local-window / decode), gated MLPs, embeddings.
+
+Conventions:
+  * params are plain dict pytrees of jnp arrays (fp32 storage);
+  * activations compute in bf16 with fp32 softmax/norm statistics;
+  * tensor layouts: activations [B, T, D]; attention heads [B, T, H, dh];
+    KV caches [B, S, KH, dh].
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------- #
+# init helpers
+# ---------------------------------------------------------------------- #
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None):
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s)
+
+
+def embed_init(key, vocab: int, d: int):
+    return jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+
+
+# ---------------------------------------------------------------------- #
+# norms
+# ---------------------------------------------------------------------- #
+def rmsnorm_params(d: int) -> dict:
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"])
+    return y.astype(x.dtype)
+
+
+def layernorm_params(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+def apply_norm(kind: str, p: dict, x: jax.Array) -> jax.Array:
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+def norm_params(kind: str, d: int) -> dict:
+    return rmsnorm_params(d) if kind == "rmsnorm" else layernorm_params(d)
+
+
+# ---------------------------------------------------------------------- #
+# rotary position embeddings
+# ---------------------------------------------------------------------- #
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, T, H, dh]; positions: [B, T] (absolute)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq      # [B, T, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- #
+# attention cores
+# ---------------------------------------------------------------------- #
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """[B, S, KH, dh] -> [B, S, H, dh] by repeating each kv head."""
+    b, s, kh, dh = k.shape
+    rep = n_heads // kh
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def dense_attention(
+    q: jax.Array,            # [B, T, H, dh]
+    k: jax.Array,            # [B, S, KH, dh]
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int | None = None,
+    q_offset: int = 0,       # absolute position of q[0] (decode: S-1)
+) -> jax.Array:
+    """Materialized-scores attention; use for T*S small enough (<= ~4k x 4k
+    per head shard) and for single-token decode."""
+    h = q.shape[2]
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    dh = q.shape[-1]
+    scores = jnp.einsum(
+        "bthd,bshd->bhts", q.astype(COMPUTE_DTYPE), k.astype(COMPUTE_DTYPE)
+    ).astype(jnp.float32) / math.sqrt(dh)
+    t, s = scores.shape[-2], scores.shape[-1]
+    qpos = jnp.arange(t) + q_offset
+    kpos = jnp.arange(s)
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("bhts,bshd->bthd", p, v.astype(COMPUTE_DTYPE))
+    return out
+
+
+def streaming_attention(
+    q: jax.Array,            # [B, T, H, dh]
+    k: jax.Array,            # [B, S, KH, dh]
+    v: jax.Array,
+    *,
+    causal: bool,
+    kv_block: int = 1024,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Flash-style streaming softmax over KV blocks (pure jnp, lax.scan).
+
+    Keeps the [T, S] score matrix off-HBM: memory is O(T * kv_block) per
+    head shard, which is what makes the 32k-prefill cells compilable.  This
+    is also the jnp oracle shape for kernels/flash_attention.py.
+    """
+    b, t, h, dh = q.shape
+    s = k.shape[1]
+    kh = k.shape[2]
+    pad = (-s) % kv_block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nblk = k.shape[1] // kv_block
+    kb = k.reshape(b, nblk, kv_block, kh, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblk, kv_block, kh, dh).transpose(1, 0, 2, 3, 4)
+
+    qf = q.astype(COMPUTE_DTYPE)
+    qpos = jnp.arange(t) + q_offset
+    scale = 1.0 / math.sqrt(dh)
+
+    def step(carry, xs):
+        m, l, acc = carry                      # [B,H,T], [B,H,T], [B,T,H,dh]
+        kblk, vblk, blk_idx = xs               # [B,blk,KH,dh] x2, scalar
+        kblk = _expand_kv(kblk, h)
+        vblk = _expand_kv(vblk, h)
+        sc = jnp.einsum("bthd,bshd->bhts", qf, kblk.astype(COMPUTE_DTYPE))
+        sc = sc.astype(jnp.float32) * scale
+        kpos = blk_idx * kv_block + jnp.arange(kv_block)
+        mask = kpos[None, :] < s               # padding
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        sc = jnp.where(mask[None, None], sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum(
+            "bhts,bshd->bthd", p.astype(COMPUTE_DTYPE),
+            vblk.astype(COMPUTE_DTYPE)
+        ).astype(jnp.float32)
+        acc_new = acc * alpha.transpose(0, 2, 1)[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((b, h, t), -jnp.inf, jnp.float32),
+        jnp.zeros((b, h, t), jnp.float32),
+        jnp.zeros((b, t, h, dh), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(
+        step, init, (kb, vb, jnp.arange(nblk))
+    )
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return out.astype(COMPUTE_DTYPE)
+
+
+def local_chunk_attention(
+    q: jax.Array,            # [B, T, H, dh]
+    k: jax.Array,            # [B, T, KH, dh]
+    v: jax.Array,
+    *,
+    window: int,
+) -> jax.Array:
+    """Causal sliding-window attention in O(T * window): chunk the sequence
+    into window-sized blocks, each attending to itself + the previous block
+    (banded attention; exact for window <= chunk)."""
+    b, t, h, dh = q.shape
+    kh = k.shape[2]
+    w = window
+    pad = (-t) % w
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    tp = q.shape[1]
+    nc = tp // w
+    qc = q.reshape(b, nc, w, h, dh)
+    kc = k.reshape(b, nc, w, kh, dh)
+    vc = v.reshape(b, nc, w, kh, dh)
+    # previous chunk (zeros before the first)
+    k_prev = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    kk = jnp.concatenate([k_prev, kc], axis=2)       # [B, nc, 2w, KH, dh]
+    vv = jnp.concatenate([v_prev, vc], axis=2)
+    kk = _expand_kv(kk.reshape(b * nc, 2 * w, kh, dh), h)
+    vv = _expand_kv(vv.reshape(b * nc, 2 * w, kh, dh), h)
+    qq = qc.reshape(b * nc, w, h, dh)
+
+    sc = jnp.einsum(
+        "bthd,bshd->bhts", qq.astype(COMPUTE_DTYPE), kk.astype(COMPUTE_DTYPE)
+    ).astype(jnp.float32) / math.sqrt(dh)
+    qpos = jnp.arange(w) + w                          # within the 2w slab
+    kpos = jnp.arange(2 * w)
+    mask = (kpos[None, :] <= qpos[:, None]) & (
+        kpos[None, :] > qpos[:, None] - w
+    )
+    # first chunk has no previous block
+    first = (jnp.arange(b * nc) % nc) == 0
+    mask_first = mask & (kpos[None, :] >= w)
+    full_mask = jnp.where(first[:, None, None, None],
+                          mask_first[None, None], mask[None, None])
+    sc = jnp.where(full_mask, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("bhts,bshd->bthd", p, vv.astype(COMPUTE_DTYPE))
+    out = out.reshape(b, nc, w, h, dh).reshape(b, tp, h, dh)
+    return out[:, :t]
+
+
+def attention_any(
+    q, k, v, *, causal: bool, window: int | None, q_offset: int = 0,
+    dense_limit: int = 8192,
+) -> jax.Array:
+    """Dispatch to the right attention core for the shapes at hand."""
+    t, s = q.shape[1], k.shape[1]
+    if window is not None and t == s and t > window:
+        return local_chunk_attention(q, k, v, window=window)
+    if t == 1 or (t * s) <= dense_limit * dense_limit // 4:
+        return dense_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset)
+    return streaming_attention(q, k, v, causal=causal, q_offset=q_offset)
+
+
+# ---------------------------------------------------------------------- #
+# attention block (projections + cache handling)
+# ---------------------------------------------------------------------- #
+def attn_params(key, d_model, n_heads, n_kv_heads, head_dim) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d_model, n_heads * head_dim),
+        "wk": dense_init(k2, d_model, n_kv_heads * head_dim),
+        "wv": dense_init(k3, d_model, n_kv_heads * head_dim),
+        "wo": dense_init(k4, n_heads * head_dim, d_model,
+                         scale=1.0 / math.sqrt(n_heads * head_dim)),
+    }
+
+
+def attn_apply(
+    p: dict,
+    x: jax.Array,                     # [B, T, D]
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float | None,
+    causal: bool = True,
+    window: int | None = None,
+    positions: jax.Array | None = None,
+    cache: dict | None = None,        # {"k": [B,S,KH,dh], "v":..., "len": i32}
+    xattn_src: jax.Array | None = None,   # cross-attention memory [B, S, D]
+) -> tuple[jax.Array, dict | None]:
+    b, t, d = x.shape
+    xc = x.astype(COMPUTE_DTYPE)
+    q = (xc @ p["wq"].astype(COMPUTE_DTYPE)).reshape(b, t, n_heads, head_dim)
+    kv_in = xattn_src.astype(COMPUTE_DTYPE) if xattn_src is not None else xc
+    k = (kv_in @ p["wk"].astype(COMPUTE_DTYPE)).reshape(
+        b, -1, n_kv_heads, head_dim)
+    v = (kv_in @ p["wv"].astype(COMPUTE_DTYPE)).reshape(
+        b, -1, n_kv_heads, head_dim)
+
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    if rope_theta is not None and xattn_src is None:
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+
+    q_offset = 0
+    new_cache = None
+    if cache is not None and xattn_src is None:
+        # decode: append this step's k/v at position cache["len"]
+        s = cache["k"].shape[1]
+        idx = cache["len"]
+        k_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+        v_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+        new_cache = {"k": k_all, "v": v_all, "len": idx + t}
+        k, v = k_all, v_all
+        q_offset = idx
+        # mask out not-yet-written positions via the causal mask with
+        # absolute offset (q_offset handles it)
+        out = dense_attention(q, k, v, causal=True, window=window,
+                              q_offset=q_offset)
+    else:
+        out = attention_any(q, k, v, causal=causal and xattn_src is None,
+                            window=window)
+
+    out = out.reshape(b, t, n_heads * head_dim)
+    y = out @ p["wo"].astype(COMPUTE_DTYPE)
+    return y.astype(x.dtype), new_cache
+
+
+# decode with rope: positions for cached decode
+def decode_positions(cache_len, b, t):
+    return cache_len + jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+
+
+# ---------------------------------------------------------------------- #
+# MLPs
+# ---------------------------------------------------------------------- #
+def mlp_params(key, d_model: int, d_ff: int, gated: bool) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d_model, d_ff),
+         "w_down": dense_init(ks[1], d_ff, d_model)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff)
+    return p
+
+
+def mlp_apply(p: dict, x: jax.Array, act: str) -> jax.Array:
+    xc = x.astype(COMPUTE_DTYPE)
+    up = xc @ p["w_up"].astype(COMPUTE_DTYPE)
+    if "w_gate" in p:
+        g = xc @ p["w_gate"].astype(COMPUTE_DTYPE)
+        g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        h = g * up
+    else:
+        h = jax.nn.gelu(up)
+    y = h @ p["w_down"].astype(COMPUTE_DTYPE)
+    return y.astype(x.dtype)

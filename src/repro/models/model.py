@@ -1,0 +1,100 @@
+"""Uniform model factory: ArchConfig -> (init, loss, prefill, decode, caches).
+
+The same object drives the trainer, the serving engine, the smoke tests and
+the multi-pod dry-run (which builds everything abstractly via eval_shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.models.layers import COMPUTE_DTYPE
+
+MOE_AUX_COEF = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], Any]
+    loss: Callable[[Any, dict], tuple[jax.Array, dict]]
+    prefill: Callable[[Any, dict], tuple[jax.Array, Any]]
+    decode: Callable[[Any, Any, jax.Array], tuple[jax.Array, Any]]
+    init_cache: Callable[[int, int], Any]
+
+    def abstract_params(self, seed: int = 0):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(seed))
+
+    def abstract_cache(self, batch: int, max_len: int):
+        # batch/max_len are shape parameters: close over them so eval_shape
+        # never traces them as values
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len))
+
+    def param_count(self, seed: int = 0) -> int:
+        leaves = jax.tree.leaves(self.abstract_params(seed))
+        return sum(int(jnp.prod(jnp.asarray(l.shape))) if l.shape else 1
+                   for l in leaves)
+
+
+def build_model(cfg: ArchConfig, shard_act: Callable = tf.Identity) -> Model:
+    is_encdec = cfg.encoder_layers > 0
+    has_memory = cfg.n_memory > 0
+
+    def init(key):
+        return tf.lm_init(key, cfg)
+
+    def _memory(params, batch):
+        if not has_memory:
+            return None
+        mem = batch["memory"].astype(COMPUTE_DTYPE)
+        if is_encdec:
+            mem = tf.encode_memory(params, cfg, mem, shard_act=shard_act)
+        return mem
+
+    def loss(params, batch):
+        logits, _, aux = tf.lm_apply(
+            params, cfg, batch["tokens"],
+            memory=_memory(params, batch), shard_act=shard_act)
+        l, metrics = tf.lm_loss(logits, batch["labels"])
+        if cfg.n_experts:
+            l = l + MOE_AUX_COEF * aux
+            metrics = dict(metrics, moe_aux=aux)
+        return l, metrics
+
+    def init_cache(batch_size: int, max_len: int):
+        caches = tf.stack_cache(cfg, cfg.pattern, cfg.n_layers, batch_size,
+                                max_len)
+        return {"stack": caches, "step": jnp.zeros((), jnp.int32)}
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        caches = batch.get("caches")
+        if caches is None:
+            caches = init_cache(b, t)   # fresh cache sized to the prompt
+        logits, new_stack, _ = tf.lm_apply(
+            params, cfg, tokens,
+            caches=caches["stack"],
+            memory=_memory(params, batch),
+            pos_offset=0,
+            shard_act=shard_act)
+        return logits, {"stack": new_stack,
+                        "step": caches["step"] + t}
+
+    def decode(params, caches, tokens):
+        logits, new_stack, _ = tf.lm_apply(
+            params, cfg, tokens,
+            caches=caches["stack"],
+            memory=None,
+            pos_offset=caches["step"],
+            shard_act=shard_act)
+        return logits, {"stack": new_stack,
+                        "step": caches["step"] + tokens.shape[1]}
+
+    return Model(cfg=cfg, init=init, loss=loss, prefill=prefill,
+                 decode=decode, init_cache=init_cache)

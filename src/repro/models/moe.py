@@ -1,0 +1,193 @@
+"""Mixture-of-Experts block: top-k router + capacity-based scatter dispatch.
+
+Dispatch is O(T * k * d) (scatter/gather, *not* the quadratic one-hot-einsum
+GShard dispatch): tokens are scattered into a per-expert slot buffer
+[E, C, d] (C = capacity), experts run as one batched einsum, and results are
+gathered back with router weights.  Overflow tokens beyond capacity are
+dropped (standard capacity-factor semantics; the residual path carries them).
+
+Sharding: experts stay where the tokens are (no all-to-all); tensor
+parallelism shards the expert hidden dimension (expert counts 40/8 do not
+divide the 16-wide model axis -- see DESIGN.md).  The token-exchange (EP)
+variant is a recorded hillclimb lever.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DTYPE, dense_init
+
+
+def moe_params(key, d_model: int, d_ff: int, n_experts: int,
+               gated: bool = True) -> dict:
+    ks = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_ff = 1.0 / math.sqrt(d_ff)
+    p = {
+        "router": dense_init(ks[0], d_model, n_experts),
+        "w_up": jax.random.normal(
+            ks[1], (n_experts, d_model, d_ff), jnp.float32) * s_in,
+        "w_down": jax.random.normal(
+            ks[2], (n_experts, d_ff, d_model), jnp.float32) * s_ff,
+    }
+    if gated:
+        p["w_gate"] = jax.random.normal(
+            ks[3], (n_experts, d_model, d_ff), jnp.float32) * s_in
+    return p
+
+
+def moe_apply(
+    p: dict,
+    x: jax.Array,                 # [B, T, D]
+    *,
+    top_k: int,
+    act: str = "swiglu",
+    capacity_factor: float = 1.25,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output [B, T, D], aux load-balancing loss scalar)."""
+    b, t, d = x.shape
+    n_exp = p["router"].shape[1]
+    xt = x.reshape(b * t, d)
+    tokens = b * t
+
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                 # [T, E]
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)       # [T, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    me = probs.mean(axis=0)
+    one_hot_top1 = jax.nn.one_hot(gate_idx[:, 0], n_exp)
+    ce = one_hot_top1.mean(axis=0)
+    aux = n_exp * jnp.sum(me * ce)
+
+    # capacity floor keeps small token counts (decode steps, CPU tests)
+    # fully dropless -- worst case all tokens route to one expert, needing
+    # capacity == tokens; at production token counts the capacity-factor
+    # term dominates and this floor is inert
+    capacity = max(int(capacity_factor * tokens * top_k / n_exp),
+                   min(tokens, 64), 1)
+
+    # position of each (token, choice) within its expert queue
+    flat_exp = gate_idx.reshape(-1)                         # [T*k]
+    onehot = jax.nn.one_hot(flat_exp, n_exp, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1                    # arrival order
+    pos_in_expert = jnp.take_along_axis(
+        pos, flat_exp[:, None], axis=1)[:, 0]               # [T*k]
+    keep = pos_in_expert < capacity
+    slot = flat_exp * capacity + pos_in_expert              # [T*k]
+    slot = jnp.where(keep, slot, n_exp * capacity)          # drop -> OOB
+
+    # scatter tokens into expert slots [E*C, D]
+    xk = jnp.repeat(xt, top_k, axis=0)                      # token order
+    buf = jnp.zeros((n_exp * capacity + 1, d), xt.dtype)
+    buf = buf.at[slot].set(xk, mode="drop")
+    buf = buf[:-1].reshape(n_exp, capacity, d).astype(COMPUTE_DTYPE)
+
+    # batched expert FFN
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(COMPUTE_DTYPE))
+    if "w_gate" in p:
+        g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(COMPUTE_DTYPE))
+        g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        h = g * up
+    else:
+        h = jax.nn.gelu(up)
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(COMPUTE_DTYPE))
+
+    # gather back with router weights
+    out_flat = out_e.reshape(n_exp * capacity, d)
+    out_flat = jnp.concatenate(
+        [out_flat, jnp.zeros((1, d), out_flat.dtype)], axis=0)
+    gathered = out_flat[slot]                               # [T*k, D]
+    w = (gate_vals.reshape(-1) * keep).astype(gathered.dtype)
+    y = (gathered * w[:, None]).reshape(tokens, top_k, d).sum(axis=1)
+    return y.reshape(b, t, d).astype(x.dtype), aux
+
+
+def moe_apply_row(
+    p: dict,
+    x: jax.Array,                 # [B, T, D]
+    *,
+    top_k: int,
+    act: str = "swiglu",
+    capacity_factor: float = 1.25,
+    shard_act=lambda x, name: x,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-batch-row-local dispatch (perf variant; EXPERIMENTS Sec. Perf).
+
+    ``moe_apply`` computes arrival-order positions with a cumsum over the
+    *globally flattened* token axis; under GSPMD that axis is sharded over
+    the data mesh dimensions, so the cumsum (and the following scatter)
+    serializes across shards through enormous collectives.  Keeping the
+    batch dimension separate and running dispatch per row makes every step
+    shard-local: capacity becomes per-row (cf * T * k / E), which is the
+    same per-shard-capacity semantics every production MoE system uses.
+    """
+    b, t, d = x.shape
+    n_exp = p["router"].shape[1]
+
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                 # [B, T, E]
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)       # [B, T, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean(axis=(0, 1))
+    ce = jax.nn.one_hot(gate_idx[..., 0], n_exp).mean(axis=(0, 1))
+    aux = n_exp * jnp.sum(me * ce)
+
+    capacity = max(int(capacity_factor * t * top_k / n_exp),
+                   min(t, 64), 1)
+
+    flat_exp = gate_idx.reshape(b, t * top_k)               # [B, T*k]
+    onehot = jax.nn.one_hot(flat_exp, n_exp, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=1) - 1                    # per-row order
+    pos_in_expert = jnp.take_along_axis(
+        pos, flat_exp[..., None], axis=2)[..., 0]           # [B, T*k]
+    keep = pos_in_expert < capacity
+    slot = flat_exp * capacity + pos_in_expert
+    slot = jnp.where(keep, slot, n_exp * capacity)
+
+    # gather-based dispatch: scatter only the int32 assignment ids into the
+    # slot table, then gather token rows -- avoids materializing the
+    # [B, T*k, D] repeat (12.9 GB/layer for granite train_4k; Perf A4)
+    n_assign = t * top_k
+    def ids_row(slots_r):
+        ids = jnp.full((n_exp * capacity + 1,), n_assign, jnp.int32)
+        return ids.at[slots_r].set(jnp.arange(n_assign, dtype=jnp.int32),
+                                   mode="drop")[:-1]
+    slot_assign = jax.vmap(ids_row)(slot)                   # [B, E*C]
+    token_of_slot = jnp.minimum(slot_assign // top_k, t - 1)
+    slot_valid = slot_assign < n_assign
+    buf = jnp.take_along_axis(
+        x.astype(COMPUTE_DTYPE), token_of_slot[..., None], axis=1)
+    buf = jnp.where(slot_valid[..., None], buf, 0)
+    buf = buf.reshape(b, n_exp, capacity, d)
+    # pin the expert buffer batch-sharded: without this the partitioner
+    # replicates it across the data axes (observed: per-layer f32
+    # [B_glob, E*C, D] all-gathers + [E,D,B,C]-sized wgrad all-reduces)
+    buf = shard_act(buf, "moe_buf")
+
+    up = jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(COMPUTE_DTYPE))
+    if "w_gate" in p:
+        g = jnp.einsum("becd,edf->becf", buf,
+                       p["w_gate"].astype(COMPUTE_DTYPE))
+        g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        h = g * up
+    else:
+        h = jax.nn.gelu(up)
+    out_e = jnp.einsum("becf,efd->becd", h,
+                       p["w_down"].astype(COMPUTE_DTYPE))
+    out_e = shard_act(out_e, "moe_buf")
+
+    out_flat = out_e.reshape(b, n_exp * capacity, d)
+    out_flat = jnp.concatenate(
+        [out_flat, jnp.zeros((b, 1, d), out_flat.dtype)], axis=1)
+    gathered = jnp.take_along_axis(out_flat, slot[..., None], axis=1)
+    w = (gate_vals.reshape(b, t * top_k) * keep).astype(gathered.dtype)
+    y = (gathered * w[..., None]).reshape(b, t, top_k, d).sum(axis=2)
+    return y.astype(x.dtype), aux

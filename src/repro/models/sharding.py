@@ -1,0 +1,164 @@
+"""GSPMD sharding rules for params, activations, batches and caches.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+  * batch            -> ("pod","data")   (data parallel)
+  * TP over "model"  -> attention heads (3D weights [D, H, dh] so head
+    sharding never crosses a reshape), FFN hidden, vocab, expert-internal
+    hidden, SSM inner channels
+  * FSDP over "data" -> param dim 0 of big archs (cfg.fsdp); optimizer state
+    inherits (ZeRO-3-like), GSPMD inserts the per-layer all-gathers
+  * big KV caches    -> sequence axis over "model" (GQA kv-head counts 1/4/8
+    don't divide 16); softmax over the sharded axis lowers to small
+    all-reduces (flash-decoding-like)
+
+Every rule passes through a divisibility guard: a dim that an axis does not
+divide is replicated instead (e.g. whisper's 12 heads, batch=1 long-decode).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+BIG_CACHE = 16384          # seq >= this -> shard cache seq over "model"
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _fit(spec: tuple, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Left-pad with None to ndim and drop axes that don't divide."""
+    spec = (None,) * (len(shape) - len(spec)) + tuple(spec)
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        out.append(ax if dim % size == 0 else None)
+    return P(*out)
+
+
+def param_rule(cfg: ArchConfig, name: str, shape: tuple[int, ...],
+               mesh: Mesh) -> P:
+    fsdp = "data" if (cfg.fsdp and "data" in mesh.axis_names) else None
+    tp = "model" if "model" in mesh.axis_names else None
+    attn_tp = tp if cfg.shard_attn else None
+    rules: dict[str, tuple] = {
+        "wq": (fsdp, attn_tp, None),
+        "wk": (fsdp, attn_tp, None),
+        "wv": (fsdp, attn_tp, None),
+        "wo": (attn_tp, None, fsdp),
+        "w_up": (fsdp, tp),
+        "w_gate": (fsdp, tp),
+        "w_down": (tp, fsdp),
+        "in_proj": (fsdp, tp),
+        "out_proj": (tp, fsdp),
+        "x_proj": (tp, fsdp),
+        "dt_proj": (fsdp, tp),
+        "w_a": (None, tp),
+        "w_i": (None, tp),
+        "router": (fsdp, None),
+        "embed": (tp, fsdp),
+        "lm_head": (fsdp, tp),
+        "conv_w": (None, tp),
+        "conv_b": (tp,),
+        "dt_bias": (tp,),
+        "d_skip": (tp,),
+        "lambda_p": (tp,),
+        "a_log": (tp, None),
+    }
+    spec = rules.get(name, ())
+    return _fit(spec, shape, mesh)
+
+
+def cache_rule(cfg: ArchConfig, name: str, shape: tuple[int, ...],
+               mesh: Mesh) -> P:
+    dp = dp_axes(mesh)
+    tp = "model" if "model" in mesh.axis_names else None
+    if name in ("k", "v"):           # [B, C, KH, dh]
+        seq_ax = tp if shape[-3] >= BIG_CACHE else None
+        return _fit((dp, seq_ax, None, None), shape, mesh)
+    if name == "pos":                # [B, C]
+        seq_ax = tp if shape[-1] >= BIG_CACHE else None
+        return _fit((dp, seq_ax), shape, mesh)
+    if name in ("len", "step"):
+        return P()
+    if name == "conv":               # [B, K-1, I]
+        return _fit((dp, None, tp), shape, mesh)
+    if name == "ssm":                # [B, I, S]
+        return _fit((dp, tp, None), shape, mesh)
+    if name == "h":                  # [B, I]
+        return _fit((dp, tp), shape, mesh)
+    if name in ("xk", "xv"):         # [B, n_mem, KH, dh]
+        return _fit((dp, None, None, None), shape, mesh)
+    return _fit((dp,), shape, mesh)
+
+
+def batch_rule(name: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    dp = dp_axes(mesh)
+    if name in ("tokens", "labels"):
+        return _fit((dp, None), shape, mesh)
+    if name == "memory":             # stub frontend embeddings [B, n, D]
+        return _fit((dp, None, None), shape, mesh)
+    return _fit((dp,), shape, mesh)
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def tree_shardings(tree: Any, mesh: Mesh, rule) -> Any:
+    """Map a pytree of arrays/ShapeDtypeStructs to NamedShardings."""
+    def one(path, leaf):
+        name = _leaf_name(path)
+        return NamedSharding(mesh, rule(name, tuple(leaf.shape)))
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def param_shardings(cfg: ArchConfig, params: Any, mesh: Mesh) -> Any:
+    return tree_shardings(
+        params, mesh, lambda n, s: param_rule(cfg, n, s, mesh))
+
+
+def cache_shardings(cfg: ArchConfig, caches: Any, mesh: Mesh) -> Any:
+    return tree_shardings(
+        caches, mesh, lambda n, s: cache_rule(cfg, n, s, mesh))
+
+
+def batch_shardings(batch: Any, mesh: Mesh) -> Any:
+    return tree_shardings(batch, mesh, lambda n, s: batch_rule(n, s, mesh))
+
+
+def make_shard_act(mesh: Mesh, sp_seq: bool = False):
+    """Activation sharding-constraint hook.  ``sp_seq`` enables sequence
+    parallelism for residuals (hillclimb lever)."""
+    dp = dp_axes(mesh)
+    tp = "model" if "model" in mesh.axis_names else None
+
+    def shard_act(x, name):
+        if mesh.empty or x.ndim < 2:
+            return x
+        if name == "resid":
+            seq_ax = tp if sp_seq else None
+            spec = _fit((dp, seq_ax, None), x.shape, mesh)
+        elif name == "moe_buf":          # [B, E, C, D]: batch-local experts
+            spec = _fit((dp, None, None, None), x.shape, mesh)
+        elif name == "attn_q_seq":       # [B, T, H, dh]: context parallel
+            spec = _fit((dp, tp, None, None), x.shape, mesh)
+        elif name == "logits":
+            spec = _fit((dp, None, tp), x.shape, mesh)
+        else:
+            spec = _fit((dp,), x.shape, mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return shard_act

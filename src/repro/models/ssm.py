@@ -1,0 +1,241 @@
+"""State-space blocks: Mamba-1 (selective scan) and RG-LRU (RecurrentGemma).
+
+Both are linear recurrences h_t = a_t * h_{t-1} + b_t evaluated with a
+chunked associative scan: the outer ``lax.scan`` carries only chunk-boundary
+states (memory O(T/chunk)), the inner ``associative_scan`` is remat-ed so the
+backward pass recomputes chunk internals -- this is what keeps the 4k-train
+and 500k-decode cells within budget.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DTYPE, dense_init
+
+
+# ---------------------------------------------------------------------- #
+# chunked linear scan: h_t = a_t * h_{t-1} + b_t
+# ---------------------------------------------------------------------- #
+def _assoc(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def linear_scan(a: jax.Array, b: jax.Array, h0: jax.Array,
+                chunk: int = 256) -> jax.Array:
+    """a, b: [T, ...] coefficients; h0: [...] initial state.
+    Returns h: [T, ...] (all states)."""
+    t = a.shape[0]
+    if t <= 4:
+        # decode fast path: unrolled recurrence, no chunk padding
+        hs = []
+        h = h0
+        for i in range(t):
+            h = a[i] * h + b[i]
+            hs.append(h)
+        return jnp.stack(hs)
+    pad = (-t) % chunk
+    if pad:
+        a = jnp.concatenate([a, jnp.ones((pad,) + a.shape[1:], a.dtype)])
+        b = jnp.concatenate([b, jnp.zeros((pad,) + b.shape[1:], b.dtype)])
+    nc = a.shape[0] // chunk
+    ac = a.reshape((nc, chunk) + a.shape[1:])
+    bc = b.reshape((nc, chunk) + b.shape[1:])
+
+    @jax.checkpoint
+    def body(h, xs):
+        a_i, b_i = xs
+        # fold carry into the first element, then scan the chunk
+        b0 = b_i.at[0].add(a_i[0] * h)
+        aa, bb = jax.lax.associative_scan(_assoc, (a_i, b0), axis=0)
+        return bb[-1], bb
+
+    h_last, hs = jax.lax.scan(body, h0, (ac, bc))
+    hs = hs.reshape((nc * chunk,) + h0.shape)
+    return hs[:t]
+
+
+# ---------------------------------------------------------------------- #
+# Mamba-1
+# ---------------------------------------------------------------------- #
+def mamba_params(key, d_model: int, d_inner: int, d_state: int,
+                 dt_rank: int, conv_width: int = 4) -> dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * d_inner),
+        "conv_w": jax.random.normal(
+            ks[1], (conv_width, d_inner), jnp.float32) / math.sqrt(conv_width),
+        "conv_b": jnp.zeros((d_inner,), jnp.float32),
+        "x_proj": dense_init(ks[2], d_inner, dt_rank + 2 * d_state),
+        "dt_proj": dense_init(ks[3], dt_rank, d_inner),
+        "dt_bias": jnp.full((d_inner,), -4.6, jnp.float32),  # softplus ~ 0.01
+        "a_log": jnp.log(jnp.tile(
+            jnp.arange(1, d_state + 1, dtype=jnp.float32)[None], (d_inner, 1))),
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[4], d_inner, d_model),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv1d.  x: [B, T, C]; w: [K, C].
+    Returns (y [B, T, C], new_state [B, K-1, C])."""
+    kw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], kw - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)
+    y = sum(xx[:, i: i + x.shape[1]] * w[i][None, None] for i in range(kw))
+    new_state = xx[:, -(kw - 1):] if kw > 1 else state
+    return y + b[None, None], new_state
+
+
+def selective_scan_fused(xi, dt, bmat, cmat, a, h0, chunk: int):
+    """Chunk-fused selective scan (perf variant; EXPERIMENTS Sec. Perf).
+
+    The baseline materializes the full [B, T, I, S] coefficient tensors
+    (da, dt*B*x) in HBM before scanning.  Here they are computed *inside*
+    the remat-ed chunk body, so only [B, chunk, I, S] ever materializes --
+    cutting the dominant HBM term of the mamba prefill/train cells.
+
+    xi, dt: [B, T, I]; bmat, cmat: [B, T, S]; a: [I, S]; h0: [B, I, S].
+    Returns (y [B, T, I], h_last [B, I, S]).
+    """
+    b, t, i = xi.shape
+    s = a.shape[1]
+    pad = (-t) % chunk
+    if pad:
+        z = lambda x_, w: jnp.pad(x_, ((0, 0), (0, w), (0, 0)))
+        xi, dt = z(xi, pad), z(dt, pad)       # dt=0 -> da=1, dbx=0: identity
+        bmat, cmat = z(bmat, pad), z(cmat, pad)
+    nc = xi.shape[1] // chunk
+
+    def chunked(x_):
+        return x_.reshape(b, nc, chunk, -1).transpose(1, 0, 2, 3)
+
+    @jax.checkpoint
+    def body(h, xs):
+        xi_c, dt_c, b_c, c_c = xs              # [B, chunk, ...]
+        da = jnp.exp(dt_c[..., None] * a[None, None])      # [B,c,I,S]
+        dbx = (dt_c * xi_c)[..., None] * b_c[:, :, None, :]
+        dbx = dbx.at[:, 0].add(da[:, 0] * h)
+        _aa, hh = jax.lax.associative_scan(_assoc, (da, dbx), axis=1)
+        y_c = jnp.einsum("bcis,bcs->bci", hh, c_c)
+        return hh[:, -1], y_c
+
+    h_last, ys = jax.lax.scan(
+        body, h0, (chunked(xi), chunked(dt), chunked(bmat), chunked(cmat)))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, nc * chunk, i)[:, :t]
+    return y, h_last
+
+
+def mamba_apply(
+    p: dict,
+    x: jax.Array,                  # [B, T, D]
+    *,
+    d_state: int,
+    dt_rank: int,
+    cache: dict | None = None,     # {"conv": [B,K-1,I], "ssm": [B,I,S]}
+    chunk: int = 256,
+    fused: bool = False,
+) -> tuple[jax.Array, dict | None]:
+    b, t, d = x.shape
+    xc = x.astype(COMPUTE_DTYPE)
+    xz = xc @ p["in_proj"].astype(COMPUTE_DTYPE)
+    xi, z = jnp.split(xz, 2, axis=-1)            # [B, T, I]
+    d_inner = xi.shape[-1]
+
+    conv_state = cache["conv"] if cache else None
+    xi, new_conv = _causal_conv(
+        xi.astype(jnp.float32), p["conv_w"], p["conv_b"], conv_state)
+    xi = jax.nn.silu(xi)
+
+    proj = xi.astype(COMPUTE_DTYPE) @ p["x_proj"].astype(COMPUTE_DTYPE)
+    dt_in, bmat, cmat = jnp.split(
+        proj.astype(jnp.float32), [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(
+        dt_in @ p["dt_proj"] + p["dt_bias"][None, None])     # [B, T, I]
+    a = -jnp.exp(p["a_log"])                                 # [I, S]
+
+    h0 = cache["ssm"] if cache else jnp.zeros((b, d_inner, d_state),
+                                              jnp.float32)
+    if fused and t > 4:
+        y, h_last = selective_scan_fused(xi, dt, bmat, cmat, a, h0, chunk)
+    else:
+        da = jnp.exp(dt[..., None] * a[None, None])          # [B, T, I, S]
+        dbx = (dt * xi)[..., None] * bmat[:, :, None, :]      # [B, T, I, S]
+        # linear_scan is time-major; vmap over the batch axis
+        hs = jax.vmap(lambda aa, bb, h: linear_scan(aa, bb, h, chunk=chunk))(
+            da, dbx, h0)
+        y = jnp.einsum("btis,bts->bti", hs, cmat)            # C_t . h_t
+        h_last = hs[:, -1]
+    y = y + xi * p["d_skip"][None, None]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = y.astype(COMPUTE_DTYPE) @ p["out_proj"].astype(COMPUTE_DTYPE)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssm": h_last.astype(cache["ssm"].dtype)}
+    return out.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------- #
+# RG-LRU (RecurrentGemma recurrent block)
+# ---------------------------------------------------------------------- #
+def rglru_params(key, d_model: int, d_inner: int, conv_width: int = 4) -> dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * d_inner),
+        "conv_w": jax.random.normal(
+            ks[1], (conv_width, d_inner), jnp.float32) / math.sqrt(conv_width),
+        "conv_b": jnp.zeros((d_inner,), jnp.float32),
+        "w_a": dense_init(ks[2], d_inner, d_inner),   # recurrence gate
+        "w_i": dense_init(ks[3], d_inner, d_inner),   # input gate
+        "lambda_p": jnp.full((d_inner,), 2.0, jnp.float32),
+        "out_proj": dense_init(ks[4], d_inner, d_model),
+    }
+
+
+RGLRU_C = 8.0
+
+
+def rglru_apply(
+    p: dict,
+    x: jax.Array,                  # [B, T, D]
+    *,
+    cache: dict | None = None,     # {"conv": [B,K-1,I], "h": [B,I]}
+    chunk: int = 256,
+) -> tuple[jax.Array, dict | None]:
+    b, t, d = x.shape
+    xc = x.astype(COMPUTE_DTYPE)
+    xz = xc @ p["in_proj"].astype(COMPUTE_DTYPE)
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    conv_state = cache["conv"] if cache else None
+    xi, new_conv = _causal_conv(
+        xi.astype(jnp.float32), p["conv_w"], p["conv_b"], conv_state)
+
+    r = jax.nn.sigmoid(xi.astype(COMPUTE_DTYPE) @ p["w_a"].astype(COMPUTE_DTYPE))
+    i_g = jax.nn.sigmoid(xi.astype(COMPUTE_DTYPE) @ p["w_i"].astype(COMPUTE_DTYPE))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lambda_p"])[None, None] * \
+        r.astype(jnp.float32)
+    a = jnp.exp(log_a)                                        # [B, T, I]
+    gated_x = xi * i_g.astype(jnp.float32)
+    bterm = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated_x
+
+    h0 = cache["h"] if cache else jnp.zeros((b, xi.shape[-1]), jnp.float32)
+    hs = jax.vmap(lambda aa, bb, h: linear_scan(aa, bb, h, chunk=chunk))(
+        a, bterm, h0)
+
+    y = hs * jax.nn.gelu(z.astype(jnp.float32))
+    out = y.astype(COMPUTE_DTYPE) @ p["out_proj"].astype(COMPUTE_DTYPE)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "h": hs[:, -1].astype(cache["h"].dtype)}
+    return out.astype(x.dtype), new_cache

@@ -1,0 +1,557 @@
+"""Generic stacked-architecture assembly.
+
+An architecture is a repeating ``pattern`` of block kinds (ArchConfig.pattern)
+-- e.g. dense LMs repeat ("dense",), RecurrentGemma repeats
+("rglru", "rglru", "local_attn"), Llama-3.2-Vision repeats
+("cross", "self", "self", "self", "self"), Whisper stacks an encoder
+("enc_self",) and a decoder ("dec_self_cross",).
+
+Full pattern groups are *scanned* (params stacked [G, ...], ``lax.scan`` +
+``jax.checkpoint`` on the group body) which keeps HLO size O(1) in depth --
+that is what makes the 100-layer 90B dry-run compile -- and doubles as the
+production activation-checkpoint policy.  Layers left over when n_layers %
+len(pattern) != 0 run unscanned with their own params ("remainder" prefix of
+the pattern, e.g. RecurrentGemma-9B's 38 = 12x3 + 2).
+
+Caches: every block kind defines its own decode cache (KV ring buffer for
+sliding-window attention, full KV for dense attention, conv+state for
+Mamba/RG-LRU, cross-KV for cross-attention) so ``decode_step`` is O(1) in
+generated tokens for every family.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    COMPUTE_DTYPE,
+    NEG_INF,
+    attn_apply,
+    attn_params,
+    dense_attention,
+    embed_init,
+    mlp_apply,
+    mlp_params,
+    norm_params,
+    apply_norm,
+    rope,
+    _expand_kv,
+)
+
+Identity = lambda x, name: x
+CACHE_DTYPE = jnp.bfloat16
+
+
+# ====================================================================== #
+# caches
+# ====================================================================== #
+def _attn_cache(batch: int, cache_len: int, n_kv: int, head_dim: int) -> dict:
+    return {
+        "k": jnp.zeros((batch, cache_len, n_kv, head_dim), CACHE_DTYPE),
+        "v": jnp.zeros((batch, cache_len, n_kv, head_dim), CACHE_DTYPE),
+        "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def block_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int) -> Any:
+    """Decode-cache pytree for one block (zeros; dry-run uses eval_shape)."""
+    w = cfg.window
+    if kind in ("dense", "self", "moe"):
+        clen = min(max_len, w) if w else max_len
+        return _attn_cache(batch, clen, cfg.n_kv_heads, cfg.head_dim)
+    if kind == "local_attn":
+        clen = min(max_len, cfg.window or 2048)
+        return _attn_cache(batch, clen, cfg.n_kv_heads, cfg.head_dim)
+    if kind == "mamba":
+        return {
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner),
+                              jnp.float32),
+            "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state),
+                             jnp.float32),
+        }
+    if kind == "rglru":
+        return {
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner),
+                              jnp.float32),
+            "h": jnp.zeros((batch, cfg.d_inner), jnp.float32),
+        }
+    if kind == "cross":
+        return {"xk": jnp.zeros((batch, cfg.n_memory, cfg.n_kv_heads,
+                                 cfg.head_dim), CACHE_DTYPE),
+                "xv": jnp.zeros((batch, cfg.n_memory, cfg.n_kv_heads,
+                                 cfg.head_dim), CACHE_DTYPE)}
+    if kind == "dec_self_cross":
+        return {
+            "self": _attn_cache(batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+            "cross": {"xk": jnp.zeros((batch, cfg.n_memory, cfg.n_kv_heads,
+                                       cfg.head_dim), CACHE_DTYPE),
+                      "xv": jnp.zeros((batch, cfg.n_memory, cfg.n_kv_heads,
+                                       cfg.head_dim), CACHE_DTYPE)},
+        }
+    if kind == "enc_self":
+        return None
+    raise ValueError(f"unknown block kind {kind}")
+
+
+# ====================================================================== #
+# cached attention primitives (slot-based: ring buffer for SWA)
+# ====================================================================== #
+def _project_qkv(p, x, cfg: ArchConfig, memory=None):
+    xc = x.astype(COMPUTE_DTYPE)
+    src = memory.astype(COMPUTE_DTYPE) if memory is not None else xc
+    q = jnp.einsum("btd,dhk->bthk", xc, p["wq"].astype(COMPUTE_DTYPE))
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(COMPUTE_DTYPE))
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(COMPUTE_DTYPE))
+    return q, k, v
+
+
+def _attn_out(p, out, b, t):
+    y = jnp.einsum("bthk,hkd->btd", out.astype(COMPUTE_DTYPE),
+                   p["wo"].astype(COMPUTE_DTYPE))
+    return y
+
+
+def attn3_params(key, cfg: ArchConfig) -> dict:
+    """Attention params in head-major 3D layout [D, H, dh] so head sharding
+    never crosses a reshape (see DESIGN.md sharding plan)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, h, kh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = 1.0 / math.sqrt(d)
+    return {
+        "wq": jax.random.normal(k1, (d, h, dh), jnp.float32) * s,
+        "wk": jax.random.normal(k2, (d, kh, dh), jnp.float32) * s,
+        "wv": jax.random.normal(k3, (d, kh, dh), jnp.float32) * s,
+        "wo": jax.random.normal(k4, (h, dh, d), jnp.float32)
+        * (1.0 / math.sqrt(h * dh)),
+    }
+
+
+def self_attention(
+    p: dict, x: jax.Array, cfg: ArchConfig, *,
+    causal: bool = True,
+    window: int | None = None,
+    cache: dict | None = None,
+    shard_act: Callable = Identity,
+) -> tuple[jax.Array, dict | None]:
+    b, t, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    if cfg.seq_shard_attn and not cfg.shard_attn:
+        # context parallelism: replicated-head archs (24 heads vs 16-wide
+        # model axis) otherwise recompute the quadratic attention on every
+        # model-axis device; shard the q-sequence instead
+        q = shard_act(q, "attn_q_seq")
+
+    if cache is None:
+        positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+        if cfg.rope_theta is not None:
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+        from repro.models.layers import attention_any
+        out = attention_any(q, k, v, causal=causal, window=window)
+        return _attn_out(p, out, b, t), None
+
+    # ---- cached path ----
+    cur = cache["len"]
+    positions = cur + jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    if cfg.rope_theta is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    clen = cache["k"].shape[1]
+
+    if t > 1:
+        # prefill into a (possibly ring) cache: attention over the fresh
+        # sequence itself (streaming/local for long T), then store the last
+        # `clen` keys/values.  Assumes prefill starts from an empty cache.
+        from repro.models.layers import attention_any
+        out = attention_any(q, k, v, causal=causal, window=window)
+        if t >= clen:
+            k_w, v_w = k[:, -clen:], v[:, -clen:]
+            pos_w = positions[:, -clen:]
+            slots = (cur + t - clen + jnp.arange(clen)) % clen
+        else:
+            k_w, v_w, pos_w = k, v, positions
+            slots = (cur + jnp.arange(t)) % clen
+        k_all = cache["k"].at[:, slots].set(k_w.astype(CACHE_DTYPE))
+        v_all = cache["v"].at[:, slots].set(v_w.astype(CACHE_DTYPE))
+        pos_all = cache["pos"].at[:, slots].set(pos_w.astype(jnp.int32))
+        new_cache = {"k": k_all, "v": v_all, "pos": pos_all, "len": cur + t}
+        return _attn_out(p, out, b, t), new_cache
+
+    # single-token decode: scatter into the slot, slot-position masking
+    slots = (cur + jnp.arange(t)) % clen
+    k_all = cache["k"].at[:, slots].set(k.astype(CACHE_DTYPE))
+    v_all = cache["v"].at[:, slots].set(v.astype(CACHE_DTYPE))
+    pos_all = cache["pos"].at[:, slots].set(positions.astype(jnp.int32))
+    new_cache = {"k": k_all, "v": v_all, "pos": pos_all, "len": cur + t}
+
+    h = q.shape[2]
+    kk = _expand_kv(k_all, h)
+    vv = _expand_kv(v_all, h)
+    sc = jnp.einsum("bthd,bshd->bhts", q.astype(COMPUTE_DTYPE),
+                    kk.astype(COMPUTE_DTYPE)).astype(jnp.float32)
+    sc = sc / math.sqrt(cfg.head_dim)
+    qpos = positions                                           # [b, t]
+    kpos = pos_all                                             # [b, clen]
+    valid = (kpos[:, None, :] >= 0) & (
+        kpos[:, None, :] <= qpos[:, :, None])
+    if window is not None:
+        valid &= kpos[:, None, :] > qpos[:, :, None] - window
+    sc = jnp.where(valid[:, None], sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("bhts,bshd->bthd", pr, vv.astype(COMPUTE_DTYPE))
+    return _attn_out(p, out, b, t), new_cache
+
+
+def cross_attention(
+    p: dict, x: jax.Array, cfg: ArchConfig, *,
+    memory: jax.Array | None,
+    cache: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    b, t, _ = x.shape
+    if cache is not None and memory is None:
+        # decode: cross-KV precomputed at prefill
+        xc = x.astype(COMPUTE_DTYPE)
+        q = jnp.einsum("btd,dhk->bthk", xc, p["wq"].astype(COMPUTE_DTYPE))
+        k, v = cache["xk"], cache["xv"]
+        out = dense_attention(q, k, v, causal=False)
+        return _attn_out(p, out, b, t), cache
+    q, k, v = _project_qkv(p, x, cfg, memory=memory)
+    out = dense_attention(q, k, v, causal=False)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"xk": k.astype(CACHE_DTYPE), "xv": v.astype(CACHE_DTYPE)}
+    return _attn_out(p, out, b, t), new_cache
+
+
+# ====================================================================== #
+# blocks
+# ====================================================================== #
+def block_init(key, cfg: ArchConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    gated = cfg.mlp_act in ("swiglu", "geglu")
+    p: dict = {}
+    if kind in ("dense", "self", "local_attn", "enc_self", "moe"):
+        p["ln_attn"] = norm_params(cfg.norm, d)
+        p["attn"] = attn3_params(ks[0], cfg)
+        if kind == "moe":
+            p["ln_moe"] = norm_params(cfg.norm, d)
+            p["moe"] = moe_lib.moe_params(
+                ks[1], d, cfg.d_ff, cfg.n_experts, gated)
+        else:
+            p["ln_mlp"] = norm_params(cfg.norm, d)
+            p["mlp"] = mlp_params(ks[1], d, cfg.d_ff, gated)
+    elif kind == "mamba":
+        p["ln"] = norm_params(cfg.norm, d)
+        p["mamba"] = ssm_lib.mamba_params(
+            ks[0], d, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv)
+    elif kind == "rglru":
+        p["ln_rec"] = norm_params(cfg.norm, d)
+        p["rglru"] = ssm_lib.rglru_params(ks[0], d, cfg.d_inner, cfg.ssm_conv)
+        p["ln_mlp"] = norm_params(cfg.norm, d)
+        p["mlp"] = mlp_params(ks[1], d, cfg.d_ff, gated)
+    elif kind == "cross":
+        p["ln_x"] = norm_params(cfg.norm, d)
+        p["xattn"] = attn3_params(ks[0], cfg)
+        p["xgate"] = jnp.zeros((), jnp.float32)   # llama-vision gated cross
+        p["ln_mlp"] = norm_params(cfg.norm, d)
+        p["mlp"] = mlp_params(ks[1], d, cfg.d_ff, gated)
+    elif kind == "dec_self_cross":
+        p["ln_attn"] = norm_params(cfg.norm, d)
+        p["attn"] = attn3_params(ks[0], cfg)
+        p["ln_x"] = norm_params(cfg.norm, d)
+        p["xattn"] = attn3_params(ks[1], cfg)
+        p["ln_mlp"] = norm_params(cfg.norm, d)
+        p["mlp"] = mlp_params(ks[2], d, cfg.d_ff, gated)
+    else:
+        raise ValueError(f"unknown block kind {kind}")
+    return p
+
+
+def block_apply(
+    p: dict, x: jax.Array, cfg: ArchConfig, kind: str, *,
+    cache: Any = None,
+    memory: jax.Array | None = None,
+    shard_act: Callable = Identity,
+) -> tuple[jax.Array, Any, jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("dense", "self", "local_attn", "moe", "enc_self"):
+        window = cfg.window if kind != "enc_self" else None
+        causal = kind != "enc_self"
+        h, new_cache = self_attention(
+            p["attn"], apply_norm(cfg.norm, p["ln_attn"], x), cfg,
+            causal=causal, window=window, cache=cache, shard_act=shard_act)
+        x = shard_act(x + h, "resid")
+        if kind == "moe":
+            if cfg.moe_row_dispatch:
+                h, aux = moe_lib.moe_apply_row(
+                    p["moe"], apply_norm(cfg.norm, p["ln_moe"], x),
+                    top_k=cfg.moe_top_k, act=cfg.mlp_act,
+                    shard_act=shard_act)
+            else:
+                h, aux = moe_lib.moe_apply(
+                    p["moe"], apply_norm(cfg.norm, p["ln_moe"], x),
+                    top_k=cfg.moe_top_k, act=cfg.mlp_act)
+        else:
+            h = mlp_apply(p["mlp"], apply_norm(cfg.norm, p["ln_mlp"], x),
+                          cfg.mlp_act)
+        x = shard_act(x + h, "resid")
+        return x, new_cache, aux
+    if kind == "mamba":
+        h, new_cache = ssm_lib.mamba_apply(
+            p["mamba"], apply_norm(cfg.norm, p["ln"], x),
+            d_state=cfg.ssm_state, dt_rank=cfg.dt_rank, cache=cache,
+            chunk=cfg.ssm_chunk, fused=cfg.ssm_fused_coeffs)
+        return shard_act(x + h, "resid"), new_cache, aux
+    if kind == "rglru":
+        h, new_cache = ssm_lib.rglru_apply(
+            p["rglru"], apply_norm(cfg.norm, p["ln_rec"], x), cache=cache)
+        x = shard_act(x + h, "resid")
+        h = mlp_apply(p["mlp"], apply_norm(cfg.norm, p["ln_mlp"], x),
+                      cfg.mlp_act)
+        return shard_act(x + h, "resid"), new_cache, aux
+    if kind == "cross":
+        h, new_cache = cross_attention(
+            p["xattn"], apply_norm(cfg.norm, p["ln_x"], x), cfg,
+            memory=memory, cache=cache)
+        x = shard_act(x + jnp.tanh(p["xgate"]).astype(h.dtype) * h, "resid")
+        h = mlp_apply(p["mlp"], apply_norm(cfg.norm, p["ln_mlp"], x),
+                      cfg.mlp_act)
+        return shard_act(x + h, "resid"), new_cache, aux
+    if kind == "dec_self_cross":
+        self_cache = cache["self"] if cache is not None else None
+        cross_cache = cache["cross"] if cache is not None else None
+        h, new_self = self_attention(
+            p["attn"], apply_norm(cfg.norm, p["ln_attn"], x), cfg,
+            causal=True, window=None, cache=self_cache, shard_act=shard_act)
+        x = shard_act(x + h, "resid")
+        h, new_cross = cross_attention(
+            p["xattn"], apply_norm(cfg.norm, p["ln_x"], x), cfg,
+            memory=memory, cache=cross_cache)
+        x = shard_act(x + h, "resid")
+        h = mlp_apply(p["mlp"], apply_norm(cfg.norm, p["ln_mlp"], x),
+                      cfg.mlp_act)
+        x = shard_act(x + h, "resid")
+        new_cache = None
+        if cache is not None:
+            new_cache = {"self": new_self, "cross": new_cross}
+        return x, new_cache, aux
+    raise ValueError(f"unknown block kind {kind}")
+
+
+# ====================================================================== #
+# stacks (scan over pattern groups + remainder layers)
+# ====================================================================== #
+def group_init(key, cfg: ArchConfig, pattern: tuple[str, ...]) -> dict:
+    ks = jax.random.split(key, len(pattern))
+    return {f"b{i}_{kind}": block_init(ks[i], cfg, kind)
+            for i, kind in enumerate(pattern)}
+
+
+def group_apply(p, x, cfg, pattern, *, caches=None, memory=None,
+                shard_act=Identity):
+    new_caches = {}
+    aux_tot = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(pattern):
+        key = f"b{i}_{kind}"
+        c = caches[key] if caches is not None else None
+        x, nc, aux = block_apply(
+            p[key], x, cfg, kind, cache=c, memory=memory,
+            shard_act=shard_act)
+        aux_tot = aux_tot + aux
+        if caches is not None:
+            new_caches[key] = nc
+    return x, (new_caches if caches is not None else None), aux_tot
+
+
+def stack_init(key, cfg: ArchConfig, pattern: tuple[str, ...],
+               n_layers: int) -> dict:
+    full = n_layers // len(pattern)
+    rem = n_layers % len(pattern)
+    kf, kr = jax.random.split(key)
+    out: dict = {}
+    if full:
+        out["groups"] = jax.vmap(
+            lambda k: group_init(k, cfg, pattern))(jax.random.split(kf, full))
+    if rem:
+        out["rem"] = group_init(kr, cfg, pattern[:rem])
+    return out
+
+
+def stack_cache(cfg: ArchConfig, pattern, n_layers, batch, max_len):
+    full = n_layers // len(pattern)
+    rem = n_layers % len(pattern)
+    out: dict = {}
+
+    def group_cache(pat):
+        return {f"b{i}_{kind}": block_cache(cfg, kind, batch, max_len)
+                for i, kind in enumerate(pat)}
+
+    if full:
+        one = group_cache(pattern)
+        out["groups"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (full,) + a.shape).copy(), one)
+    if rem:
+        out["rem"] = group_cache(pattern[:rem])
+    return out
+
+
+def stack_apply(
+    params: dict, x: jax.Array, cfg: ArchConfig, pattern, n_layers, *,
+    caches: dict | None = None,
+    memory: jax.Array | None = None,
+    shard_act: Callable = Identity,
+):
+    aux_tot = jnp.zeros((), jnp.float32)
+
+    def body(carry, xs):
+        h, aux = carry
+        if caches is not None:
+            gp, gc = xs
+        else:
+            gp, gc = xs, None
+        h, nc, a = group_apply(gp, h, cfg, pattern, caches=gc,
+                               memory=memory, shard_act=shard_act)
+        return (h, aux + a), nc
+
+    new_caches: dict = {}
+    if "groups" in params:
+        if cfg.remat and cfg.remat_policy == "dots":
+            # save matmul outputs across the remat boundary: trades group
+            # memory for not recomputing the heavy dots in backward
+            wrapped = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_saveable)
+        elif cfg.remat:
+            wrapped = jax.checkpoint(body)
+        else:
+            wrapped = body
+        xs = (params["groups"], caches["groups"]) if caches is not None \
+            else params["groups"]
+        if cfg.scan_layers:
+            (x, aux_tot), ncs = jax.lax.scan(wrapped, (x, aux_tot), xs)
+        else:
+            full = n_layers // len(pattern)
+            ncs_list = []
+            for i in range(full):
+                gxs = jax.tree.map(lambda a: a[i], xs)
+                (x, aux_tot), nc = wrapped((x, aux_tot), gxs)
+                ncs_list.append(nc)
+            ncs = jax.tree.map(lambda *a: jnp.stack(a), *ncs_list) \
+                if ncs_list and ncs_list[0] is not None else None
+        if caches is not None:
+            new_caches["groups"] = ncs
+    if "rem" in params:
+        rem = n_layers % len(pattern)
+        rc = caches["rem"] if caches is not None else None
+        x, nrc, a = group_apply(params["rem"], x, cfg, pattern[:rem],
+                                caches=rc, memory=memory, shard_act=shard_act)
+        aux_tot = aux_tot + a
+        if caches is not None:
+            new_caches["rem"] = nrc
+    return x, (new_caches if caches is not None else None), aux_tot
+
+
+# ====================================================================== #
+# full models
+# ====================================================================== #
+def lm_init(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    p: dict = {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model),
+        "stack": stack_init(ks[1], cfg, cfg.pattern, cfg.n_layers),
+        "ln_final": norm_params(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(
+            ks[2], (cfg.d_model, cfg.vocab), jnp.float32) \
+            / math.sqrt(cfg.d_model)
+    if cfg.encoder_layers:
+        p["encoder"] = {
+            "pos": jax.random.normal(
+                ks[3], (cfg.n_memory, cfg.d_model), jnp.float32) * 0.02,
+            "stack": stack_init(ks[4], cfg, ("enc_self",),
+                                cfg.encoder_layers),
+            "ln_final": norm_params(cfg.norm, cfg.d_model),
+        }
+        p["dec_pos"] = jax.random.normal(
+            ks[5], (cfg.max_decode_len, cfg.d_model), jnp.float32) * 0.02
+    return p
+
+
+def encode_memory(params, cfg: ArchConfig, frames: jax.Array,
+                  shard_act=Identity) -> jax.Array:
+    """Audio encoder (stub frontend supplies ``frames`` [B, n_mem, D])."""
+    enc = params["encoder"]
+    x = frames + enc["pos"][None]
+    x = x.astype(COMPUTE_DTYPE)
+    x, _, _ = stack_apply(enc["stack"], x, cfg, ("enc_self",),
+                          cfg.encoder_layers, shard_act=shard_act)
+    return apply_norm(cfg.norm, enc["ln_final"], x)
+
+
+def lm_apply(
+    params: dict,
+    cfg: ArchConfig,
+    tokens: jax.Array,                 # [B, T] int32
+    *,
+    caches: dict | None = None,
+    memory: jax.Array | None = None,   # [B, n_mem, D] stub embeddings
+    pos_offset: jax.Array | int = 0,   # decode: absolute position of t=0
+    shard_act: Callable = Identity,
+) -> tuple[jax.Array, dict | None, jax.Array]:
+    """Returns (logits [B, T, V], new_caches, aux_loss)."""
+    b, t = tokens.shape
+    if cfg.cast_params_bf16:
+        # one-time bf16 copy of the big weights per step: the scanned layer
+        # bodies then read 2-byte weights instead of re-reading fp32 and
+        # casting per layer (fp32 masters stay in the optimizer)
+        def _cast(path, leaf):
+            name = str(getattr(path[-1], "key", "")) if path else ""
+            if (leaf.dtype == jnp.float32 and leaf.ndim >= 2
+                    and name not in ("a_log", "conv_w")):
+                return leaf.astype(jnp.bfloat16)
+            return leaf
+        params = jax.tree_util.tree_map_with_path(_cast, params)
+    x = params["embed"][tokens]
+    if cfg.emb_scale:
+        x = x * math.sqrt(cfg.d_model)
+    if cfg.encoder_layers:
+        dp = jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos_offset, t,
+                                          axis=0)
+        x = x + dp[None]
+    x = shard_act(x.astype(COMPUTE_DTYPE), "resid")
+
+    x, new_caches, aux = stack_apply(
+        params["stack"], x, cfg, cfg.pattern, cfg.n_layers,
+        caches=caches, memory=memory, shard_act=shard_act)
+
+    x = apply_norm(cfg.norm, params["ln_final"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum(
+        "btd,dv->btv", x.astype(COMPUTE_DTYPE), head.astype(COMPUTE_DTYPE))
+    logits = shard_act(logits.astype(jnp.float32), "logits")
+    return logits, new_caches, aux
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array,
+            z_loss: float = 1e-4) -> tuple[jax.Array, dict]:
+    """Next-token CE (labels already shifted; -1 = masked) + z-loss."""
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, labels_safe[..., None], axis=-1)[..., 0] - logz
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = -(ll * mask).sum() / denom
+    zl = z_loss * ((logz ** 2) * mask).sum() / denom
+    return ce + zl, {"ce": ce, "z_loss": zl,
+                     "tokens": mask.sum()}

@@ -1,0 +1,87 @@
+"""AdamW with warmup+cosine schedule and global-norm clipping, built from
+scratch (no optax dependency).
+
+Optimizer state mirrors the parameter pytree, so it inherits the parameters'
+GSPMD sharding (FSDP params => ZeRO-sharded optimizer state for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(1.0, warmup)
+    prog = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup), 0, 1)
+    cos = peak_lr * (floor_frac + (1 - floor_frac) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+class AdamW:
+    def __init__(self, config: AdamWConfig = AdamWConfig()):
+        self.config = config
+
+    def init(self, params: Any) -> dict:
+        zeros = lambda t: jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), t)
+        return {"m": zeros(params), "v": zeros(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads: Any, state: dict, params: Any
+               ) -> tuple[Any, dict, dict]:
+        """Returns (new_params, new_state, stats)."""
+        c = self.config
+        step = state["step"] + 1
+        lr = cosine_schedule(step, peak_lr=c.peak_lr,
+                             warmup=c.warmup_steps, total=c.total_steps)
+
+        # global-norm clip (fp32)
+        gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                  for g in jax.tree.leaves(grads))
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, c.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+        b1c = 1.0 - c.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - c.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = c.b1 * m + (1 - c.b1) * g
+            v = c.b2 * v + (1 - c.b2) * g * g
+            mhat = m / b1c
+            vhat = v / b2c
+            step_ = mhat / (jnp.sqrt(vhat) + c.eps)
+            decay = c.weight_decay * p.astype(jnp.float32) \
+                if p.ndim >= 2 else 0.0   # no decay on norms/biases
+            new_p = p.astype(jnp.float32) - lr * (step_ + decay)
+            return new_p.astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v)
+               for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_state = {"m": tdef.unflatten([o[1] for o in out]),
+                     "v": tdef.unflatten([o[2] for o in out]),
+                     "step": step}
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,126 @@
+"""Fault-tolerant checkpointing.
+
+Design goals (scaled for 1000+ nodes, exercised here on CPU):
+  * atomic: a step directory is written under ``<step>.tmp`` and renamed
+    only after every leaf + manifest landed -- a crash mid-write can never
+    corrupt the latest checkpoint;
+  * mesh-agnostic: leaves are stored as full (unsharded) arrays keyed by
+    pytree path, so a restart may use a different mesh/device count -- the
+    loader re-shards via ``jax.device_put`` with the new sharding tree
+    (elastic restart);
+  * self-describing: ``manifest.json`` carries step, leaf paths, shapes and
+    dtypes for validation before any array is touched;
+  * bounded retention: ``keep`` newest checkpoints are retained.
+
+On a real multi-host pod each host would write only its addressable shards
+(per-shard files + a global manifest); the single-process layout here keeps
+the same API surface.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, tree) -> str:
+        flat = _flatten(tree)
+        tmp = os.path.join(self.dir, f"step_{step:09d}.tmp")
+        final = os.path.join(self.dir, f"step_{step:09d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "leaves": {}}
+        for key, leaf in flat.items():
+            arr = np.asarray(jax.device_get(leaf))
+            fname = key.replace("/", "__") + ".npy"
+            np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"][key] = {
+                "file": fname, "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+            }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+        return final
+
+    # ------------------------------------------------------------------ #
+    def latest_step(self) -> int | None:
+        steps = self._steps()
+        return steps[-1] if steps else None
+
+    def restore(self, tree_like, step: int | None = None,
+                shardings=None):
+        """Restore into the structure of ``tree_like`` (arrays or
+        ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+        NamedShardings for elastic re-sharding on load."""
+        steps = self._steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        step = steps[-1] if step is None else step
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+
+        flat_like = _flatten(tree_like)
+        flat_sh = _flatten(shardings) if shardings is not None else {}
+        missing = set(flat_like) - set(manifest["leaves"])
+        if missing:
+            raise ValueError(f"checkpoint missing leaves: {sorted(missing)[:5]}")
+
+        restored = {}
+        for key, spec in flat_like.items():
+            meta = manifest["leaves"][key]
+            if list(spec.shape) != meta["shape"]:
+                raise ValueError(
+                    f"shape mismatch for {key}: ckpt {meta['shape']} "
+                    f"vs expected {list(spec.shape)}")
+            arr = np.load(os.path.join(d, meta["file"]))
+            sh = flat_sh.get(key)
+            restored[key] = jax.device_put(arr, sh) if sh is not None \
+                else jax.numpy.asarray(arr)
+
+        # unflatten back into the original structure
+        paths, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+        keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                         for p in path) for path, _ in paths]
+        leaves = [restored[k] for k in keys]
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(tree_like), leaves), step
+
+    # ------------------------------------------------------------------ #
+    def _steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def _gc(self) -> None:
+        steps = self._steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                          ignore_errors=True)

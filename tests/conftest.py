@@ -1,0 +1,8 @@
+import os
+import sys
+
+# tests run single-device (the multi-device dry-run has its own subprocess
+# test); never inherit a forced device count from the environment
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,104 @@
+"""Hypothesis property tests on the cost model's invariants."""
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ALL_STRATEGIES,
+    AcceleratorConfig,
+    get_macro,
+    matmul_cost,
+    strategy_feasible,
+)
+from repro.core.cost_model import INFEASIBLE
+
+MACRO = get_macro("vanilla-dcim")
+
+cfg_st = st.builds(
+    AcceleratorConfig,
+    mr=st.integers(1, 4), mc=st.integers(1, 4),
+    scr=st.sampled_from([1, 2, 4, 8, 16, 32]),
+    is_kb=st.sampled_from([1, 2, 4, 8, 16, 32, 64, 128]),
+    os_kb=st.sampled_from([1, 2, 4, 8, 16, 32, 64]),
+    bw=st.just(256),
+)
+dims_st = st.tuples(st.integers(1, 96), st.integers(1, 700),
+                    st.integers(1, 500))
+
+
+def _cost(cfg, m, k, n, s):
+    return matmul_cost(
+        m, k, n, float(s.spatial == "R"), float(s.temporal == "WP"),
+        float(s.tiling == "PF"), cfg.mr, cfg.mc, cfg.scr, cfg.is_kb,
+        cfg.os_kb, cfg.bw, 1.0, MACRO)
+
+
+@settings(max_examples=40, deadline=None)
+@given(cfg=cfg_st, dims=dims_st)
+def test_af_reads_inputs_more_pf_writes_psums_more(cfg, dims):
+    """Paper Fig. 8: AF raises Input-SRAM overhead, PF raises Output-SRAM
+    overhead (per-strategy-pair, same scheduling)."""
+    m, k, n = dims
+    with jax.enable_x64(True):
+        af = _cost(cfg, m, k, n, ALL_STRATEGIES[0])   # NR-IP-AF
+        pf = _cost(cfg, m, k, n, ALL_STRATEGIES[1])   # NR-IP-PF
+    assert float(af.is_rd_bits) >= float(pf.is_rd_bits)
+    assert float(pf.os_wr_bits) >= float(af.os_wr_bits)
+
+
+@settings(max_examples=40, deadline=None)
+@given(cfg=cfg_st, dims=dims_st)
+def test_wp_streams_inputs_once(cfg, dims):
+    """Weight-priority keeps IS rows resident: streamed-matrix traffic under
+    WP never exceeds IP's."""
+    m, k, n = dims
+    s_ip, s_wp = ALL_STRATEGIES[0], ALL_STRATEGIES[2]
+    if not strategy_feasible(MACRO, cfg, m, k, n, s_wp):
+        return
+    with jax.enable_x64(True):
+        ip = _cost(cfg, m, k, n, s_ip)
+        wp = _cost(cfg, m, k, n, s_wp)
+    assert float(wp.v_ema_bits) <= float(ip.v_ema_bits)
+    # ... at the price of >= weight reloads
+    assert float(wp.s_ema_bits) >= float(ip.s_ema_bits)
+
+
+@settings(max_examples=40, deadline=None)
+@given(cfg=cfg_st, dims=dims_st)
+def test_latency_positive_and_energy_scales(cfg, dims):
+    m, k, n = dims
+    with jax.enable_x64(True):
+        cb = _cost(cfg, m, k, n, ALL_STRATEGIES[0])
+    lat, en = float(cb.latency_cycles), float(cb.energy_pj)
+    assert lat > 0 and en > 0
+    if lat < INFEASIBLE:
+        assert float(cb.macs) >= m * k * n           # padding only adds
+        assert float(cb.ema_bits) >= m * n * MACRO.dw_out  # outputs at least
+
+
+@settings(max_examples=30, deadline=None)
+@given(cfg=cfg_st, dims=dims_st)
+def test_bigger_buffers_never_increase_traffic(cfg, dims):
+    """Growing IS can only reduce (or keep) external streamed traffic."""
+    import dataclasses
+    m, k, n = dims
+    big = dataclasses.replace(cfg, is_kb=cfg.is_kb * 8)
+    with jax.enable_x64(True):
+        small_c = _cost(cfg, m, k, n, ALL_STRATEGIES[0])
+        big_c = _cost(big, m, k, n, ALL_STRATEGIES[0])
+    assert float(big_c.v_ema_bits) <= float(small_c.v_ema_bits)
+
+
+@settings(max_examples=30, deadline=None)
+@given(dims=dims_st, scr1=st.sampled_from([1, 2, 4]),
+       scale=st.sampled_from([2, 4, 8]))
+def test_bigger_scr_never_more_af_spill(dims, scr1, scale):
+    """More resident planes => fewer AF accumulation groups => less psum
+    spill (the SCR storage-vs-compute trade the paper optimizes)."""
+    m, k, n = dims
+    c1 = AcceleratorConfig(2, 2, scr1, 16, 4)
+    c2 = AcceleratorConfig(2, 2, scr1 * scale, 16, 4)
+    with jax.enable_x64(True):
+        a = _cost(c1, m, k, n, ALL_STRATEGIES[0])
+        b = _cost(c2, m, k, n, ALL_STRATEGIES[0])
+    assert float(b.spill_ema_bits) <= float(a.spill_ema_bits)

@@ -1,0 +1,66 @@
+"""Integration: the dry-run driver end-to-end on 8 fake devices (subprocess
+so the forced device count can't leak into other tests)."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import jax
+from jax.sharding import AxisType
+import repro.launch.mesh as meshmod
+# single pod: 4 devices; multi pod: 8 -> per-device work halves
+meshmod.make_production_mesh = lambda multi_pod=False: jax.make_mesh(
+    (2, 2, 2) if multi_pod else (2, 2),
+    ("pod", "data", "model") if multi_pod else ("data", "model"),
+    axis_types=(AxisType.Auto,) * (3 if multi_pod else 2))
+
+# shrink the arch so an 8-device compile is quick but structure is intact
+import repro.configs.base as base
+import dataclasses
+import repro.configs.yi_6b as yi
+yi.CONFIG = dataclasses.replace(
+    yi.CONFIG, n_layers=4, d_model=256, n_heads=8, n_kv_heads=4, head_dim=32,
+    d_ff=512, vocab=1024)
+base.SHAPES = {
+    "train_4k": base.ShapeSpec("train_4k", 256, 8, "train"),
+    "decode_32k": base.ShapeSpec("decode_32k", 1024, 8, "decode"),
+}
+
+from repro.launch.dryrun import run_cell
+out = {}
+for shape in ("train_4k", "decode_32k"):
+    for multi in (False, True):
+        rec = run_cell("yi-6b", shape, multi)
+        out[f"{shape}_{'m' if multi else 's'}"] = {
+            "status": rec["status"],
+            "flops": rec.get("dot_flops_per_device", 0),
+            "coll": rec.get("collectives", {}).get("total_bytes", 0),
+        }
+print("RESULT" + json.dumps(out))
+"""
+
+
+def test_dryrun_pipeline_on_8_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    env["DRYRUN_XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    assert all(v["status"] == "OK" for v in out.values()), out
+    # train must do more flops than decode; multi-pod halves per-device work
+    assert out["train_4k_s"]["flops"] > out["decode_32k_s"]["flops"]
+    ratio = out["train_4k_s"]["flops"] / max(out["train_4k_m"]["flops"], 1)
+    assert 1.5 < ratio < 2.5
+    # sharded train step must exchange gradients
+    assert out["train_4k_s"]["coll"] > 0

@@ -1,0 +1,120 @@
+"""Pruning + SA + exhaustive co-exploration tests."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    AcceleratorConfig,
+    DesignSpace,
+    SASettings,
+    co_explore,
+    evaluate_config,
+    get_macro,
+    prune_space,
+)
+from repro.core.ir import bert_large_workload
+from repro.core.macro import TPDCIM_MACRO
+
+SMALL = DesignSpace(mr=(1, 2, 3), mc=(1, 2), scr=(1, 4, 16),
+                    is_kb=(2, 16, 128), os_kb=(2, 16, 64))
+
+
+def test_prune_space_counts():
+    cands, stats = prune_space(SMALL, get_macro("vanilla-dcim"),
+                               area_budget_mm2=3.0)
+    assert stats["raw"] == SMALL.size == 3 * 2 * 3 * 3 * 3
+    assert stats["kept"] == len(cands)
+    assert stats["kept"] + stats["bandwidth_pruned"] + \
+        stats["area_pruned"] == stats["raw"]
+    assert stats["pruned_fraction"] > 0.0
+    # every surviving candidate respects the budget + bandwidth rule
+    from repro.core.template import accelerator_area_mm2, bandwidth_ok
+    for row in cands:
+        cfg = AcceleratorConfig(*[int(x) for x in row])
+        assert accelerator_area_mm2(cfg, get_macro("vanilla-dcim")) <= 3.0
+        assert bandwidth_ok(cfg, get_macro("vanilla-dcim"))
+
+
+def test_fixed_axes():
+    s = SMALL.fix(mr=2, scr=16)
+    assert s.mr == (2,) and s.scr == (16,)
+    assert s.mc == SMALL.mc
+
+
+def test_sa_matches_exhaustive_on_small_space():
+    wl = bert_large_workload()
+    kw = dict(macro=TPDCIM_MACRO, workload=wl, area_budget_mm2=2.23,
+              objective="ee", space=SMALL)
+    ex = co_explore(method="exhaustive", **kw)
+    sa = co_explore(method="sa",
+                    sa_settings=SASettings(n_chains=24, n_steps=120, seed=1),
+                    **kw)
+    # SA must reach within 1% of the exhaustive optimum
+    assert sa.metrics["energy_pj"] <= ex.metrics["energy_pj"] * 1.01
+    assert ex.config.scr >= 1
+
+
+def test_objectives_differ():
+    wl = bert_large_workload()
+    ee = co_explore(TPDCIM_MACRO, wl, 2.23, objective="ee",
+                    method="exhaustive", space=SMALL)
+    th = co_explore(TPDCIM_MACRO, wl, 2.23, objective="th",
+                    method="exhaustive", space=SMALL)
+    assert th.metrics["gops"] >= ee.metrics["gops"] * 0.999
+    assert ee.metrics["tops_w"] >= th.metrics["tops_w"] * 0.999
+
+
+def test_st_dominates_so():
+    """CIM-Tuner's scheduling+tiling space contains [19]'s spatial-only
+    space, so the per-config optimum can only improve (Fig. 7 mechanism)."""
+    wl = bert_large_workload()
+    cfg = AcceleratorConfig(2, 2, 8, 16, 16)
+    st_m = evaluate_config(TPDCIM_MACRO, cfg, wl, strategy_set="st")
+    so_m = evaluate_config(TPDCIM_MACRO, cfg, wl, strategy_set="so")
+    assert st_m["energy_pj"] <= so_m["energy_pj"] * (1 + 1e-9)
+    assert st_m["latency_cycles"] <= so_m["latency_cycles"] * (1 + 1e-9)
+
+
+def test_budget_respected():
+    wl = bert_large_workload()
+    res = co_explore(TPDCIM_MACRO, wl, 2.0, method="exhaustive", space=SMALL)
+    assert res.metrics["area_mm2"] <= 2.0 + 1e-6
+
+
+def test_per_op_strategies_reported():
+    wl = bert_large_workload()
+    res = co_explore(TPDCIM_MACRO, wl, 2.23, method="exhaustive", space=SMALL)
+    assert len(res.per_op_strategy) == len(wl.merged().ops)
+    for v in res.per_op_strategy.values():
+        assert v.count("-") == 2
+
+
+def test_macro_library_co_exploration():
+    """Outer macro-family selection on top of the paper's co-exploration."""
+    from repro.core import co_explore_macros, get_macro
+    wl = bert_large_workload()
+    macros = [get_macro("vanilla-dcim"), get_macro("lcc-cim")]
+    best, results = co_explore_macros(
+        macros, wl, 3.0, objective="ee", method="exhaustive", space=SMALL)
+    assert len(results) == 2
+    assert best.metrics["tops_w"] == max(r.metrics["tops_w"] for r in results)
+    assert best.metrics["area_mm2"] <= 3.0 + 1e-6
+
+
+def test_pareto_frontier_monotone_and_contains_extremes():
+    from repro.core.explorer import pareto_explore
+    from repro.core import get_macro
+    wl = bert_large_workload()
+    macro = get_macro("vanilla-dcim")
+    fr = pareto_explore(macro, wl, 5.0, space=SMALL)
+    assert len(fr) >= 1
+    gops = [p["gops"] for p in fr]
+    ee = [p["tops_w"] for p in fr]
+    assert all(a >= b for a, b in zip(gops, gops[1:]))   # gops decreasing
+    assert all(a <= b for a, b in zip(ee, ee[1:]))       # ee increasing
+    # endpoints at least as good as single-objective exhaustive optima
+    ee_opt = co_explore(macro, wl, 5.0, objective="ee", method="exhaustive",
+                        space=SMALL)
+    th_opt = co_explore(macro, wl, 5.0, objective="th", method="exhaustive",
+                        space=SMALL)
+    assert ee[-1] >= ee_opt.metrics["tops_w"] * 0.999
+    assert gops[0] >= th_opt.metrics["gops"] * 0.999

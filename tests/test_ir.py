@@ -1,0 +1,66 @@
+"""Operator IR + size-aware merging tests."""
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.core.ir import MatmulOp, Workload, bert_large_workload
+
+
+def test_merge_preserves_totals():
+    wl = Workload("t", (
+        MatmulOp(128, 256, 512), MatmulOp(128, 256, 512, count=3),
+        MatmulOp(64, 64, 64), MatmulOp(128, 256, 512, weights_static=False),
+    ))
+    m = wl.merged()
+    assert m.total_macs == wl.total_macs
+    assert len(m.ops) == 3          # same-size static ops gathered
+    merged_op = [o for o in m.ops if o.weights_static and o.m == 128][0]
+    assert merged_op.count == 4
+
+
+def test_merge_is_idempotent():
+    wl = bert_large_workload().merged()
+    assert wl.merged() == wl
+
+
+def test_bert_large_shape():
+    wl = bert_large_workload()
+    # 24 layers x (qkv + attn + ffn): merged to a handful of unique sizes
+    assert 3 <= len(wl.ops) <= 8
+    assert wl.total_macs > 1e11
+
+
+def test_invalid_op():
+    with pytest.raises(ValueError):
+        MatmulOp(0, 1, 1)
+    with pytest.raises(ValueError):
+        Workload("empty", ())
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_arch_workload_extraction(arch_id):
+    """Every assigned architecture yields a CIM-Tuner workload (the
+    technique applies to all 10 -- DESIGN.md Arch-applicability)."""
+    cfg = get_arch(arch_id)
+    wl = cfg.workload(seq=512)
+    assert len(wl.ops) >= 3
+    assert wl.total_macs > 0
+    # act x act attention GEMMs flagged dynamic for attention archs
+    if cfg.family not in ("ssm",):
+        assert any(not op.weights_static for op in wl.ops)
+    # merging keeps totals
+    assert wl.merged().total_macs == wl.total_macs
+
+
+def test_moe_merging_gathers_experts():
+    g = get_arch("granite-moe-3b-a800m")
+    wl = g.workload(seq=512)
+    moe_ops = [o for o in wl.ops if o.n == 512 or o.k == 512]
+    assert moe_ops and all(o.count >= 32 for o in moe_ops)
+
+
+def test_as_arrays_padding():
+    wl = bert_large_workload().merged()
+    arr = wl.as_arrays(pad_to=len(wl.ops) + 5)
+    assert arr.shape == (len(wl.ops) + 5, 5)
+    assert (arr[len(wl.ops):, 3] == 0).all()      # count sentinel
+    assert (arr[len(wl.ops):, :3] == 1).all()     # dims stay positive

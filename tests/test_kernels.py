@@ -1,0 +1,123 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret=True
+executes the kernel bodies on CPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("tiling", ["AF", "PF"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(64, 64, 64), (200, 300, 250),
+                                   (128, 128, 128), (1, 700, 130),
+                                   (257, 129, 255)])
+def test_cim_matmul_sweep(tiling, dtype, shape):
+    m, k, n = shape
+    a = jnp.asarray(RNG.standard_normal((m, k)), dtype)
+    b = jnp.asarray(RNG.standard_normal((k, n)), dtype)
+    got = ops.cim_matmul(a, b, tiling=tiling, interpret=True)
+    want = ref.matmul_ref(a, b)
+    tol = 1e-4 if dtype == jnp.float32 else 0.2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol)
+
+
+def test_cim_matmul_af_pf_psum_width():
+    """PF accumulates at output width (dw_psum analogue): in bf16 the AF
+    result (f32 VMEM accumulator) is at least as accurate as PF's HBM
+    round-trips -- the numeric face of the paper's psum trade-off."""
+    m, k, n = 128, 2048, 128
+    a = jnp.asarray(RNG.standard_normal((m, k)), jnp.bfloat16)
+    b = jnp.asarray(RNG.standard_normal((k, n)), jnp.bfloat16)
+    exact = np.asarray(ref.matmul_ref(a, b, out_dtype=jnp.float32))
+    af = np.asarray(ops.cim_matmul(a, b, tiling="AF", interpret=True),
+                    np.float32)
+    pf = np.asarray(ops.cim_matmul(a, b, tiling="PF", interpret=True),
+                    np.float32)
+    err_af = np.abs(af - exact).mean()
+    err_pf = np.abs(pf - exact).mean()
+    assert err_af <= err_pf + 1e-6
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("shape", [(2, 128, 128, 64), (1, 200, 300, 64),
+                                   (3, 129, 257, 128)])
+def test_flash_attention_sweep(causal, shape):
+    bh, t, s, d = shape
+    q = jnp.asarray(RNG.standard_normal((bh, t, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((bh, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((bh, s, d)), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(RNG.standard_normal((2, 256, 64)), jnp.bfloat16)
+    k = jnp.asarray(RNG.standard_normal((2, 256, 64)), jnp.bfloat16)
+    v = jnp.asarray(RNG.standard_normal((2, 256, 64)), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=3e-2)
+
+
+def test_strategy_eval_vs_ref_and_explorer():
+    from repro.core.ir import bert_large_workload
+    from repro.core.macro import get_macro
+    from repro.core.pruning import (DesignSpace, candidates_with_bw,
+                                    enumerate_space)
+    from repro.core import cost_model
+
+    cands = candidates_with_bw(enumerate_space(DesignSpace(
+        mr=(1, 2), mc=(1, 2), scr=(1, 4, 16), is_kb=(4, 64),
+        os_kb=(4, 64))), 256)
+    wl = bert_large_workload().merged().as_arrays()
+    macro = get_macro("vanilla-dcim")
+    got = np.asarray(ops.strategy_eval(cands, wl, macro, interpret=True))
+    want = np.asarray(ref.strategy_eval_ref(cands, wl, macro))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+    # and against the explorer's objective function (same math end-to-end)
+    fn = cost_model.make_objective_fn(jnp.asarray(wl), macro)
+    v0 = float(fn(jnp.asarray(cands[17], jnp.float32)))
+    np.testing.assert_allclose(got[17], v0, rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(1, 64, 32, 8), (2, 100, 48, 16),
+                                   (1, 33, 17, 4)])
+def test_selective_scan_kernel_sweep(shape):
+    b, t, i, s = shape
+    xi = jnp.asarray(RNG.standard_normal((b, t, i)), jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.standard_normal((b, t, i))) * 0.1,
+                     jnp.float32)
+    bm = jnp.asarray(RNG.standard_normal((b, t, s)), jnp.float32)
+    cm = jnp.asarray(RNG.standard_normal((b, t, s)), jnp.float32)
+    a = jnp.asarray(-np.abs(RNG.standard_normal((i, s))), jnp.float32)
+    h0 = jnp.asarray(RNG.standard_normal((b, i, s)), jnp.float32)
+    y, hl = ops.selective_scan(xi, dt, bm, cm, a, h0, ct=16, ci=16,
+                               interpret=True)
+    y_ref, h_ref = ref.selective_scan_ref(xi, dt, bm, cm, a, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(h_ref), atol=1e-3)
+
+
+def test_selective_scan_kernel_bf16():
+    b, t, i, s = 1, 64, 32, 8
+    xi = jnp.asarray(RNG.standard_normal((b, t, i)), jnp.bfloat16)
+    dt = jnp.asarray(np.abs(RNG.standard_normal((b, t, i))) * 0.1,
+                     jnp.bfloat16)
+    bm = jnp.asarray(RNG.standard_normal((b, t, s)), jnp.bfloat16)
+    cm = jnp.asarray(RNG.standard_normal((b, t, s)), jnp.bfloat16)
+    a = jnp.asarray(-np.abs(RNG.standard_normal((i, s))), jnp.float32)
+    h0 = jnp.zeros((b, i, s), jnp.float32)
+    y, _ = ops.selective_scan(xi, dt, bm, cm, a, h0, ct=16, ci=16,
+                              interpret=True)
+    y_ref, _ = ref.selective_scan_ref(
+        xi.astype(jnp.float32), dt.astype(jnp.float32),
+        bm.astype(jnp.float32), cm.astype(jnp.float32), a, h0)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref), atol=0.15)

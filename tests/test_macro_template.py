@@ -1,0 +1,78 @@
+"""Matrix abstraction (eqns 1-5) + generalized template unit tests."""
+import math
+
+import pytest
+
+from repro.core import (
+    DEFAULT_TECH,
+    AcceleratorConfig,
+    MACRO_LIBRARY,
+    accelerator_area_mm2,
+    get_macro,
+)
+from repro.core.macro import MacroSpec, TRANCIM_MACRO, TPDCIM_MACRO, VANILLA_DCIM
+from repro.core.template import bandwidth_ok, peak_tops
+
+
+def test_silicon_macro_latencies():
+    # paper Sec. IV-E: (AL, PC, SCR, ICW, WUW) = (64, 8, 8, 512, 128)
+    m = VANILLA_DCIM
+    assert (m.al, m.pc, m.native_scr, m.icw, m.wuw) == (64, 8, 8, 512, 128)
+    # eq (3): DW_in / N_bitline = 8 / (512/64) = 1 cycle
+    assert m.compute_cycles() == 1
+    # eq (5): AL * DW_w / WUW = 64*8/128 = 4 cycles
+    assert m.update_cycles() == 4
+
+
+def test_acim_icw_semantics():
+    m = get_macro("acim-2b-dac")   # ICW = AL * DAC precision (eq. 2)
+    assert m.icw == m.al * 2
+    assert m.compute_cycles() == math.ceil(m.dw_in * m.al / m.icw) == 4
+
+
+def test_macro_validation():
+    with pytest.raises(ValueError):
+        MacroSpec(name="bad", al=0, pc=8, native_scr=1, icw=64, wuw=64)
+    with pytest.raises(ValueError):
+        MacroSpec(name="bad", al=64, pc=8, native_scr=1, icw=64, wuw=64,
+                  kind="rram")
+
+
+def test_library_complete():
+    assert {"vanilla-dcim", "fpcim", "lcc-cim", "trancim-macro",
+            "tpdcim-macro"} <= set(MACRO_LIBRARY)
+
+
+def test_table2_baseline_areas_calibrated():
+    # Table II baselines must land on their published areas (fit check)
+    tran = accelerator_area_mm2(
+        AcceleratorConfig(3, 1, 1, 64, 128), TRANCIM_MACRO)
+    tp = accelerator_area_mm2(
+        AcceleratorConfig(2, 4, 1, 16, 16), TPDCIM_MACRO)
+    assert abs(tran - 3.52) / 3.52 < 0.01
+    assert abs(tp - 2.23) / 2.23 < 0.01
+
+
+def test_area_monotone_in_every_axis():
+    base = AcceleratorConfig(2, 2, 4, 16, 16)
+    a0 = accelerator_area_mm2(base, VANILLA_DCIM)
+    import dataclasses
+    for field in ("mr", "mc", "scr", "is_kb", "os_kb"):
+        bigger = dataclasses.replace(base, **{field: getattr(base, field) * 2})
+        assert accelerator_area_mm2(bigger, VANILLA_DCIM) > a0, field
+
+
+def test_bandwidth_pruning_rule():
+    # Sec. III-D: internal bandwidth below BW is eliminated
+    m = VANILLA_DCIM   # icw=512, wuw=128
+    ok = AcceleratorConfig(1, 2, 1, 16, 16, bw=256)   # wuw*mr*mc=256 >= 256
+    bad = AcceleratorConfig(1, 1, 1, 16, 16, bw=256)  # wuw agg = 128 < 256
+    assert bandwidth_ok(ok, m)
+    assert not bandwidth_ok(bad, m)
+
+
+def test_peak_tops_scaling():
+    c1 = AcceleratorConfig(1, 1, 1, 16, 16)
+    c4 = AcceleratorConfig(2, 2, 1, 16, 16)
+    assert peak_tops(c4, VANILLA_DCIM) == pytest.approx(
+        4 * peak_tops(c1, VANILLA_DCIM))

@@ -1,0 +1,69 @@
+"""Cycle simulator: sandwich bounds vs the closed form + pipeline sanity."""
+import jax
+import numpy as np
+
+from repro.core import (
+    ALL_STRATEGIES,
+    AcceleratorConfig,
+    analytic_latency_bounds,
+    compile_schedule,
+    get_macro,
+    matmul_cost,
+    simulate_schedule,
+    strategy_feasible,
+)
+
+
+def test_sandwich_bounds():
+    macro = get_macro("vanilla-dcim")
+    rng = np.random.default_rng(3)
+    n_checked = 0
+    with jax.enable_x64(True):
+        for _ in range(10):
+            cfg = AcceleratorConfig(
+                int(rng.integers(1, 4)), int(rng.integers(1, 4)),
+                int(2 ** rng.integers(0, 5)), int(2 ** rng.integers(1, 7)),
+                int(2 ** rng.integers(0, 6)), bw=256)
+            m, k, n = (int(rng.integers(4, 64)), int(rng.integers(16, 400)),
+                       int(rng.integers(16, 300)))
+            for s in ALL_STRATEGIES[:4]:
+                if not strategy_feasible(macro, cfg, m, k, n, s):
+                    continue
+                rec = compile_schedule(macro, cfg, m, k, n, s)
+                lb, ub = analytic_latency_bounds(rec, cfg.bw)
+                for overlap in (True, False):
+                    sim = simulate_schedule(rec, cfg.bw, overlap)
+                    lat = sim["latency_cycles"]
+                    assert lb - 1e-6 <= lat <= ub * (1 + 1e-9), (
+                        s, cfg.as_tuple(), (m, k, n), overlap, lb, lat, ub)
+                # closed-form analytic also lies within the same bounds
+                cb = matmul_cost(
+                    m, k, n, float(s.spatial == "R"),
+                    float(s.temporal == "WP"), float(s.tiling == "PF"),
+                    cfg.mr, cfg.mc, cfg.scr, cfg.is_kb, cfg.os_kb, cfg.bw,
+                    1.0, macro)
+                # overlapped closed form == max of the three sums
+                # (up to per-set vs global ceil on the bus term)
+                assert float(cb.latency_cycles) <= ub * (1 + 1e-9) + \
+                    len(rec["planes"])
+                n_checked += 1
+    assert n_checked >= 15
+
+
+def test_overlap_never_slower():
+    macro = get_macro("vanilla-dcim")
+    cfg = AcceleratorConfig(2, 2, 4, 16, 8)
+    rec = compile_schedule(macro, cfg, 40, 300, 200, ALL_STRATEGIES[0])
+    with_ov = simulate_schedule(rec, cfg.bw, True)["latency_cycles"]
+    without = simulate_schedule(rec, cfg.bw, False)["latency_cycles"]
+    assert with_ov <= without
+
+
+def test_utilization_fields():
+    macro = get_macro("vanilla-dcim")
+    cfg = AcceleratorConfig(2, 2, 4, 16, 8)
+    rec = compile_schedule(macro, cfg, 40, 300, 200, ALL_STRATEGIES[0])
+    sim = simulate_schedule(rec, cfg.bw, True)
+    assert 0 < sim["compute_utilization"] <= 1.0
+    assert 0 < sim["bus_utilization"] <= 1.0
+    assert sim["n_sets"] == len(rec["planes"])

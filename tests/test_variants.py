@@ -1,0 +1,111 @@
+"""Perf-variant paths must be numerically equivalent to the baselines
+(the Sec. Perf A/B comparisons are only meaningful if they are)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.models.moe import moe_apply, moe_apply_row, moe_params
+from repro.models.ssm import mamba_apply, mamba_params
+
+
+def test_moe_row_dispatch_matches_global():
+    key = jax.random.PRNGKey(0)
+    p = moe_params(key, 32, 64, 4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 20, 32), jnp.float32)
+    y1, a1 = moe_apply(p, x, top_k=2)
+    y2, a2 = moe_apply_row(p, x, top_k=2)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), atol=1e-2)
+    np.testing.assert_allclose(float(a1), float(a2), rtol=1e-5)
+
+
+def test_fused_selective_scan_matches_unfused():
+    key = jax.random.PRNGKey(0)
+    p = mamba_params(key, 32, 64, 8, 4)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 100, 32), jnp.float32)
+    y1, _ = mamba_apply(p, x, d_state=8, dt_rank=4, chunk=16, fused=False)
+    y2, _ = mamba_apply(p, x, d_state=8, dt_rank=4, chunk=16, fused=True)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), atol=1e-2)
+
+
+def test_fused_scan_chunk_invariance():
+    key = jax.random.PRNGKey(3)
+    p = mamba_params(key, 16, 32, 4, 4)
+    x = jax.random.normal(key, (1, 70, 16), jnp.float32)
+    outs = [np.asarray(mamba_apply(p, x, d_state=4, dt_rank=4, chunk=c,
+                                   fused=True)[0], np.float32)
+            for c in (8, 32, 128)]
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-3)
+    np.testing.assert_allclose(outs[0], outs[2], atol=1e-3)
+
+
+@pytest.mark.parametrize("overrides", [
+    {"cast_params_bf16": True},
+    {"remat_policy": "dots"},
+    {"seq_shard_attn": True},
+    {"moe_row_dispatch": True},
+])
+def test_variant_loss_close_to_baseline(overrides):
+    base = get_arch("granite-moe-3b-a800m").reduced()
+    key = jax.random.PRNGKey(0)
+    m0 = build_model(base)
+    params = m0.init(key)
+    batch = {"tokens": jax.random.randint(key, (2, 16), 0, base.vocab),
+             "labels": jax.random.randint(key, (2, 16), 0, base.vocab)}
+    l0, _ = jax.jit(m0.loss)(params, batch)
+    m1 = build_model(dataclasses.replace(base, **overrides))
+    l1, _ = jax.jit(m1.loss)(params, batch)
+    assert abs(float(l0) - float(l1)) < 0.05, overrides
+
+
+def test_variants_registry_is_valid():
+    """Every --variant override must be a real ArchConfig field."""
+    from repro.configs.base import ArchConfig
+    from repro.launch.dryrun import VARIANTS
+    fields = {f.name for f in dataclasses.fields(ArchConfig)}
+    for name, ov in VARIANTS.items():
+        assert set(ov) <= fields, (name, set(ov) - fields)
+
+
+def test_grads_flow_through_variants():
+    cfg = dataclasses.replace(
+        get_arch("falcon-mamba-7b").reduced(),
+        ssm_fused_coeffs=True, cast_params_bf16=True)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = {"tokens": jax.random.randint(key, (2, 24), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (2, 24), 0, cfg.vocab)}
+    grads = jax.jit(jax.grad(lambda p: model.loss(p, batch)[0]))(params)
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+def test_microbatch_grads_match_full_batch():
+    """Gradient accumulation must be numerically equivalent to the full
+    batch (same update, ~float tolerance)."""
+    from repro.launch.steps import make_train_step
+    from repro.optim import AdamW
+
+    cfg = get_arch("yi-6b").reduced()
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    opt = AdamW()
+    batch = {"tokens": jax.random.randint(key, (4, 16), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (4, 16), 0, cfg.vocab)}
+    p1, _, m1 = jax.jit(make_train_step(model, opt))(
+        params, opt.init(params), batch)
+    p2, _, m2 = jax.jit(make_train_step(model, opt, microbatches=2))(
+        params, opt.init(params), batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=1e-4)
