@@ -8,7 +8,6 @@ the reverse; with the limited 128 KB OS, PF spills partial sums to external
 memory (EMA), which blows up energy -- worse for the short-AL macro."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_line, timed

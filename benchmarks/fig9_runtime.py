@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 
 from benchmarks.common import SEVEN_WORKLOADS, csv_line, geomean, get_workload, timed
-from repro.core import DesignSpace, SASettings, co_explore, get_macro, prune_space
+from repro.core import DesignSpace, SASettings, get_macro, prune_space
 from repro.core.ir import Workload
 
 SA = SASettings(n_chains=16, n_steps=80, seed=0)

@@ -12,13 +12,12 @@ import sys
 sys.path.insert(0, "src")
 
 import jax
-from jax.sharding import AxisType
 
+from repro.compat import make_mesh
 from repro.core import SASettings, distributed_co_explore, get_macro
 from repro.core.ir import bert_large_workload
 
-mesh = jax.make_mesh((jax.device_count(),), ("data",),
-                     axis_types=(AxisType.Auto,))
+mesh = make_mesh((jax.device_count(),), ("data",))
 print(f"mesh: {jax.device_count()} device(s)")
 
 res = distributed_co_explore(

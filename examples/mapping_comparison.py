@@ -2,6 +2,10 @@
 tiling space (ST) vs the spatial-only space of prior work [19] (SO), under
 identical co-exploration.
 
+All four (strategy-set x objective) explorations are submitted to the
+batched engine as ONE job list, so they share a single compiled executable
+instead of re-jitting per call.
+
     PYTHONPATH=src python examples/mapping_comparison.py [arch-id]
 """
 import sys
@@ -9,7 +13,7 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.configs import get_arch
-from repro.core import co_explore, get_macro
+from repro.core import ExplorationEngine, ExploreJob, get_macro
 
 arch = sys.argv[1] if len(sys.argv) > 1 else "yi-6b"
 wl = get_arch(arch).workload(seq=512)
@@ -17,12 +21,18 @@ macro = get_macro("vanilla-dcim")
 
 print(f"workload: {arch} ({len(wl.ops)} merged GEMM shapes, "
       f"{wl.total_macs/1e9:.1f} GMACs)")
+
+engine = ExplorationEngine()
+jobs = [ExploreJob(macro, wl, 5.0, objective=obj, strategy_set=sset)
+        for sset in ("so", "st") for obj in ("ee", "th")]
+results = engine.run(jobs, method="exhaustive")
+by_key = {(j.strategy_set, j.objective): r for j, r in zip(jobs, results)}
+print(f"(engine: {len(jobs)} jobs in {results[0].search['runtime_s']:.1f}s, "
+      f"{engine.stats['batches']} batch(es))")
+
 for sset, label in (("so", "SO (spatial-only, prior work [19])"),
                     ("st", "ST (CIM-Tuner: scheduling + tiling)")):
-    ee = co_explore(macro, wl, 5.0, objective="ee", strategy_set=sset,
-                    method="exhaustive")
-    th = co_explore(macro, wl, 5.0, objective="th", strategy_set=sset,
-                    method="exhaustive")
+    ee, th = by_key[(sset, "ee")], by_key[(sset, "th")]
     print(f"\n{label}")
     print(f"  best-EE {ee.config.as_tuple()}: "
           f"{ee.metrics['tops_w']:.2f} TOPS/W")

@@ -9,6 +9,8 @@ Public API:
     compile_schedule / compile_trace / replay_trace -- instruction flows
     simulate_schedule               -- cycle simulator
     co_explore / evaluate_config    -- the co-exploration tool
+    ExplorationEngine / ExploreJob  -- batched multi-job engine (shared
+                                       compiled executables + caching)
     distributed_co_explore          -- multi-pod DSE (shard_map)
 """
 from repro.core.calibration import DEFAULT_TECH, TechConstants
@@ -27,6 +29,9 @@ from repro.core.cost_model import (
     workload_metrics,
 )
 from repro.core.distributed import DistributedResult, distributed_co_explore
+from repro.core.engine import (ExplorationEngine, ExploreJob,
+                               default_engine,
+                               enable_persistent_compilation_cache)
 from repro.core.explorer import (ExploreResult, co_explore,
                                  co_explore_macros, evaluate_config,
                                  pareto_explore)
@@ -53,5 +58,7 @@ __all__ = [
     "SASettings", "simulated_annealing", "exhaustive_search",
     "co_explore", "co_explore_macros", "pareto_explore",
     "evaluate_config", "ExploreResult",
+    "ExplorationEngine", "ExploreJob", "default_engine",
+    "enable_persistent_compilation_cache",
     "distributed_co_explore", "DistributedResult",
 ]

@@ -54,17 +54,30 @@ def _axes_matrix(space: DesignSpace) -> tuple[np.ndarray, np.ndarray]:
     return mat, lens
 
 
-def simulated_annealing(
+def make_chain_keys(settings: SASettings, key: jax.Array | None = None):
+    """[n_chains, 2, key] RNG block: (init key, step key) per chain."""
+    if key is None:
+        key = jax.random.PRNGKey(settings.seed)
+    return jax.random.split(key, settings.n_chains * 2).reshape(
+        settings.n_chains, 2, -1
+    )
+
+
+def anneal(
     objective_fn,              # cfg_row[6] -> scalar (lower is better)
-    space: DesignSpace,
-    bw: int,
-    settings: SASettings = SASettings(),
-    key: jax.Array | None = None,
-) -> SAResult:
-    mat, lens = _axes_matrix(space)
-    mat_j = jnp.asarray(mat)
-    lens_j = jnp.asarray(lens)
-    bw_f = jnp.asarray(float(bw))
+    mat_j,                     # [5, L] padded axis-value matrix
+    lens_j,                    # [5] true axis lengths
+    bw_f,                      # () external bus bandwidth (appended to cfg)
+    settings: SASettings,
+    chain_keys,                # [n_chains, 2, key] from make_chain_keys
+):
+    """Pure vectorized-chain SA walk -- every operand may be traced, so the
+    batched engine can ``vmap`` this over a stacked job axis (per-job axis
+    matrices, bandwidths and objectives) inside one jitted executable.
+
+    Returns (best_idx [chains, 5], best_val [chains], hists [chains, steps]).
+    """
+    bw_f = jnp.asarray(bw_f)
 
     def cfg_of(idx):
         vals = mat_j[jnp.arange(5), idx]
@@ -111,15 +124,28 @@ def simulated_annealing(
         )
         return best_idx, best_val, best_hist
 
-    if key is None:
-        key = jax.random.PRNGKey(settings.seed)
-    chain_keys = jax.random.split(key, settings.n_chains * 2).reshape(
-        settings.n_chains, 2, -1
+    return jax.vmap(run_chain)(chain_keys)
+
+
+def simulated_annealing(
+    objective_fn,              # cfg_row[6] -> scalar (lower is better)
+    space: DesignSpace,
+    bw: int,
+    settings: SASettings = SASettings(),
+    key: jax.Array | None = None,
+) -> SAResult:
+    mat, lens = _axes_matrix(space)
+    mat_j = jnp.asarray(mat)
+    lens_j = jnp.asarray(lens)
+    bw_f = jnp.asarray(float(bw))
+    best_idx, best_val, hists = anneal(
+        objective_fn, mat_j, lens_j, bw_f, settings,
+        make_chain_keys(settings, key),
     )
-    best_idx, best_val, hists = jax.vmap(run_chain)(chain_keys)
     winner = jnp.argmin(best_val)
+    vals = mat_j[jnp.arange(5), best_idx[winner]]
     return SAResult(
-        best_cfg=cfg_of(best_idx[winner]),
+        best_cfg=jnp.concatenate([vals, bw_f[None]]),
         best_value=best_val[winner],
         best_per_chain=best_val,
         trace_best=jnp.min(hists, axis=0),

@@ -19,11 +19,9 @@ ground truth the closed-form cost model must reproduce):
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import numpy as np
 
-from repro.core.calibration import DEFAULT_TECH, TechConstants
 from repro.core.macro import MacroSpec
 from repro.core.strategies import Strategy
 from repro.core.template import AcceleratorConfig

@@ -4,7 +4,17 @@ template, covering all 8 mapping strategies (paper Sec. III-B/III-C).
 The model is written as pure ``jnp`` arithmetic over scalars so that a single
 ``vmap`` stack evaluates *candidates x operators x strategies* in one shot --
 this is what lets the hardware-mapping co-exploration be jitted, vmapped over
-SA chains and sharded over a pod (``core/distributed.py``).
+SA chains, batched over whole job lists (``core/engine.py``) and sharded over
+a pod (``core/distributed.py``).
+
+Macro and technology constants come in two flavours:
+
+* static -- a :class:`~repro.core.macro.MacroSpec` / ``TechConstants`` pair
+  (python scalars baked into the trace), the paper's fixed-macro workflow;
+* traced -- :class:`MacroParams` / :class:`TechParams` NamedTuples whose
+  leaves are arrays, so one jitted executable can evaluate *different*
+  macros/technologies per job (the batched engine vmaps over a stacked job
+  axis).  Both flavours run the identical formulas below.
 
 Loop-nest semantics (NR orientation; R swaps M<->N and streamed/stationary
 data widths).  ``V`` = streamed matrix (M x K, via Input SRAM), ``S`` =
@@ -25,13 +35,12 @@ Latency uses a global three-stage-pipeline overlap bound; the cycle-accurate
 simulator's per-set latency is sandwiched between the model's overlapped and
 non-overlapped bounds (tests/test_simulator.py).
 
-All arithmetic is float; run under ``jax.experimental.enable_x64`` for exact
+All arithmetic is float; run under ``repro.compat.enable_x64`` for exact
 integer semantics (counts < 2^53), float32 otherwise (plenty for SA ordering).
 """
 from __future__ import annotations
 
 import typing
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +50,111 @@ from repro.core.macro import MacroSpec
 from repro.core.strategies import ALL_STRATEGIES, STRATEGY_SETS
 
 INFEASIBLE = 1e30
+
+#: objective encodings shared by the string API and the traced batched API
+OBJ_CODES: dict[str, int] = {"ee": 0, "th": 1, "edp": 2}
+
+
+class MacroParams(typing.NamedTuple):
+    """Traced-friendly view of a :class:`MacroSpec` (+ its energy override).
+
+    Leaves are python floats in the static path and (possibly stacked)
+    arrays in the batched path -- the cost formulas accept either.
+    """
+
+    al: typing.Any
+    pc: typing.Any
+    icw: typing.Any
+    wuw: typing.Any
+    dw_in: typing.Any
+    dw_w: typing.Any
+    dw_psum: typing.Any
+    dw_out: typing.Any
+    freq_mhz: typing.Any
+    update_during_compute: typing.Any   # 0.0 / 1.0 ping-pong capability
+    mac_e_pj: typing.Any                # per-MAC energy (macro override baked)
+
+
+class TechParams(typing.NamedTuple):
+    """Traced-friendly view of :class:`TechConstants` (energy/area/leakage)."""
+
+    e_cim_update_pj_bit: typing.Any
+    e_sram_rd_pj_bit: typing.Any
+    e_sram_wr_pj_bit: typing.Any
+    e_ema_pj_bit: typing.Any
+    sys_energy_overhead: typing.Any
+    p_leak_mw_mm2: typing.Any
+    a_cell_um2_bit: typing.Any
+    a_cu_um2: typing.Any
+    a_macro_fixed_mm2: typing.Any
+    a_sram_mm2_per_mb: typing.Any
+    a_sram_fixed_mm2: typing.Any
+    a_fixed_mm2: typing.Any
+
+
+def macro_params(macro: MacroSpec,
+                 tech: TechConstants = DEFAULT_TECH) -> MacroParams:
+    """Scalar (python-float) params of a macro -- the static baked path."""
+    return MacroParams(
+        al=float(macro.al), pc=float(macro.pc),
+        icw=float(macro.icw), wuw=float(macro.wuw),
+        dw_in=float(macro.dw_in), dw_w=float(macro.dw_w),
+        dw_psum=float(macro.dw_psum), dw_out=float(macro.dw_out),
+        freq_mhz=float(macro.freq_mhz),
+        update_during_compute=float(macro.update_during_compute),
+        mac_e_pj=float(macro.mac_energy_pj(tech)),
+    )
+
+
+def tech_params(tech: TechConstants = DEFAULT_TECH) -> TechParams:
+    return TechParams(
+        e_cim_update_pj_bit=float(tech.e_cim_update_pj_bit),
+        e_sram_rd_pj_bit=float(tech.e_sram_rd_pj_bit),
+        e_sram_wr_pj_bit=float(tech.e_sram_wr_pj_bit),
+        e_ema_pj_bit=float(tech.e_ema_pj_bit),
+        sys_energy_overhead=float(tech.sys_energy_overhead),
+        p_leak_mw_mm2=float(tech.p_leak_mw_mm2),
+        a_cell_um2_bit=float(tech.a_cell_um2_bit),
+        a_cu_um2=float(tech.a_cu_um2),
+        a_macro_fixed_mm2=float(tech.a_macro_fixed_mm2),
+        a_sram_mm2_per_mb=float(tech.a_sram_mm2_per_mb),
+        a_sram_fixed_mm2=float(tech.a_sram_fixed_mm2),
+        a_fixed_mm2=float(tech.a_fixed_mm2),
+    )
+
+
+def _as_params(macro, tech):
+    """Normalize (MacroSpec|MacroParams, TechConstants|TechParams)."""
+    mp = macro if isinstance(macro, MacroParams) else macro_params(
+        macro, tech if isinstance(tech, TechConstants) else DEFAULT_TECH)
+    tp = tech if isinstance(tech, TechParams) else tech_params(tech)
+    return mp, tp
+
+
+def objective_code(objective) -> typing.Any:
+    """Map "ee"/"th"/"edp" to its integer code; pass traced codes through."""
+    if isinstance(objective, str):
+        try:
+            return OBJ_CODES[objective]
+        except KeyError:
+            raise ValueError(
+                f"unknown objective {objective!r}; "
+                f"expected one of {sorted(OBJ_CODES)}") from None
+    return objective
+
+
+def _score(lat, en, code):
+    """Per-objective scalar score (lower is better); ``code`` may be traced."""
+    return jnp.where(code == OBJ_CODES["th"], lat,
+                     jnp.where(code == OBJ_CODES["edp"], lat * en, en))
+
+
+def _ceil(a, b):
+    return jnp.ceil(a / b)
+
+
+def _fdiv(a, b):
+    return jnp.floor(a / b)
 
 
 class CostBreakdown(typing.NamedTuple):
@@ -65,14 +179,6 @@ class CostBreakdown(typing.NamedTuple):
     feasible: jax.Array
 
 
-def _ceil(a, b):
-    return jnp.ceil(a / b)
-
-
-def _fdiv(a, b):
-    return jnp.floor(a / b)
-
-
 def matmul_cost(
     # operator (already oriented? no -- raw op dims)
     m, k, n,
@@ -80,15 +186,18 @@ def matmul_cost(
     rev, wp, pf,
     # accelerator config
     mr, mc, scr, is_kb, os_kb, bw, area_mm2,
-    # macro
-    macro: MacroSpec,
-    tech: TechConstants = DEFAULT_TECH,
+    # macro (MacroSpec = static python constants, MacroParams = traceable)
+    macro,
+    tech=DEFAULT_TECH,
 ) -> CostBreakdown:
     """Cost of one (m x k) @ (k x n) call under one strategy on one config.
 
-    ``macro``/``tech`` are static (python) -- the paper fixes the macro during
-    accelerator exploration; everything else may be traced/vmapped.
+    With a ``MacroSpec``/``TechConstants`` pair the macro constants are
+    static (python) -- the paper fixes the macro during accelerator
+    exploration.  With ``MacroParams``/``TechParams`` they may be traced and
+    vmapped like everything else (the batched engine's per-job macros).
     """
+    mp, tp = _as_params(macro, tech)
     one = jnp.float32(1.0).astype(jnp.result_type(float))
     m, k, n = (jnp.asarray(x) * one for x in (m, k, n))
     rev, wp, pf = (jnp.asarray(x) * one for x in (rev, wp, pf))
@@ -101,19 +210,19 @@ def matmul_cost(
     M = jnp.where(rev > 0, n, m)
     N = jnp.where(rev > 0, m, n)
     K = k
-    dws = jnp.where(rev > 0, float(macro.dw_w), float(macro.dw_in))   # streamed
-    dwt = jnp.where(rev > 0, float(macro.dw_in), float(macro.dw_w))   # stationary
-    dw_psum = float(macro.dw_psum)
-    dw_out = float(macro.dw_out)
+    dws = jnp.where(rev > 0, mp.dw_w, mp.dw_in)   # streamed operand width
+    dwt = jnp.where(rev > 0, mp.dw_in, mp.dw_w)   # stationary operand width
+    dw_psum = mp.dw_psum
+    dw_out = mp.dw_out
 
     # per-plane-op / per-plane-update cycles (eqns 3-5); depend on which
     # operand streams through the input drivers
-    cyc_c = jnp.maximum(1.0, _ceil(dws * macro.al, float(macro.icw)))
-    cyc_u = jnp.maximum(1.0, _ceil(macro.al * dwt, float(macro.wuw)))
+    cyc_c = jnp.maximum(1.0, _ceil(dws * mp.al, mp.icw))
+    cyc_u = jnp.maximum(1.0, _ceil(mp.al * dwt, mp.wuw))
 
     # ---- geometry ---------------------------------------------------------
-    Kp = mr * float(macro.al)
-    Np = mc * float(macro.pc)
+    Kp = mr * mp.al
+    Np = mc * mp.pc
     tK = _ceil(K, Kp)
     tN = _ceil(N, Np)
     Kpad = tK * Kp
@@ -121,7 +230,6 @@ def matmul_cost(
     planes = tK * tN
 
     G = _ceil(tK, scr)                      # AF groups per output column
-    remK = tK - (G - 1.0) * scr             # planes in last AF group
     H = _ceil(tN, scr)                      # PF groups per K tile
     remN = tN - (H - 1.0) * scr             # planes in last PF group
     scr_n = jnp.minimum(scr, tN)
@@ -194,7 +302,7 @@ def matmul_cost(
     groups_per_col = jnp.where(pf > 0, tK, G)   # psum writes per (row, col)
     os_wr = M * tN * groups_per_col * Np * dw_psum
     os_rd = M * tN * (groups_per_col - 1.0) * Np * dw_psum + M * Npad * dw_psum
-    os_feasible = os_bits >= jnp.where(pf > 0, 1.0, 1.0) * Np * dw_psum
+    os_feasible = os_bits >= Np * dw_psum
 
     # ---- output writeback --------------------------------------------------
     y_bits = M * Npad * dw_out
@@ -203,7 +311,7 @@ def matmul_cost(
     ema_bits = v_bits + s_bits + spill_bits + y_bits
     ema_cycles = _ceil(ema_bits, bw)
 
-    overlap = float(macro.update_during_compute) * (scr >= 2.0)
+    overlap = mp.update_during_compute * (scr >= 2.0)
     busy = jnp.maximum(compute_cycles, ema_cycles)
     latency = jnp.where(
         overlap,
@@ -215,14 +323,14 @@ def matmul_cost(
 
     # ---- energy ------------------------------------------------------------
     e_dyn = (
-        macs * macro.mac_energy_pj(tech)
-        + s_bits * tech.e_cim_update_pj_bit
-        + (is_rd + os_rd) * tech.e_sram_rd_pj_bit
-        + (is_wr + os_wr) * tech.e_sram_wr_pj_bit
-        + ema_bits * tech.e_ema_pj_bit
-    ) * tech.sys_energy_overhead
-    lat_s = latency / (macro.freq_mhz * 1e6)
-    e_leak = tech.p_leak_mw_mm2 * area_mm2 * lat_s * 1e9  # mW*s -> pJ
+        macs * mp.mac_e_pj
+        + s_bits * tp.e_cim_update_pj_bit
+        + (is_rd + os_rd) * tp.e_sram_rd_pj_bit
+        + (is_wr + os_wr) * tp.e_sram_wr_pj_bit
+        + ema_bits * tp.e_ema_pj_bit
+    ) * tp.sys_energy_overhead
+    lat_s = latency / (mp.freq_mhz * 1e6)
+    e_leak = tp.p_leak_mw_mm2 * area_mm2 * lat_s * 1e9  # mW*s -> pJ
     energy = e_dyn + e_leak
 
     latency = jnp.where(feasible, latency, INFEASIBLE)
@@ -271,31 +379,38 @@ def strategy_table(op_row, cfg_row, area_mm2, macro, tech=DEFAULT_TECH):
     return jax.vmap(_one)(_STRAT_BITS)
 
 
-def area_mm2_jnp(cfg_row, macro: MacroSpec, tech: TechConstants = DEFAULT_TECH):
-    """jnp version of template.accelerator_area_mm2 (traced cfg)."""
+def area_mm2_jnp(cfg_row, macro, tech=DEFAULT_TECH):
+    """jnp version of template.accelerator_area_mm2 (traced cfg and,
+    via MacroParams/TechParams, optionally traced macro/tech)."""
+    mp, tp = _as_params(macro, tech)
     mr, mc, scr, is_kb, os_kb = (cfg_row[i] for i in range(5))
-    cells = macro.al * macro.pc * scr * macro.dw_w * tech.a_cell_um2_bit
-    cus = macro.al * macro.pc * tech.a_cu_um2
-    macro_area = (cells + cus) * 1e-6 + tech.a_macro_fixed_mm2
-    sram = lambda kb: kb * 8.0 / 1024.0 * tech.a_sram_mm2_per_mb + tech.a_sram_fixed_mm2
-    return mr * mc * macro_area + sram(is_kb) + sram(os_kb) + tech.a_fixed_mm2
+    cells = mp.al * mp.pc * scr * mp.dw_w * tp.a_cell_um2_bit
+    cus = mp.al * mp.pc * tp.a_cu_um2
+    macro_area = (cells + cus) * 1e-6 + tp.a_macro_fixed_mm2
+    sram = lambda kb: kb * 8.0 / 1024.0 * tp.a_sram_mm2_per_mb \
+        + tp.a_sram_fixed_mm2
+    return mr * mc * macro_area + sram(is_kb) + sram(os_kb) + tp.a_fixed_mm2
 
 
-def bandwidth_ok_jnp(cfg_row, macro: MacroSpec):
+def bandwidth_ok_jnp(cfg_row, macro):
+    mp, _ = _as_params(macro, DEFAULT_TECH)
     bw = cfg_row[5]
-    return (macro.icw * cfg_row[0] >= bw) & (
-        macro.wuw * cfg_row[0] * cfg_row[1] >= bw
+    return (mp.icw * cfg_row[0] >= bw) & (
+        mp.wuw * cfg_row[0] * cfg_row[1] >= bw
     )
 
 
 def workload_cost_core(
-    ops_arr, cfg_row, strat_bits, allowed, macro: MacroSpec,
-    tech: TechConstants = DEFAULT_TECH, objective: str = "ee",
+    ops_arr, cfg_row, strat_bits, allowed, macro,
+    tech=DEFAULT_TECH, objective="ee",
 ):
     """workload_cost with the strategy tables passed in explicitly (lets the
     Pallas strategy_eval kernel feed them through refs instead of capturing
-    module-level constants)."""
-    area = area_mm2_jnp(cfg_row, macro, tech)
+    module-level constants).  ``objective`` may be a string or a (possibly
+    traced) integer code from :data:`OBJ_CODES`."""
+    mp, tp = _as_params(macro, tech)
+    code = objective_code(objective)
+    area = area_mm2_jnp(cfg_row, mp, tp)
 
     def per_op(op_row):
         def _one(bits):
@@ -303,18 +418,12 @@ def workload_cost_core(
                 op_row[0], op_row[1], op_row[2],
                 bits[0], bits[1], bits[2],
                 cfg_row[0], cfg_row[1], cfg_row[2], cfg_row[3], cfg_row[4],
-                cfg_row[5], area, macro, tech,
+                cfg_row[5], area, mp, tp,
             )
         tbl = jax.vmap(_one)(strat_bits)
         lat = jnp.where(allowed > 0, tbl.latency_cycles, INFEASIBLE)
         en = jnp.where(allowed > 0, tbl.energy_pj, INFEASIBLE)
-        if objective == "th":
-            score = lat
-        elif objective == "edp":
-            score = lat * en
-        else:
-            score = en
-        idx = jnp.argmin(score)
+        idx = jnp.argmin(_score(lat, en, code))
         return lat[idx], en[idx], idx
 
     lat, en, idx = jax.vmap(per_op)(ops_arr)
@@ -334,9 +443,9 @@ def strategy_mask(strategy_set: str):
 def workload_cost(
     ops_arr,                # [P, 5] (m, k, n, count, static); count==0 -> pad
     cfg_row,                # [6]
-    macro: MacroSpec,
-    tech: TechConstants = DEFAULT_TECH,
-    objective: str = "ee",  # "ee" (energy) | "th" (latency) | "edp"
+    macro,
+    tech=DEFAULT_TECH,
+    objective="ee",         # "ee" (energy) | "th" (latency) | "edp"
     strategy_set: str = "st",
 ):
     """Best-strategy-per-operator workload cost on one accelerator config.
@@ -350,19 +459,49 @@ def workload_cost(
         macro, tech, objective)
 
 
-def objective_value(total_lat, total_en, objective: str):
-    if objective == "th":
-        return total_lat
-    if objective == "edp":
-        return total_lat * total_en
-    return total_en
+def objective_value(total_lat, total_en, objective):
+    """Scalar objective from workload totals; str or integer-code input."""
+    return _score(total_lat, total_en, objective_code(objective))
+
+
+# ---------------------------------------------------------------------- #
+# per-job bundles for the batched exploration engine
+# ---------------------------------------------------------------------- #
+class JobParams(typing.NamedTuple):
+    """Everything the objective needs about one job, as traceable leaves.
+
+    Stacking a list of these along axis 0 (``jax.tree.map`` + ``stack``)
+    yields the job axis the engine vmaps over; shapes must already agree
+    (operator arrays padded to a shared bucket width by the engine).
+    """
+
+    ops: typing.Any          # [P, 5] (m, k, n, count, static)
+    macro: MacroParams       # scalar leaves
+    tech: TechParams         # scalar leaves
+    allowed: typing.Any      # [8] strategy mask
+    obj_code: typing.Any     # () int32
+    area_budget: typing.Any  # () mm^2
+    bw: typing.Any           # () external bus bits/cycle
+
+
+def job_objective(job: JobParams, cfg_row, penalty_scale: float = 1e3):
+    """Scalar objective(cfg_row[6]) of one job -- the traced twin of
+    :func:`make_objective_fn` (area penalty always on; jobs carry budgets)."""
+    lat, en, _ = workload_cost_core(
+        job.ops, cfg_row, _STRAT_BITS, job.allowed, job.macro, job.tech,
+        job.obj_code)
+    val = _score(lat, en, job.obj_code)
+    area = area_mm2_jnp(cfg_row, job.macro, job.tech)
+    excess = jnp.maximum(0.0, area - job.area_budget) / job.area_budget
+    val = val * (1.0 + penalty_scale * excess)
+    return jnp.where(bandwidth_ok_jnp(cfg_row, job.macro), val, INFEASIBLE)
 
 
 def make_objective_fn(
     ops_arr,
-    macro: MacroSpec,
-    tech: TechConstants = DEFAULT_TECH,
-    objective: str = "ee",
+    macro,
+    tech=DEFAULT_TECH,
+    objective="ee",
     strategy_set: str = "st",
     area_budget_mm2: float | None = None,
     penalty_scale: float = 1e3,
@@ -373,17 +512,20 @@ def make_objective_fn(
     walk the boundary; bandwidth-infeasible configs get the hard INFEASIBLE.
     """
     ops_arr = jnp.asarray(ops_arr)
+    mp, tp = _as_params(macro, tech)
+    code = objective_code(objective)
+    mask = strategy_mask(strategy_set)
 
     def fn(cfg_row):
-        lat, en, _ = workload_cost(
-            ops_arr, cfg_row, macro, tech, objective, strategy_set
+        lat, en, _ = workload_cost_core(
+            ops_arr, cfg_row, _STRAT_BITS, mask, mp, tp, code
         )
-        val = objective_value(lat, en, objective)
+        val = _score(lat, en, code)
         if area_budget_mm2 is not None:
-            area = area_mm2_jnp(cfg_row, macro, tech)
+            area = area_mm2_jnp(cfg_row, mp, tp)
             excess = jnp.maximum(0.0, area - area_budget_mm2) / area_budget_mm2
             val = val * (1.0 + penalty_scale * excess)
-        val = jnp.where(bandwidth_ok_jnp(cfg_row, macro), val, INFEASIBLE)
+        val = jnp.where(bandwidth_ok_jnp(cfg_row, mp), val, INFEASIBLE)
         return val
 
     return fn
@@ -392,9 +534,9 @@ def make_objective_fn(
 def workload_metrics(
     workload_ops_arr,
     cfg_row,
-    macro: MacroSpec,
-    tech: TechConstants = DEFAULT_TECH,
-    objective: str = "ee",
+    macro,
+    tech=DEFAULT_TECH,
+    objective="ee",
     strategy_set: str = "st",
 ) -> dict:
     """Human-facing PPA metrics for a config (TOPS/W, GOPS, mm^2, ...)."""

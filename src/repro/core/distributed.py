@@ -3,17 +3,21 @@
 The paper runs its simulated annealing on a single host.  Because our whole
 evaluation pipeline (cost model x operators x strategies) is pure ``jnp``,
 the chain population can be sharded across an entire TPU pod (or two) with
-``shard_map``: every device anneals its local chains, and every
-``sync_every`` steps the incumbent best (value + config) is exchanged with
+``shard_map``.  The population is the *job x chain* grid of the batched
+exploration engine (``core/engine.py``): every device anneals a local slice
+holding ``chains_per_device`` chains of EVERY job (per-chain job constants
+are gathered from replicated per-job arrays), and every ``sync_every`` steps
+the per-job incumbent best (value + config) is exchanged with
 ``lax.pmin``/``psum`` collectives; each device then re-seeds its worst chain
-with the global best (exploit) while the rest keep exploring.
+of each job with that job's global best (exploit) while the rest keep
+exploring.
 
 Production concerns handled here:
-  * fault tolerance -- search state (chain indices, values, RNG key, round)
-    checkpoints to an .npz after every round; ``resume_round`` restarts from
-    the latest checkpoint after a failure;
-  * elasticity -- on resume the population is re-padded to whatever device
-    count the new mesh has (chains are embarrassingly parallel);
+  * fault tolerance -- search state (chain indices, job ids, RNG keys,
+    round) checkpoints to an .npz after every round; ``resume=True``
+    restarts from the latest checkpoint after a failure;
+  * elasticity -- on resume the per-job population is re-padded to whatever
+    device count the new mesh has (chains are embarrassingly parallel);
   * stragglers -- rounds are fixed-work (``sync_every`` steps), so a slow
     host delays at most one collective; there is no long-tail barrier.
 """
@@ -21,16 +25,18 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from functools import partial
+import typing
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import cost_model
 from repro.core.annealing import SASettings, _axes_matrix
 from repro.core.calibration import DEFAULT_TECH, TechConstants
+from repro.core.engine import ExploreJob, _job_arrays, _stack_jobs
 from repro.core.ir import Workload
 from repro.core.macro import MacroSpec
 from repro.core.pruning import DesignSpace
@@ -47,22 +53,27 @@ class DistributedResult:
 
 
 def _round_body(
-    objective_fn, mat_j, lens_j, bw_f, settings: SASettings, steps: int,
-    axis_names: tuple[str, ...],
+    stacked, mats_j, lens_j, bws_j, settings: SASettings, steps: int,
+    axis_names: tuple[str, ...], n_jobs: int,
 ):
-    """Builds the shard_map body: anneal local chains `steps` steps, then
-    exchange the global best and re-seed each device's worst chain."""
+    """Builds the shard_map body: anneal the local job x chain slice `steps`
+    steps, then exchange each job's global best and re-seed each device's
+    worst chain of that job."""
 
-    def cfg_of(idx):
-        vals = mat_j[jnp.arange(5), idx]
-        return jnp.concatenate([vals, bw_f[None]])
+    def cfg_of(job_id, idx):
+        vals = mats_j[job_id][jnp.arange(5), idx]
+        return jnp.concatenate([vals, bws_j[job_id][None]])
 
-    def chain_step(state, xs):
+    def chain_objective(job_id, idx):
+        job = jax.tree.map(lambda a: a[job_id], stacked)
+        return cost_model.job_objective(job, cfg_of(job_id, idx))
+
+    def chain_step(job_id, state, xs):
         idx, val, best_idx, best_val = state
         k, temp = xs
         k1, k2, k3, k4 = jax.random.split(k, 4)
         axis = jax.random.randint(k1, (), 0, 5)
-        hi = lens_j[axis]
+        hi = lens_j[job_id][axis]
         jump = jax.random.uniform(k2) < settings.jump_prob
         delta = jnp.where(jax.random.uniform(k3) < 0.5, -1, 1)
         new_pos = jnp.where(
@@ -71,7 +82,7 @@ def _round_body(
             jnp.clip(idx[axis] + delta, 0, hi - 1),
         )
         new_idx = idx.at[axis].set(new_pos)
-        new_val = objective_fn(cfg_of(new_idx))
+        new_val = chain_objective(job_id, new_idx)
         rel = (new_val - val) / jnp.maximum(val, 1e-30)
         accept = (new_val < val) | (
             jax.random.uniform(k4) < jnp.exp(-rel / jnp.maximum(temp, 1e-9))
@@ -85,43 +96,191 @@ def _round_body(
             jnp.where(better, val, best_val),
         ), None
 
-    def run_chain(idx, val, best_idx, best_val, key, t_round):
+    def run_chain(job_id, idx, val, best_idx, best_val, key, t_round):
         temps = t_round * settings.alpha ** jnp.arange(steps)
         keys = jax.random.split(key, steps)
         (idx, val, best_idx, best_val), _ = jax.lax.scan(
-            chain_step, (idx, val, best_idx, best_val), (keys, temps)
+            lambda s, xs: chain_step(job_id, s, xs),
+            (idx, val, best_idx, best_val), (keys, temps)
         )
         return idx, val, best_idx, best_val
 
-    def body(idx, val, best_idx, best_val, keys, t_round):
+    def body(job_id, idx, val, best_idx, best_val, keys, t_round):
         # local per-chain annealing ([local_chains, ...] block)
         step_keys = jax.vmap(lambda k: jax.random.fold_in(k, 1))(keys)
         idx, val, best_idx, best_val = jax.vmap(
-            run_chain, in_axes=(0, 0, 0, 0, 0, None)
-        )(idx, val, best_idx, best_val, step_keys, t_round[0])
+            run_chain, in_axes=(0, 0, 0, 0, 0, 0, None)
+        )(job_id, idx, val, best_idx, best_val, step_keys, t_round[0])
 
-        # ---- global best exchange ----
-        local_best = jnp.min(best_val)
-        local_arg = jnp.argmin(best_val)
+        # ---- per-job global best exchange ----
+        job_eye = job_id[:, None] == jnp.arange(n_jobs)[None, :]  # [L, J]
+        masked = jnp.where(job_eye, best_val[:, None], jnp.inf)
+        local_best = masked.min(axis=0)                           # [J]
+        local_arg = masked.argmin(axis=0)                         # [J]
         g_best = jax.lax.pmin(local_best, axis_names)
-        winner = (local_best <= g_best).astype(best_idx.dtype)
-        contrib = best_idx[local_arg] * winner
+        winner = (local_best <= g_best).astype(best_idx.dtype)    # [J]
+        contrib = best_idx[local_arg] * winner[:, None]           # [J, 5]
         n_win = jax.lax.psum(winner, axis_names)
         g_idx = (
-            jax.lax.psum(contrib, axis_names) // jnp.maximum(n_win, 1)
+            jax.lax.psum(contrib, axis_names)
+            // jnp.maximum(n_win, 1)[:, None]
         )
-        # re-seed the locally-worst chain with the global best config
-        worst = jnp.argmax(val)
+        # re-seed each job's locally-worst chain with its global best
+        worst = jnp.where(job_eye, val[:, None], -jnp.inf).argmax(axis=0)
         idx = idx.at[worst].set(g_idx)
         val = val.at[worst].set(g_best)
         new_keys = jax.vmap(lambda k: jax.random.fold_in(k, 2))(keys)
-        return idx, val, best_idx, best_val, new_keys, g_best[None]
+        return idx, val, best_idx, best_val, new_keys, g_best
 
     return body
 
 
+def distributed_co_explore_jobs(
+    mesh,
+    jobs: typing.Sequence[ExploreJob],
+    settings: SASettings = SASettings(),
+    chains_per_device: int = 4,          # chains per job per device
+    rounds: int = 8,
+    sync_every: int = 50,
+    checkpoint_dir: str | None = None,
+    resume: bool = False,
+) -> list[DistributedResult]:
+    """Anneal the full job x chain population of a job batch over a mesh.
+
+    Every device holds ``chains_per_device`` chains of every job, so the
+    per-job collectives (best exchange / worst re-seed) always have local
+    members; elastic resume re-tiles each job's chains to the new mesh."""
+    n_jobs = len(jobs)
+    if n_jobs == 0:
+        raise ValueError("empty job list")
+
+    # ---- per-job data (shared-shape padding, as in the engine) ----
+    ops_pad = max(len(job.merged_workload().ops) for job in jobs)
+    axes = [_axes_matrix(job.design_space()) for job in jobs]
+    lmax = max(m.shape[1] for m, _ in axes)
+    mats = np.stack([
+        np.concatenate([m, np.repeat(m[:, -1:], lmax - m.shape[1], axis=1)],
+                       axis=1)
+        for m, _ in axes])                                    # [J, 5, L]
+    lens = np.stack([ln for _, ln in axes])                   # [J, 5]
+    stacked_np = _stack_jobs([
+        _job_arrays_padded(job, ops_pad) for job in jobs])
+
+    axis_names = tuple(mesh.axis_names)
+    n_dev = int(np.prod(mesh.devices.shape))
+    local = n_jobs * chains_per_device                 # chains per device
+    n_chains = n_dev * local                           # total population
+    job_id = np.tile(np.repeat(np.arange(n_jobs), chains_per_device), n_dev)
+
+    # ---- init population (possibly from a checkpoint; re-pad if the mesh
+    # size changed = elastic resume) ----
+    start_round = 0
+    rng = np.random.default_rng(settings.seed)
+    idx0 = rng.integers(
+        0, lens[job_id], size=(n_chains, 5)).astype(np.int32)
+    key0 = np.array(jax.vmap(jax.random.PRNGKey)(
+        np.arange(settings.seed, settings.seed + n_chains)))
+    trace: list[np.ndarray] = []
+    ckpt_path = (
+        os.path.join(checkpoint_dir, "dse_state.npz") if checkpoint_dir
+        else None
+    )
+    if resume and ckpt_path and os.path.exists(ckpt_path):
+        st = np.load(ckpt_path)
+        # legacy (pre-batch) checkpoints carry no job axis: all chains job 0
+        old_job = (st["job_id"] if "job_id" in st.files
+                   else np.zeros(len(st["idx"]), dtype=np.int64))
+        for j in range(n_jobs):
+            sel = np.flatnonzero(old_job == j)
+            if len(sel) == 0:
+                continue
+            mine = np.flatnonzero(job_id == j)
+            reps = -(-len(mine) // len(sel))
+            idx0[mine] = np.tile(st["idx"][sel], (reps, 1))[: len(mine)]
+            key0[mine] = np.tile(st["keys"][sel], (reps, 1))[: len(mine)]
+        start_round = int(st["round"])
+        tr = np.asarray(st["trace"])
+        trace = [row for row in tr.reshape(-1, n_jobs)]
+
+    stacked = jax.tree.map(jnp.asarray, stacked_np)
+    mats_j, lens_j = jnp.asarray(mats), jnp.asarray(lens)
+    bws_j = jnp.asarray([float(j.bw) for j in jobs])
+
+    def _cfg_vals(j: int, idx_row: np.ndarray) -> np.ndarray:
+        return mats[j][np.arange(5), idx_row]
+
+    eval_cfg = jax.jit(jax.vmap(lambda jid, i: cost_model.job_objective(
+        jax.tree.map(lambda a: a[jid], stacked),
+        jnp.concatenate([mats_j[jid][jnp.arange(5), i], bws_j[jid][None]]),
+    )))
+    job_id_j = jnp.asarray(job_id)
+    val0 = np.asarray(eval_cfg(job_id_j, jnp.asarray(idx0)))
+
+    body = _round_body(
+        stacked, mats_j, lens_j, bws_j, settings, sync_every, axis_names,
+        n_jobs,
+    )
+    spec = P(axis_names)
+    rspec = P()
+    smapped = jax.jit(
+        shard_map(
+            body, mesh=mesh,
+            in_specs=(spec, spec, spec, spec, spec, spec, rspec),
+            out_specs=(spec, spec, spec, spec, spec, rspec),
+        )
+    )
+
+    idx = jnp.asarray(idx0)
+    val = jnp.asarray(val0)
+    best_idx, best_val = idx, val
+    keys = jnp.asarray(key0)
+    for r in range(start_round, rounds):
+        t_round = jnp.asarray([settings.t0 * (0.5 ** r)])
+        idx, val, best_idx, best_val, keys, g_best = smapped(
+            job_id_j, idx, val, best_idx, best_val, keys, t_round
+        )
+        trace.append(np.asarray(g_best))
+        if ckpt_path:
+            os.makedirs(checkpoint_dir, exist_ok=True)
+            tmp = ckpt_path + ".tmp.npz"
+            np.savez(
+                tmp, idx=np.asarray(idx), keys=np.asarray(keys),
+                job_id=job_id, round=r + 1, trace=np.asarray(trace),
+            )
+            os.replace(tmp, ckpt_path)
+
+    bv = np.asarray(best_val)
+    bi = np.asarray(best_idx)
+    results = []
+    for j, job in enumerate(jobs):
+        mine = np.flatnonzero(job_id == j)
+        w = mine[int(np.argmin(bv[mine]))]
+        cfg_vals = _cfg_vals(j, bi[w])
+        cfg = AcceleratorConfig(
+            *[int(round(v)) for v in cfg_vals], bw=job.bw)
+        results.append(DistributedResult(
+            config=cfg,
+            best_value=float(bv[w]),
+            rounds=rounds,
+            n_chains=len(mine),
+            trace=[float(row[j]) for row in trace],
+        ))
+    return results
+
+
+def _job_arrays_padded(job: ExploreJob, ops_pad: int):
+    """JobParams with the operator array padded to the batch bucket."""
+    from repro.core.engine import _PreparedJob, _pow2_at_least
+
+    wl = job.merged_workload()
+    mat, ln = _axes_matrix(job.design_space())
+    return _job_arrays(_PreparedJob(
+        job=job, workload=wl, ops_pad=_pow2_at_least(ops_pad),
+        mat=mat, lens=ln))
+
+
 def distributed_co_explore(
-    mesh: Mesh,
+    mesh,
     macro: MacroSpec,
     workload: Workload,
     area_budget_mm2: float,
@@ -137,91 +296,15 @@ def distributed_co_explore(
     checkpoint_dir: str | None = None,
     resume: bool = False,
 ) -> DistributedResult:
-    space = space or DesignSpace()
-    wl = workload.merged()
-    objective_fn = cost_model.make_objective_fn(
-        wl.as_arrays(), macro, tech, objective, strategy_set,
-        area_budget_mm2=area_budget_mm2,
+    """Single-job distributed DSE (a job x chain population of one job)."""
+    job = ExploreJob(
+        macro=macro, workload=workload, area_budget_mm2=area_budget_mm2,
+        objective=objective, strategy_set=strategy_set, bw=bw, tech=tech,
+        space=space,
     )
-    mat, lens = _axes_matrix(space)
-    mat_j, lens_j = jnp.asarray(mat), jnp.asarray(lens)
-    bw_f = jnp.asarray(float(bw))
-    axis_names = tuple(mesh.axis_names)
-    n_dev = int(np.prod(mesh.devices.shape))
-    n_chains = n_dev * chains_per_device
-
-    # ---- init population (possibly from a checkpoint; re-pad if the mesh
-    # size changed = elastic resume) ----
-    start_round = 0
-    rng = np.random.default_rng(settings.seed)
-    idx0 = rng.integers(0, lens[None, :], size=(n_chains, 5)).astype(np.int32)
-    key0 = np.asarray(
-        jax.vmap(jax.random.PRNGKey)(np.arange(settings.seed, settings.seed + n_chains))
-    )
-    trace: list[float] = []
-    ckpt_path = (
-        os.path.join(checkpoint_dir, "dse_state.npz") if checkpoint_dir else None
-    )
-    if resume and ckpt_path and os.path.exists(ckpt_path):
-        st = np.load(ckpt_path)
-        old = st["idx"]
-        reps = -(-n_chains // len(old))
-        idx0 = np.tile(old, (reps, 1))[:n_chains].astype(np.int32)
-        key0 = np.tile(st["keys"], (reps, 1))[:n_chains]
-        start_round = int(st["round"])
-        trace = [float(x) for x in st["trace"]]
-
-    spec = P(axis_names)
-    rspec = P()
-
-    def cfg_of_np(idx_row):
-        vals = mat[np.arange(5), idx_row]
-        return np.concatenate([vals, [float(bw)]])
-
-    eval_cfg = jax.jit(jax.vmap(lambda i: objective_fn(
-        jnp.concatenate([mat_j[jnp.arange(5), i], bw_f[None]])
-    )))
-    val0 = np.asarray(eval_cfg(jnp.asarray(idx0)))
-
-    body = _round_body(
-        objective_fn, mat_j, lens_j, bw_f, settings, sync_every, axis_names
-    )
-    smapped = jax.jit(
-        jax.shard_map(
-            body, mesh=mesh,
-            in_specs=(spec, spec, spec, spec, spec, rspec),
-            out_specs=(spec, spec, spec, spec, spec, rspec),
-        )
-    )
-
-    idx = jnp.asarray(idx0)
-    val = jnp.asarray(val0)
-    best_idx, best_val = idx, val
-    keys = jnp.asarray(key0)
-    for r in range(start_round, rounds):
-        t_round = jnp.asarray([settings.t0 * (0.5 ** r)])
-        idx, val, best_idx, best_val, keys, g_best = smapped(
-            idx, val, best_idx, best_val, keys, t_round
-        )
-        trace.append(float(g_best[0]))
-        if ckpt_path:
-            os.makedirs(checkpoint_dir, exist_ok=True)
-            tmp = ckpt_path + ".tmp.npz"
-            np.savez(
-                tmp, idx=np.asarray(idx), keys=np.asarray(keys),
-                round=r + 1, trace=np.asarray(trace),
-            )
-            os.replace(tmp, ckpt_path)
-
-    bv = np.asarray(best_val)
-    bi = np.asarray(best_idx)
-    w = int(np.argmin(bv))
-    cfg_vals = cfg_of_np(bi[w])
-    cfg = AcceleratorConfig(*[int(round(v)) for v in cfg_vals[:5]], bw=bw)
-    return DistributedResult(
-        config=cfg,
-        best_value=float(bv[w]),
-        rounds=rounds,
-        n_chains=n_chains,
-        trace=trace,
-    )
+    return distributed_co_explore_jobs(
+        mesh, [job], settings=settings,
+        chains_per_device=chains_per_device, rounds=rounds,
+        sync_every=sync_every, checkpoint_dir=checkpoint_dir,
+        resume=resume,
+    )[0]

@@ -12,47 +12,38 @@ Two search methods:
   * ``exhaustive``  -- ground truth over the pruned space (feasible because
     the whole evaluation is one vmapped jnp expression); used to validate SA
     quality in tests and available to users for small spaces.
+
+Everything here is a thin wrapper over the batched exploration engine
+(``core/engine.py``): a single job is just a batch of one, so repeated calls
+share the engine's executable cache, and sweep-style consumers should build
+``ExploreJob`` lists and call ``ExplorationEngine.run`` directly to amortize
+compilation AND dispatch across the whole sweep.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cost_model
-from repro.core.annealing import SAResult, SASettings, exhaustive_search, simulated_annealing
+from repro.core.annealing import SASettings
 from repro.core.calibration import DEFAULT_TECH, TechConstants
+from repro.core.engine import (
+    ExplorationEngine,
+    ExploreJob,
+    ExploreResult,
+    default_engine,
+)
 from repro.core.ir import Workload
 from repro.core.macro import MacroSpec
-from repro.core.pruning import DesignSpace, candidates_with_bw, prune_space
-from repro.core.strategies import ALL_STRATEGIES, Strategy
-from repro.core.template import AcceleratorConfig, accelerator_area_mm2
+from repro.core.pruning import DesignSpace
+from repro.core.strategies import ALL_STRATEGIES
+from repro.core.template import AcceleratorConfig
 
-
-@dataclasses.dataclass
-class ExploreResult:
-    config: AcceleratorConfig
-    macro: MacroSpec
-    workload: str
-    objective: str
-    strategy_set: str
-    per_op_strategy: dict[str, str]
-    metrics: dict
-    search: dict                      # method, runtime, space stats
-    sa: SAResult | None = None
-
-    def summary(self) -> str:
-        c = self.config
-        return (
-            f"[{self.workload} | {self.macro.name} | {self.objective}/"
-            f"{self.strategy_set}] (MR,MC,SCR,IS,OS)="
-            f"({c.mr},{c.mc},{c.scr},{c.is_kb},{c.os_kb}) "
-            f"EE={self.metrics['tops_w']:.2f} TOPS/W "
-            f"Th={self.metrics['gops']:.1f} GOPS "
-            f"area={self.metrics['area_mm2']:.2f} mm^2"
-        )
+__all__ = [
+    "ExploreResult",
+    "co_explore",
+    "co_explore_macros",
+    "pareto_explore",
+    "evaluate_config",
+]
 
 
 def co_explore(
@@ -68,78 +59,26 @@ def co_explore(
     tech: TechConstants = DEFAULT_TECH,
     sa_settings: SASettings = SASettings(),
     merge_ops: bool = True,
+    engine: ExplorationEngine | None = None,
 ) -> ExploreResult:
-    t_start = time.perf_counter()
+    """Single-job co-exploration (batch of one on the shared engine)."""
     space = space or DesignSpace()
     if fixed:
         space = space.fix(**fixed)
-    wl = workload.merged() if merge_ops else workload
-    ops_arr = wl.as_arrays()
-
-    objective_fn = cost_model.make_objective_fn(
-        ops_arr, macro, tech, objective, strategy_set,
-        area_budget_mm2=area_budget_mm2,
+    job = ExploreJob(
+        macro=macro, workload=workload, area_budget_mm2=area_budget_mm2,
+        objective=objective, strategy_set=strategy_set, bw=bw, tech=tech,
+        space=space, merge_ops=merge_ops,
     )
-
-    sa_result = None
-    search_stats: dict = {"method": method, "merged_ops": len(wl.ops),
-                          "raw_ops": len(workload.ops)}
-    if method == "sa":
-        sa_result = simulated_annealing(objective_fn, space, bw, sa_settings)
-        best_cfg = np.asarray(sa_result.best_cfg)
-        # SA walks the raw grid with an area penalty; snap-verify feasibility
-        cfg = AcceleratorConfig(*[int(round(v)) for v in best_cfg[:5]], bw=bw)
-        if accelerator_area_mm2(cfg, macro, tech) > area_budget_mm2 * 1.001:
-            # fall back to best feasible neighbour via exhaustive over the
-            # pruned space (rare: penalty almost always keeps SA in budget)
-            cands, stats = prune_space(space, macro, area_budget_mm2, bw, tech)
-            search_stats.update(stats)
-            if len(cands) == 0:
-                raise ValueError("no feasible hardware point under budget")
-            best_row, _ = exhaustive_search(
-                objective_fn, candidates_with_bw(cands, bw)
-            )
-            cfg = AcceleratorConfig(*[int(v) for v in best_row[:5]], bw=bw)
-    elif method == "exhaustive":
-        cands, stats = prune_space(space, macro, area_budget_mm2, bw, tech)
-        search_stats.update(stats)
-        if len(cands) == 0:
-            raise ValueError("no feasible hardware point under budget")
-        best_row, _ = exhaustive_search(
-            objective_fn, candidates_with_bw(cands, bw)
-        )
-        cfg = AcceleratorConfig(*[int(v) for v in best_row[:5]], bw=bw)
-    else:
-        raise ValueError(f"unknown method {method!r}")
-
-    cfg_row = jnp.asarray(
-        [cfg.mr, cfg.mc, cfg.scr, cfg.is_kb, cfg.os_kb, cfg.bw], dtype=float
-    )
-    metrics = cost_model.workload_metrics(
-        ops_arr, cfg_row, macro, tech, objective, strategy_set
-    )
-    per_op = {
-        op.name or f"op{i}": str(ALL_STRATEGIES[metrics["strategy_idx"][i]])
-        for i, op in enumerate(wl.ops)
-    }
-    search_stats["runtime_s"] = time.perf_counter() - t_start
-    return ExploreResult(
-        config=cfg,
-        macro=macro,
-        workload=workload.name,
-        objective=objective,
-        strategy_set=strategy_set,
-        per_op_strategy=per_op,
-        metrics={k: v for k, v in metrics.items() if k != "strategy_idx"},
-        search=search_stats,
-        sa=sa_result,
-    )
+    eng = engine or default_engine()
+    return eng.run([job], method=method, sa_settings=sa_settings)[0]
 
 
 def co_explore_macros(
     macros: list[MacroSpec],
     workload: Workload,
     area_budget_mm2: float,
+    engine: ExplorationEngine | None = None,
     **kw,
 ) -> tuple[ExploreResult, list[ExploreResult]]:
     """Macro-library co-exploration: the paper fixes the macro during
@@ -147,10 +86,23 @@ def co_explore_macros(
     macro *family* from a library under the same budget/objective (the
     AutoDCIM-style outer loop the paper cites as complementary).
 
-    Returns (best result, all per-macro results)."""
-    results = [co_explore(m, workload, area_budget_mm2, **kw)
-               for m in macros]
+    The per-macro jobs run as ONE engine batch (macro constants are per-job
+    arrays inside a shared executable).  Returns (best result, all
+    per-macro results)."""
     objective = kw.get("objective", "ee")
+    method = kw.pop("method", "sa")
+    sa_settings = kw.pop("sa_settings", SASettings())
+    space = kw.pop("space", None) or DesignSpace()
+    fixed = kw.pop("fixed", None)
+    if fixed:
+        space = space.fix(**fixed)
+    jobs = [
+        ExploreJob(macro=m, workload=workload,
+                   area_budget_mm2=area_budget_mm2, space=space, **kw)
+        for m in macros
+    ]
+    eng = engine or default_engine()
+    results = eng.run(jobs, method=method, sa_settings=sa_settings)
     key = (lambda r: -r.metrics["tops_w"]) if objective == "ee" else \
         (lambda r: -r.metrics["gops"]) if objective == "th" else \
         (lambda r: r.metrics["latency_s"] * r.metrics["energy_pj"])
@@ -166,32 +118,36 @@ def pareto_explore(
     space: DesignSpace | None = None,
     bw: int = 256,
     tech: TechConstants = DEFAULT_TECH,
+    engine: ExplorationEngine | None = None,
 ) -> list[dict]:
     """Energy-efficiency vs throughput Pareto frontier over the pruned
     hardware space (the EE./Th. columns of Table II are this frontier's two
     endpoints).  Returns frontier points sorted by throughput, each with
-    config + metrics."""
-    import jax
+    config + metrics.
+
+    Each metric gets its own best mapping (the per-operator argmin is
+    objective-dependent), so this is a two-job engine batch -- "th" and
+    "ee" sweep the same candidate list inside one compiled executable."""
+    from repro.core.pruning import candidates_with_bw, prune_space
 
     space = space or DesignSpace()
     wl = workload.merged()
-    ops_arr = jnp.asarray(wl.as_arrays())
     cands, _ = prune_space(space, macro, area_budget_mm2, bw, tech)
     if len(cands) == 0:
         raise ValueError("no feasible hardware point under budget")
-    rows = jnp.asarray(candidates_with_bw(cands, bw))
+    rows = candidates_with_bw(cands, bw)
 
-    def eval_one(cfg_row):
-        # each metric gets its own best mapping (the per-operator argmin is
-        # objective-dependent)
-        lat_th, _en1, _ = cost_model.workload_cost(
-            ops_arr, cfg_row, macro, tech, "th", strategy_set)
-        _lat2, en_ee, _ = cost_model.workload_cost(
-            ops_arr, cfg_row, macro, tech, "ee", strategy_set)
-        return lat_th, en_ee
+    jobs = [
+        ExploreJob(macro=macro, workload=workload,
+                   area_budget_mm2=area_budget_mm2, objective=obj,
+                   strategy_set=strategy_set, bw=bw, tech=tech, space=space)
+        for obj in ("th", "ee")
+    ]
+    eng = engine or default_engine()
+    # pruned candidates respect budget+bandwidth, so the job objective
+    # degenerates to exactly total latency ("th") / total energy ("ee")
+    lat, en = eng.candidate_values(jobs, [rows, rows])
 
-    lat, en = jax.jit(jax.vmap(eval_one))(rows)
-    lat, en = np.asarray(lat), np.asarray(en)
     total_ops = float(wl.total_ops)
     gops = total_ops / (lat / (macro.freq_mhz * 1e6)) / 1e9
     tops_w = total_ops / (en * 1e-12) / 1e12
@@ -222,6 +178,10 @@ def evaluate_config(
 ) -> dict:
     """PPA of a *given* accelerator on a workload (used for the Table II
     baselines and for Fig. 8's fixed-hardware breakdowns)."""
+    import jax.numpy as jnp
+
+    from repro.core import cost_model
+
     wl = workload.merged()
     cfg_row = jnp.asarray(
         [cfg.mr, cfg.mc, cfg.scr, cfg.is_kb, cfg.os_kb, cfg.bw], dtype=float

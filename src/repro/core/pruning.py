@@ -16,11 +16,6 @@ import numpy as np
 
 from repro.core.calibration import DEFAULT_TECH, TechConstants
 from repro.core.macro import MacroSpec
-from repro.core.template import (
-    AcceleratorConfig,
-    accelerator_area_mm2,
-    bandwidth_ok,
-)
 
 MR_CHOICES = (1, 2, 3, 4, 6, 8)
 MC_CHOICES = (1, 2, 3, 4, 6, 8)

@@ -6,7 +6,6 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core import cost_model
 from repro.core.calibration import DEFAULT_TECH
 
 

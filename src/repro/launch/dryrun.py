@@ -24,8 +24,6 @@ import re
 import time
 import traceback
 
-import numpy as np
-
 DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
@@ -124,7 +122,7 @@ def run_cell(arch_id: str, shape_id: str, multi_pod: bool, sp_seq: bool = False,
     import jax
     from repro.configs import SHAPES, get_arch
     from repro.launch.mesh import make_production_mesh
-    from repro.launch.steps import build_cell, input_specs
+    from repro.launch.steps import build_cell
 
     cfg = get_arch(arch_id)
     if variant:
@@ -161,7 +159,8 @@ def run_cell(arch_id: str, shape_id: str, multi_pod: bool, sp_seq: bool = False,
             v = getattr(mem, f, None)
             if v is not None:
                 rec[f] = int(v)
-    cost = compiled.cost_analysis()
+    from repro.compat import compiled_cost_analysis
+    cost = compiled_cost_analysis(compiled)
     if cost:
         # NOTE: XLA cost analysis counts while-loop bodies ONCE; kept for
         # reference.  The loop-corrected numbers come from hlo_analysis.

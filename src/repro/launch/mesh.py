@@ -4,21 +4,21 @@ A function (not a module-level constant) so importing this module never
 touches jax device state.  Single pod: 16x16 = 256 chips ("data", "model").
 Multi-pod: 2x16x16 = 512 chips ("pod", "data", "model") -- the "pod" axis is
 an extra data-parallel dimension crossing the inter-pod DCN.
+
+Mesh creation goes through ``repro.compat.make_mesh`` so the ``axis_types``
+API difference between jax releases is handled in one place.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 1, n_model: int = 1):
     """Small mesh for CPU tests (1 device unless XLA_FLAGS raised it)."""
-    return jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((n_data, n_model), ("data", "model"))

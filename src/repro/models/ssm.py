@@ -9,7 +9,6 @@ and 500k-decode cells within budget.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

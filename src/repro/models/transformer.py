@@ -21,7 +21,6 @@ generated tokens for every family.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Callable
 
 import jax
@@ -33,8 +32,6 @@ from repro.models import ssm as ssm_lib
 from repro.models.layers import (
     COMPUTE_DTYPE,
     NEG_INF,
-    attn_apply,
-    attn_params,
     dense_attention,
     embed_init,
     mlp_apply,

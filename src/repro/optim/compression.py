@@ -12,7 +12,6 @@ the DCN hop between pods is the scarce resource this targets).
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

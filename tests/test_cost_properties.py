@@ -1,16 +1,21 @@
 """Hypothesis property tests on the cost model's invariants."""
-import jax
-import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core import (
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.compat import enable_x64  # noqa: E402
+from repro.core import (  # noqa: E402
     ALL_STRATEGIES,
     AcceleratorConfig,
     get_macro,
     matmul_cost,
     strategy_feasible,
 )
-from repro.core.cost_model import INFEASIBLE
+from repro.core.cost_model import INFEASIBLE  # noqa: E402
+
+pytestmark = pytest.mark.slow      # hypothesis sweeps re-trace per example
 
 MACRO = get_macro("vanilla-dcim")
 
@@ -39,7 +44,7 @@ def test_af_reads_inputs_more_pf_writes_psums_more(cfg, dims):
     """Paper Fig. 8: AF raises Input-SRAM overhead, PF raises Output-SRAM
     overhead (per-strategy-pair, same scheduling)."""
     m, k, n = dims
-    with jax.enable_x64(True):
+    with enable_x64(True):
         af = _cost(cfg, m, k, n, ALL_STRATEGIES[0])   # NR-IP-AF
         pf = _cost(cfg, m, k, n, ALL_STRATEGIES[1])   # NR-IP-PF
     assert float(af.is_rd_bits) >= float(pf.is_rd_bits)
@@ -55,7 +60,7 @@ def test_wp_streams_inputs_once(cfg, dims):
     s_ip, s_wp = ALL_STRATEGIES[0], ALL_STRATEGIES[2]
     if not strategy_feasible(MACRO, cfg, m, k, n, s_wp):
         return
-    with jax.enable_x64(True):
+    with enable_x64(True):
         ip = _cost(cfg, m, k, n, s_ip)
         wp = _cost(cfg, m, k, n, s_wp)
     assert float(wp.v_ema_bits) <= float(ip.v_ema_bits)
@@ -67,7 +72,7 @@ def test_wp_streams_inputs_once(cfg, dims):
 @given(cfg=cfg_st, dims=dims_st)
 def test_latency_positive_and_energy_scales(cfg, dims):
     m, k, n = dims
-    with jax.enable_x64(True):
+    with enable_x64(True):
         cb = _cost(cfg, m, k, n, ALL_STRATEGIES[0])
     lat, en = float(cb.latency_cycles), float(cb.energy_pj)
     assert lat > 0 and en > 0
@@ -83,7 +88,7 @@ def test_bigger_buffers_never_increase_traffic(cfg, dims):
     import dataclasses
     m, k, n = dims
     big = dataclasses.replace(cfg, is_kb=cfg.is_kb * 8)
-    with jax.enable_x64(True):
+    with enable_x64(True):
         small_c = _cost(cfg, m, k, n, ALL_STRATEGIES[0])
         big_c = _cost(big, m, k, n, ALL_STRATEGIES[0])
     assert float(big_c.v_ema_bits) <= float(small_c.v_ema_bits)
@@ -98,7 +103,7 @@ def test_bigger_scr_never_more_af_spill(dims, scr1, scale):
     m, k, n = dims
     c1 = AcceleratorConfig(2, 2, scr1, 16, 4)
     c2 = AcceleratorConfig(2, 2, scr1 * scale, 16, 4)
-    with jax.enable_x64(True):
+    with enable_x64(True):
         a = _cost(c1, m, k, n, ALL_STRATEGIES[0])
         b = _cost(c2, m, k, n, ALL_STRATEGIES[0])
     assert float(b.spill_ema_bits) <= float(a.spill_ema_bits)

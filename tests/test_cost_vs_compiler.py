@@ -2,10 +2,10 @@
 instruction-flow compiler's per-set schedule sums exactly (integer for
 integer) for every strategy, and the address-level trace must perform the
 exact matrix multiplication under IS/CIM/OS capacity invariants."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from repro.compat import enable_x64
 
 from repro.core import (
     ALL_STRATEGIES,
@@ -55,7 +55,7 @@ def _random_cases(n_cases, seed):
 
 def test_closed_form_matches_compiler_exactly():
     checked = 0
-    with jax.enable_x64(True):
+    with enable_x64(True):
         for macro, cfg, m, k, n in _random_cases(40, seed=123):
             for s in ALL_STRATEGIES:
                 if not strategy_feasible(macro, cfg, m, k, n, s):
@@ -75,7 +75,7 @@ def test_compute_cycles_strategy_invariant():
     aside) -- the mapping only re-orders it."""
     macro = get_macro("vanilla-dcim")
     cfg = AcceleratorConfig(2, 2, 8, 32, 16)
-    with jax.enable_x64(True):
+    with enable_x64(True):
         for (m, k, n) in ((64, 300, 200), (17, 100, 90)):
             vals = set()
             for s in ALL_STRATEGIES:
@@ -111,7 +111,7 @@ def test_reversed_is_swap_symmetry():
     """R(m,k,n) == NR(n,k,m) when streamed/stationary widths are equal."""
     macro = get_macro("vanilla-dcim")
     cfg = AcceleratorConfig(2, 2, 4, 16, 8)
-    with jax.enable_x64(True):
+    with enable_x64(True):
         for s_idx in (0, 1, 2, 3):
             s = ALL_STRATEGIES[s_idx]            # NR variants
             r = ALL_STRATEGIES[s_idx + 4]        # matching R variants
@@ -127,7 +127,7 @@ def test_infeasible_strategies_get_sentinel():
     # IS too small to hold one full row: WP infeasible, IP fine
     cfg = AcceleratorConfig(2, 1, 2, 1, 8)      # 1 KB IS
     m, k, n = 32, 4096, 256
-    with jax.enable_x64(True):
+    with enable_x64(True):
         wp = _closed_form(macro, cfg, m, k, n, ALL_STRATEGIES[2])  # NR-WP-AF
         ip = _closed_form(macro, cfg, m, k, n, ALL_STRATEGIES[0])  # NR-IP-AF
     assert float(wp.latency_cycles) == INFEASIBLE

@@ -4,22 +4,22 @@ import json
 import os
 import subprocess
 import sys
-import tempfile
 
 import pytest
+
+pytestmark = pytest.mark.slow      # 8-fake-device compile in a subprocess
 
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json, sys
 import jax
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 import repro.launch.mesh as meshmod
 # single pod: 4 devices; multi pod: 8 -> per-device work halves
-meshmod.make_production_mesh = lambda multi_pod=False: jax.make_mesh(
+meshmod.make_production_mesh = lambda multi_pod=False: make_mesh(
     (2, 2, 2) if multi_pod else (2, 2),
-    ("pod", "data", "model") if multi_pod else ("data", "model"),
-    axis_types=(AxisType.Auto,) * (3 if multi_pod else 2))
+    ("pod", "data", "model") if multi_pod else ("data", "model"))
 
 # shrink the arch so an 8-device compile is quick but structure is intact
 import repro.configs.base as base

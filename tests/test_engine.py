@@ -1,0 +1,127 @@
+"""Batched exploration engine: per-job equivalence, caching, bucketing."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    DesignSpace,
+    ExplorationEngine,
+    ExploreJob,
+    SASettings,
+    bert_large_workload,
+    co_explore,
+    co_explore_macros,
+    get_macro,
+)
+from repro.core.macro import TPDCIM_MACRO, TRANCIM_MACRO
+
+SMALL = DesignSpace(mr=(1, 2, 3), mc=(1, 2), scr=(1, 4, 16),
+                    is_kb=(2, 16, 128), os_kb=(2, 16, 64))
+
+
+def _heterogeneous_jobs():
+    """3+ jobs differing in macro, workload, objective AND strategy set."""
+    from repro.configs import get_arch
+    return [
+        ExploreJob(TPDCIM_MACRO, bert_large_workload(), 2.23,
+                   objective="ee", space=SMALL),
+        ExploreJob(get_macro("vanilla-dcim"),
+                   get_arch("yi-6b").workload(seq=512), 5.0,
+                   objective="th", space=SMALL),
+        ExploreJob(TRANCIM_MACRO, get_arch("whisper-small").workload(seq=512),
+                   3.52, objective="ee", strategy_set="so", space=SMALL),
+        ExploreJob(get_macro("lcc-cim"), bert_large_workload(), 3.0,
+                   objective="edp", space=SMALL),
+    ]
+
+
+@pytest.mark.parametrize("method", ["exhaustive", "sa"])
+def test_batched_matches_per_job_co_explore(method):
+    """The batched engine must return the SAME best configs/metrics as the
+    sequential per-job path (a batch of one) on heterogeneous jobs."""
+    jobs = _heterogeneous_jobs()
+    settings = SASettings(n_chains=16, n_steps=100, seed=3)
+    engine = ExplorationEngine()
+    batched = engine.run(jobs, method=method, sa_settings=settings)
+    for job, b in zip(jobs, batched):
+        s = co_explore(job.macro, job.workload, job.area_budget_mm2,
+                       objective=job.objective,
+                       strategy_set=job.strategy_set, method=method,
+                       space=SMALL, sa_settings=settings)
+        assert b.config.as_tuple() == s.config.as_tuple(), (method, job)
+        for key in ("energy_pj", "latency_cycles", "tops_w", "gops"):
+            assert b.metrics[key] == pytest.approx(s.metrics[key], rel=1e-9)
+        assert b.metrics["area_mm2"] <= job.area_budget_mm2 * 1.001
+
+
+def test_executable_cache_hits_on_resubmission():
+    jobs = _heterogeneous_jobs()
+    settings = SASettings(n_chains=8, n_steps=40, seed=0)
+    engine = ExplorationEngine()
+    first = engine.run(jobs, method="sa", sa_settings=settings)
+    misses = engine.stats["executable_cache_misses"]
+    again = engine.run(jobs, method="sa", sa_settings=settings)
+    assert engine.stats["executable_cache_misses"] == misses, \
+        "repeat submission must not build new executables"
+    assert engine.stats["executable_cache_hits"] > 0
+    for a, b in zip(first, again):
+        assert a.config.as_tuple() == b.config.as_tuple()
+        assert a.metrics["energy_pj"] == b.metrics["energy_pj"]
+
+
+def test_bucketing_pads_are_cost_transparent():
+    """Jobs bucketed together (padded operator arrays) score identically to
+    solo runs: padded rows carry count == 0 and contribute nothing."""
+    from repro.configs import get_arch
+    wl_small = bert_large_workload()                 # few merged ops
+    wl_big = get_arch("whisper-small").workload(seq=512)  # many (cross-attn)
+    engine = ExplorationEngine()
+    solo = engine.run(
+        [ExploreJob(TPDCIM_MACRO, wl_small, 2.23, space=SMALL)],
+        method="exhaustive")[0]
+    mixed = engine.run(
+        [ExploreJob(TPDCIM_MACRO, wl_small, 2.23, space=SMALL),
+         ExploreJob(TPDCIM_MACRO, wl_big, 2.23, space=SMALL)],
+        method="exhaustive")[0]
+    assert solo.config.as_tuple() == mixed.config.as_tuple()
+    assert solo.metrics["energy_pj"] == mixed.metrics["energy_pj"]
+
+
+def test_macro_library_runs_as_one_batch():
+    """co_explore_macros stacks per-macro jobs into one engine batch (macro
+    constants are per-job arrays inside a shared executable)."""
+    engine = ExplorationEngine()
+    wl = bert_large_workload()
+    macros = [get_macro("vanilla-dcim"), get_macro("lcc-cim")]
+    best, results = co_explore_macros(
+        macros, wl, 3.0, objective="ee", method="exhaustive", space=SMALL,
+        engine=engine)
+    assert engine.stats["jobs"] == 2
+    assert engine.stats["batches"] == 1
+    assert best.metrics["tops_w"] == max(r.metrics["tops_w"]
+                                         for r in results)
+
+
+def test_search_stats_reported():
+    engine = ExplorationEngine()
+    res = engine.run(
+        [ExploreJob(TPDCIM_MACRO, bert_large_workload(), 2.23, space=SMALL)],
+        method="exhaustive")[0]
+    assert res.search["method"] == "exhaustive"
+    assert res.search["batch_jobs"] == 1
+    assert res.search["runtime_s"] > 0
+    assert res.search["kept"] > 0                    # prune stats forwarded
+
+
+def test_candidate_values_match_objective():
+    """candidate_values (the Pareto path) equals the argmin path's scores."""
+    from repro.core.pruning import candidates_with_bw, prune_space
+    job = ExploreJob(TPDCIM_MACRO, bert_large_workload(), 2.23, space=SMALL)
+    engine = ExplorationEngine()
+    cands, _ = prune_space(SMALL, job.macro, job.area_budget_mm2, job.bw,
+                           job.tech)
+    rows = candidates_with_bw(cands, job.bw)
+    vals = engine.candidate_values([job], [rows])[0]
+    assert len(vals) == len(rows)
+    best = engine.run([job], method="exhaustive")[0]
+    np_best = rows[int(np.argmin(vals))]
+    assert tuple(int(x) for x in np_best[:5]) == best.config.as_tuple()

@@ -1,7 +1,4 @@
 """Pruning + SA + exhaustive co-exploration tests."""
-import numpy as np
-import pytest
-
 from repro.core import (
     AcceleratorConfig,
     DesignSpace,

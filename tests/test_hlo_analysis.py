@@ -1,7 +1,6 @@
 """HLO call-graph analyzer: loop-trip-count correctness + parser units."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch.hlo_analysis import _type_bytes, analyze, parse_module
 
@@ -45,8 +44,9 @@ def test_unrolled_matches_xla_cost_analysis():
         return x.sum()
     c = _compile(f, jax.ShapeDtypeStruct((64, 64), jnp.float32),
                  jax.ShapeDtypeStruct((4, 64, 64), jnp.float32))
+    from repro.compat import compiled_cost_analysis
     ours = analyze(c.as_text())["dot_flops"]
-    xla = c.cost_analysis()["flops"]
+    xla = compiled_cost_analysis(c)["flops"]
     # unrolled: both must count all 4 matmuls (xla adds small reduce flops)
     assert abs(ours - 2 * 64 * 64 * 64 * 4) < 1e-6
     assert ours <= xla <= ours * 1.02

@@ -4,7 +4,6 @@ import math
 import pytest
 
 from repro.core import (
-    DEFAULT_TECH,
     AcceleratorConfig,
     MACRO_LIBRARY,
     accelerator_area_mm2,

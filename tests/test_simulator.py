@@ -1,7 +1,7 @@
 """Cycle simulator: sandwich bounds vs the closed form + pipeline sanity."""
-import jax
 import numpy as np
 
+from repro.compat import enable_x64
 from repro.core import (
     ALL_STRATEGIES,
     AcceleratorConfig,
@@ -18,7 +18,7 @@ def test_sandwich_bounds():
     macro = get_macro("vanilla-dcim")
     rng = np.random.default_rng(3)
     n_checked = 0
-    with jax.enable_x64(True):
+    with enable_x64(True):
         for _ in range(10):
             cfg = AcceleratorConfig(
                 int(rng.integers(1, 4)), int(rng.integers(1, 4)),

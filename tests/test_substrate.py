@@ -13,6 +13,8 @@ from repro.optim.compression import (compressed_allreduce, dequantize_int8,
                                      quantize_int8)
 from repro.train.checkpoint import CheckpointManager
 
+pytestmark = pytest.mark.slow      # trainer/serving compiles take minutes
+
 
 # ---------------------------------------------------------------------- #
 # optimizer
@@ -74,8 +76,8 @@ def test_int8_quant_roundtrip():
 
 
 def test_compressed_allreduce_error_feedback():
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh, shard_map
+    mesh = make_mesh((1,), ("pod",))
     from jax.sharding import PartitionSpec as P
     grads = {"w": jnp.asarray(np.random.default_rng(1)
                               .standard_normal((64, 64)), jnp.float32)}
@@ -84,7 +86,7 @@ def test_compressed_allreduce_error_feedback():
         out, err = compressed_allreduce(g, "pod")
         return out, err
 
-    smapped = jax.jit(jax.shard_map(
+    smapped = jax.jit(shard_map(
         body, mesh=mesh, in_specs=(P(),), out_specs=(P(), P())))
     out, err = smapped(grads)
     # single participant: mean == dequant(quant(g)); EF residual = g - deq
