@@ -1,12 +1,18 @@
 """Benchmark driver: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV lines (plus section markers).
+Prints ``name,us_per_call,derived`` CSV lines (plus section markers) and
+writes a machine-readable ``results.jsonl`` -- one record per figure/table
+with timings and parsed rows -- which the nightly CI job uploads as a trend
+artifact.  Modules whose ``run()`` is a generator (fig7, table2) stream
+their rows incrementally through the async DSE service.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig7,table2]
+                                            [--jsonl results.jsonl]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -21,31 +27,66 @@ MODULES = (
 )
 
 
+def _parse_row(line: str) -> dict:
+    """``name,us_per_call,derived`` -> record (derived may contain commas)."""
+    parts = line.split(",", 2)
+    row = {"name": parts[0]}
+    try:
+        row["us_per_call"] = float(parts[1])
+    except (IndexError, ValueError):
+        row["us_per_call"] = None
+    row["derived"] = parts[2] if len(parts) > 2 else ""
+    return row
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated module prefixes")
+    ap.add_argument("--jsonl", default="results.jsonl",
+                    help="machine-readable per-module results file "
+                         "(trend artifact); '' disables")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else None
 
+    records = []
     failures = 0
     t_all = time.perf_counter()
     for mod_name, title in MODULES:
         if only and not any(mod_name.startswith(o) for o in only):
             continue
         print(f"# === {mod_name}: {title} ===", flush=True)
+        rec = {"module": mod_name, "title": title, "rows": []}
+        t0 = time.perf_counter()
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
-            t0 = time.perf_counter()
+            # generator run()s stream rows as their service buckets finish
             for line in mod.run():
                 print(line, flush=True)
+                rec["rows"].append(_parse_row(line))
+            rec["status"] = "ok"
             print(f"# {mod_name} done in {time.perf_counter()-t0:.1f}s",
                   flush=True)
         except Exception:   # noqa: BLE001 -- report all benches
             failures += 1
-            print(f"# {mod_name} FAILED:\n{traceback.format_exc()}",
-                  flush=True)
-    print(f"# total {time.perf_counter()-t_all:.1f}s, failures={failures}")
+            rec["status"] = "failed"
+            rec["error"] = traceback.format_exc()
+            print(f"# {mod_name} FAILED:\n{rec['error']}", flush=True)
+        rec["elapsed_s"] = round(time.perf_counter() - t0, 3)
+        records.append(rec)
+
+    total_s = time.perf_counter() - t_all
+    print(f"# total {total_s:.1f}s, failures={failures}")
+    if args.jsonl:
+        with open(args.jsonl, "w") as f:
+            for rec in records:
+                f.write(json.dumps(rec) + "\n")
+            f.write(json.dumps({
+                "module": "_summary", "total_s": round(total_s, 3),
+                "failures": failures, "modules_run": len(records),
+                "created_s": time.time(),
+            }) + "\n")
+        print(f"# wrote {len(records)+1} records to {args.jsonl}")
     if failures:
         sys.exit(1)
 

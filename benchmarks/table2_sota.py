@@ -4,11 +4,16 @@ co-exploration re-balances (MR, MC, SCR, IS, OS) for energy efficiency (EE.)
 and throughput (Th.) separately.  Other hardware parameters (macro, BW) are
 fixed, as in the paper.
 
-The four (macro x objective) explorations run as ONE engine batch: macro
-constants are per-job arrays inside a shared compiled executable."""
+The four (macro x objective) explorations go through the async DSE service;
+``run()`` is a generator that yields each accelerator's three rows (base,
+EE., Th.) as soon as both of its explorations complete -- the first
+accelerator's results print while the second is still sweeping."""
 from __future__ import annotations
 
-from benchmarks.common import csv_line, timed
+import time
+import typing
+
+from benchmarks.common import csv_line
 from repro.core import (
     AcceleratorConfig,
     ExplorationEngine,
@@ -18,6 +23,9 @@ from repro.core import (
 from repro.core.ir import bert_large_workload
 from repro.core.macro import TPDCIM_MACRO, TRANCIM_MACRO
 from repro.core.template import accelerator_area_mm2
+from repro.service import ServiceClient, as_completed
+
+STREAM_TIMEOUT_S = 1800.0
 
 BASELINES = {
     "TranCIM": (TRANCIM_MACRO, AcceleratorConfig(3, 1, 1, 64, 128),
@@ -29,46 +37,58 @@ BASELINES = {
 }
 
 
-def run() -> list[str]:
+def run() -> typing.Iterator[str]:
     wl = bert_large_workload()
-    engine = ExplorationEngine()
+    svc = ServiceClient(engine=ExplorationEngine())
+    try:
+        jobs, metas, budgets = [], [], {}
+        for name, (macro, base_cfg, _paper) in BASELINES.items():
+            budget = accelerator_area_mm2(base_cfg, macro)
+            budgets[name] = budget
+            for obj in ("ee", "th"):
+                jobs.append(ExploreJob(macro, wl, budget, objective=obj))
+                metas.append((name, obj))
+        t0 = time.perf_counter()
+        futures = svc.submit_many(jobs, method="exhaustive", metas=metas)
 
-    jobs, budgets = [], {}
-    for name, (macro, base_cfg, _paper) in BASELINES.items():
-        budget = accelerator_area_mm2(base_cfg, macro)
-        budgets[name] = budget
-        for obj in ("ee", "th"):
-            jobs.append(ExploreJob(macro, wl, budget, objective=obj))
-    explored, dt = timed(engine.run, jobs, method="exhaustive")
-    by_key = {(name, obj): r
-              for (name, obj), r in zip(
-                  [(n, o) for n in BASELINES for o in ("ee", "th")],
-                  explored)}
-
-    lines = []
-    for name, (macro, base_cfg, paper) in BASELINES.items():
-        budget = budgets[name]
-        base = evaluate_config(macro, base_cfg, wl)
-        ee, th = by_key[(name, "ee")], by_key[(name, "th")]
-        ee_gain = ee.metrics["tops_w"] / base["tops_w"]
-        th_gain = th.metrics["gops"] / base["gops"]
-        lines.append(csv_line(
-            f"table2_{name}_base", dt * 1e6 / len(BASELINES),
-            f"cfg={base_cfg.as_tuple()} EE={base['tops_w']:.2f} TOPS/W "
-            f"(paper {paper['ee']}) Th={base['gops']:.0f} GOPS "
-            f"(paper {paper['th']}) area={budget:.2f} (paper {paper['area']})"))
-        lines.append(csv_line(
-            f"table2_{name}_EE", 0.0,
-            f"cfg={ee.config.as_tuple()} EE={ee.metrics['tops_w']:.2f} TOPS/W "
-            f"area={ee.metrics['area_mm2']:.2f} gain=x{ee_gain:.2f} "
-            f"(paper x{paper['ee_gain']})"))
-        lines.append(csv_line(
-            f"table2_{name}_Th", 0.0,
-            f"cfg={th.config.as_tuple()} Th={th.metrics['gops']:.0f} GOPS "
-            f"area={th.metrics['area_mm2']:.2f} gain=x{th_gain:.2f} "
-            f"(paper x{paper['th_gain']})"))
-    return lines
+        explored: dict[str, dict] = {name: {} for name in BASELINES}
+        t_last = t0
+        for fut in as_completed(futures, timeout=STREAM_TIMEOUT_S):
+            name, obj = fut.meta
+            explored[name][obj] = fut.result()
+            if len(explored[name]) < 2:
+                continue
+            macro, base_cfg, paper = BASELINES[name]
+            budget = budgets[name]
+            # marginal wall-clock to produce this accelerator's rows
+            t_now = time.perf_counter()
+            dt_row, t_last = t_now - t_last, t_now
+            base = evaluate_config(macro, base_cfg, wl)
+            ee, th = explored[name]["ee"], explored[name]["th"]
+            ee_gain = ee.metrics["tops_w"] / base["tops_w"]
+            th_gain = th.metrics["gops"] / base["gops"]
+            yield csv_line(
+                f"table2_{name}_base", dt_row * 1e6,
+                f"cfg={base_cfg.as_tuple()} EE={base['tops_w']:.2f} TOPS/W "
+                f"(paper {paper['ee']}) Th={base['gops']:.0f} GOPS "
+                f"(paper {paper['th']}) area={budget:.2f} "
+                f"(paper {paper['area']})")
+            yield csv_line(
+                f"table2_{name}_EE", 0.0,
+                f"cfg={ee.config.as_tuple()} "
+                f"EE={ee.metrics['tops_w']:.2f} TOPS/W "
+                f"area={ee.metrics['area_mm2']:.2f} gain=x{ee_gain:.2f} "
+                f"(paper x{paper['ee_gain']})")
+            yield csv_line(
+                f"table2_{name}_Th", 0.0,
+                f"cfg={th.config.as_tuple()} "
+                f"Th={th.metrics['gops']:.0f} GOPS "
+                f"area={th.metrics['area_mm2']:.2f} gain=x{th_gain:.2f} "
+                f"(paper x{paper['th_gain']})")
+    finally:
+        svc.close()
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    for line in run():
+        print(line, flush=True)

@@ -1,0 +1,58 @@
+"""Async DSE service: submit, stream, and hit the warm result store.
+
+    PYTHONPATH=src python examples/async_service.py
+
+Demonstrates the three service tiers over the batched exploration engine:
+
+1. submit a heterogeneous job list and consume results in COMPLETION order
+   (each executable bucket resolves the moment it finishes);
+2. resubmit an identical job -> deduped in flight / served from the
+   persistent result store with zero engine work;
+3. stream per-workload Pareto frontiers.
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_arch
+from repro.core import ExploreJob, bert_large_workload, get_macro
+from repro.service import ServiceClient, as_completed, stream_pareto
+
+macro = get_macro("vanilla-dcim")
+workloads = {
+    "bert-large": bert_large_workload(),
+    "yi-6b": get_arch("yi-6b").workload(seq=512),
+    "whisper-small": get_arch("whisper-small").workload(seq=512),
+}
+
+svc = ServiceClient()
+
+# -- 1. streaming: results arrive per executable bucket ----------------- #
+print("== streaming submission (completion order) ==")
+t0 = time.perf_counter()
+futures = svc.submit_many(
+    [ExploreJob(macro, wl, 5.0, objective="ee") for wl in workloads.values()],
+    method="exhaustive", metas=list(workloads))
+for fut in as_completed(futures, timeout=600):
+    print(f"  [{time.perf_counter()-t0:5.1f}s] {fut.result().summary()}")
+
+# -- 2. warm path: identical job, zero engine invocations --------------- #
+print("\n== warm resubmission ==")
+t0 = time.perf_counter()
+again = svc.submit(ExploreJob(macro, workloads["bert-large"], 5.0,
+                              objective="ee"), method="exhaustive")
+r = again.result(timeout=60)
+print(f"  [{time.perf_counter()-t0:5.3f}s] source={again.source}  "
+      f"{r.summary()}")
+print(f"  service stats: {svc.stats}")
+
+# -- 3. streaming Pareto frontiers -------------------------------------- #
+print("\n== streaming EE/Th Pareto frontiers ==")
+for name, frontier in stream_pareto(
+        macro, list(workloads.values())[:2], 5.0, service=svc, timeout=600):
+    pts = ", ".join(f"({p['gops']:.0f} GOPS, {p['tops_w']:.2f} TOPS/W)"
+                    for p in frontier[:3])
+    print(f"  {name}: {len(frontier)} frontier points  [{pts}, ...]")
+
+svc.close()

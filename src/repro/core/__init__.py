@@ -31,7 +31,8 @@ from repro.core.cost_model import (
 from repro.core.distributed import DistributedResult, distributed_co_explore
 from repro.core.engine import (ExplorationEngine, ExploreJob,
                                default_engine,
-                               enable_persistent_compilation_cache)
+                               enable_persistent_compilation_cache,
+                               job_key)
 from repro.core.explorer import (ExploreResult, co_explore,
                                  co_explore_macros, evaluate_config,
                                  pareto_explore)
@@ -59,6 +60,6 @@ __all__ = [
     "co_explore", "co_explore_macros", "pareto_explore",
     "evaluate_config", "ExploreResult",
     "ExplorationEngine", "ExploreJob", "default_engine",
-    "enable_persistent_compilation_cache",
+    "enable_persistent_compilation_cache", "job_key",
     "distributed_co_explore", "DistributedResult",
 ]

@@ -22,8 +22,10 @@ lists through shared compiled executables:
    (:func:`enable_persistent_compilation_cache`) so fresh processes -- CI
    runs, benchmark re-runs -- reuse compiles from disk.
 
-``co_explore`` / ``co_explore_macros`` / ``pareto_explore``
-(``core/explorer.py``) are thin wrappers over a process-wide default engine;
+Identical jobs inside one ``run()`` (same canonical :func:`job_key`)
+evaluate once and fan the result out.  ``co_explore`` / ``co_explore_macros``
+/ ``pareto_explore`` (``core/explorer.py``) are thin synchronous clients of
+the async DSE service (``repro.service``) built on this engine;
 ``benchmarks/fig7_mapping.py`` prints the measured batched-vs-sequential
 speedup.  ``core/distributed.py`` shards the same job x chain population
 across devices.
@@ -31,6 +33,8 @@ across devices.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 import os
 import time
 import typing
@@ -60,6 +64,7 @@ __all__ = [
     "ExplorationEngine",
     "default_engine",
     "enable_persistent_compilation_cache",
+    "job_key",
 ]
 
 
@@ -157,6 +162,63 @@ class ExploreResult:
         )
 
 
+# --------------------------------------------------------------------- #
+# canonical job identity (dedup + the service result store)
+# --------------------------------------------------------------------- #
+#: bump when the cost model / result schema changes meaning, so persisted
+#: results keyed under the old schema stop matching
+JOB_KEY_SCHEMA = 1
+
+
+def _canonical(obj):
+    """JSON-able canonical form of job ingredients (dataclasses, tuples,
+    floats-as-hex so equality is bit-exact, not repr-approximate)."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        out = {"__type__": type(obj).__name__}
+        for f in dataclasses.fields(obj):
+            out[f.name] = _canonical(getattr(obj, f.name))
+        return out
+    if isinstance(obj, (tuple, list)):
+        return [_canonical(x) for x in obj]
+    if isinstance(obj, dict):
+        return {str(k): _canonical(v) for k, v in sorted(obj.items())}
+    if isinstance(obj, (bool, np.bool_)):
+        return bool(obj)
+    if isinstance(obj, (int, np.integer)):
+        return int(obj)
+    if isinstance(obj, (float, np.floating)):
+        return float(obj).hex()
+    if isinstance(obj, str) or obj is None:
+        return obj
+    return repr(obj)                               # pragma: no cover
+
+
+def job_key(
+    job: ExploreJob,
+    method: str = "sa",
+    sa_settings: SASettings | None = None,
+) -> str:
+    """Content hash identifying one exploration's *answer*.
+
+    Two submissions share a key iff they are guaranteed to produce
+    bit-identical results: same job ingredients (macro, workload, budget,
+    objective, strategy set, bandwidth, tech constants, design space,
+    merge flag), same search method, same SA settings when the method is
+    stochastic, and the same x64 mode.  Used for in-batch dedup
+    (:meth:`ExplorationEngine.run`), in-flight dedup in the service queue,
+    and as the content address of the persistent result store.
+    """
+    payload = {
+        "schema": JOB_KEY_SCHEMA,
+        "job": _canonical(dataclasses.replace(job, space=job.design_space())),
+        "method": method,
+        "sa": _canonical(sa_settings) if method == "sa" else None,
+        "x64": bool(jax.config.jax_enable_x64),
+    }
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
 class _PreparedJob(typing.NamedTuple):
     job: ExploreJob
     workload: Workload               # merged view actually evaluated
@@ -191,6 +253,14 @@ def _stack_jobs(rows: list[cost_model.JobParams]) -> cost_model.JobParams:
     return jax.tree.map(lambda *xs: np.stack(xs), *rows)
 
 
+def clone_result(r: ExploreResult) -> ExploreResult:
+    """Fan-out copy for deduped submissions (fresh mutable containers so
+    callers mutating one result cannot alias another)."""
+    return dataclasses.replace(
+        r, per_op_strategy=dict(r.per_op_strategy),
+        metrics=dict(r.metrics), search=dict(r.search))
+
+
 # --------------------------------------------------------------------- #
 # the engine
 # --------------------------------------------------------------------- #
@@ -220,7 +290,7 @@ class ExplorationEngine:
         self._use_cache = bool(executable_cache)
         self._executables: dict = {}
         self.stats = {
-            "jobs": 0, "batches": 0,
+            "jobs": 0, "batches": 0, "dedup_hits": 0,
             "executable_cache_hits": 0, "executable_cache_misses": 0,
         }
         if persistent_compile_cache:
@@ -277,37 +347,63 @@ class ExplorationEngine:
         jobs: typing.Sequence[ExploreJob],
         method: str = "sa",
         sa_settings: SASettings | None = None,
+        keys: typing.Sequence[str] | None = None,
     ) -> list[ExploreResult]:
         """Co-explore every job; results come back in submission order.
 
         ``method="sa"`` anneals all jobs' chains in one jitted call per
         shape bucket; ``method="exhaustive"`` sweeps each job's pruned
-        candidate list in shared ``[jobs, chunk]`` blocks.
+        candidate list in shared ``[jobs, chunk]`` blocks.  ``keys`` lets
+        callers that already computed :func:`job_key` for each job (the
+        service queue) skip re-hashing; when given it must align 1:1 with
+        ``jobs``.
         """
         if method not in ("sa", "exhaustive"):
             raise ValueError(f"unknown method {method!r}")
         t_start = time.perf_counter()
-        prepared = [self._prepare(j) for j in jobs]
-        self.stats["jobs"] += len(prepared)
+        settings = sa_settings or self.sa_settings
 
-        results: list[ExploreResult | None] = [None] * len(prepared)
-        for bucket, members in self._buckets(prepared, method).items():
+        # identical submissions (same canonical key) evaluate ONCE; the
+        # result fans out to every duplicate slot below
+        if keys is None:
+            keys = [job_key(j, method, settings if method == "sa" else None)
+                    for j in jobs]
+        elif len(keys) != len(jobs):
+            raise ValueError(
+                f"keys length {len(keys)} != jobs length {len(jobs)}")
+        first_of: dict[str, int] = {}
+        unique: list[int] = []
+        for i, k in enumerate(keys):
+            if k in first_of:
+                self.stats["dedup_hits"] += 1
+            else:
+                first_of[k] = i
+                unique.append(i)
+
+        prepared = {i: self._prepare(jobs[i]) for i in unique}
+        self.stats["jobs"] += len(jobs)
+
+        results: list[ExploreResult | None] = [None] * len(jobs)
+        for bucket, members in self._buckets(
+                [(i, prepared[i]) for i in unique], method).items():
             del bucket
             idxs = [i for i, _ in members]
             batch = [p for _, p in members]
             self.stats["batches"] += 1
             if method == "sa":
-                outs = self._run_sa_batch(
-                    batch, sa_settings or self.sa_settings)
+                outs = self._run_sa_batch(batch, settings)
             else:
                 outs = self._run_exhaustive_batch(batch)
             for i, out in zip(idxs, outs):
                 results[i] = out
+        for i, k in enumerate(keys):
+            if results[i] is None:
+                results[i] = clone_result(results[first_of[k]])
 
         runtime = time.perf_counter() - t_start
         for r in results:
             r.search["runtime_s"] = runtime
-            r.search["batch_jobs"] = len(prepared)
+            r.search["batch_jobs"] = len(jobs)
         return typing.cast("list[ExploreResult]", results)
 
     def candidate_values(
@@ -343,15 +439,26 @@ class ExplorationEngine:
             mat=mat, lens=lens,
         )
 
-    def _buckets(self, prepared: list[_PreparedJob], method: str) -> dict:
-        """Group job indices by executable signature, preserving order."""
+    def bucket_key(self, job: ExploreJob, method: str = "sa") -> tuple:
+        """Executable-signature bucket of a job: jobs sharing a bucket run
+        in one batched call (the service queue groups submissions by this
+        so each micro-batch dispatches as exactly one ``run()``)."""
+        return self._bucket_key(self._prepare(job), method)
+
+    @staticmethod
+    def _bucket_key(p: _PreparedJob, method: str) -> tuple:
+        if method == "sa":
+            return (p.ops_pad, _pow2_at_least(p.mat.shape[1]))
+        return (p.ops_pad,)
+
+    def _buckets(
+        self, prepared: list[tuple[int, _PreparedJob]], method: str,
+    ) -> dict:
+        """Group (index, prepared) pairs by executable signature,
+        preserving order."""
         groups: dict = {}
-        for i, p in enumerate(prepared):
-            if method == "sa":
-                key = (p.ops_pad, _pow2_at_least(p.mat.shape[1]))
-            else:
-                key = (p.ops_pad,)
-            groups.setdefault(key, []).append((i, p))
+        for i, p in prepared:
+            groups.setdefault(self._bucket_key(p, method), []).append((i, p))
         return groups
 
     # ---- SA path -------------------------------------------------- #

@@ -13,11 +13,16 @@ Two search methods:
     the whole evaluation is one vmapped jnp expression); used to validate SA
     quality in tests and available to users for small spaces.
 
-Everything here is a thin wrapper over the batched exploration engine
-(``core/engine.py``): a single job is just a batch of one, so repeated calls
-share the engine's executable cache, and sweep-style consumers should build
-``ExploreJob`` lists and call ``ExplorationEngine.run`` directly to amortize
-compilation AND dispatch across the whole sweep.
+Everything here is a thin synchronous client of the process-wide async DSE
+service (``repro.service``): a single call submits a batch of one, so
+repeated/interleaved callers share the engine's executable cache, identical
+in-flight submissions dedup onto one evaluation, and repeated queries across
+processes hit the persistent result store instead of re-annealing.  Passing
+``engine=`` explicitly bypasses the service and dispatches directly on that
+engine (no queue, no store) -- the escape hatch for benchmarking and for
+callers that manage their own batches.  Sweep-style consumers should either
+build ``ExploreJob`` lists for ``ExplorationEngine.run`` or submit them to
+the service and consume ``repro.service.as_completed`` to stream results.
 """
 from __future__ import annotations
 
@@ -29,7 +34,6 @@ from repro.core.engine import (
     ExplorationEngine,
     ExploreJob,
     ExploreResult,
-    default_engine,
 )
 from repro.core.ir import Workload
 from repro.core.macro import MacroSpec
@@ -42,8 +46,25 @@ __all__ = [
     "co_explore",
     "co_explore_macros",
     "pareto_explore",
+    "pareto_frontier_from_values",
     "evaluate_config",
 ]
+
+
+def _run_jobs(
+    jobs: list[ExploreJob],
+    method: str,
+    sa_settings: SASettings | None,
+    engine: ExplorationEngine | None,
+) -> list[ExploreResult]:
+    """Dispatch a job list: direct engine call when the caller supplied an
+    engine, otherwise through the process-wide service (micro-batching,
+    in-flight dedup, persistent result store)."""
+    if engine is not None:
+        return engine.run(jobs, method=method, sa_settings=sa_settings)
+    from repro.service.client import default_service
+    return default_service().explore(
+        jobs, method=method, sa_settings=sa_settings)
 
 
 def co_explore(
@@ -70,8 +91,7 @@ def co_explore(
         objective=objective, strategy_set=strategy_set, bw=bw, tech=tech,
         space=space, merge_ops=merge_ops,
     )
-    eng = engine or default_engine()
-    return eng.run([job], method=method, sa_settings=sa_settings)[0]
+    return _run_jobs([job], method, sa_settings, engine)[0]
 
 
 def co_explore_macros(
@@ -101,8 +121,7 @@ def co_explore_macros(
                    area_budget_mm2=area_budget_mm2, space=space, **kw)
         for m in macros
     ]
-    eng = engine or default_engine()
-    results = eng.run(jobs, method=method, sa_settings=sa_settings)
+    results = _run_jobs(jobs, method, sa_settings, engine)
     key = (lambda r: -r.metrics["tops_w"]) if objective == "ee" else \
         (lambda r: -r.metrics["gops"]) if objective == "th" else \
         (lambda r: r.metrics["latency_s"] * r.metrics["energy_pj"])
@@ -131,7 +150,6 @@ def pareto_explore(
     from repro.core.pruning import candidates_with_bw, prune_space
 
     space = space or DesignSpace()
-    wl = workload.merged()
     cands, _ = prune_space(space, macro, area_budget_mm2, bw, tech)
     if len(cands) == 0:
         raise ValueError("no feasible hardware point under budget")
@@ -143,16 +161,34 @@ def pareto_explore(
                    strategy_set=strategy_set, bw=bw, tech=tech, space=space)
         for obj in ("th", "ee")
     ]
-    eng = engine or default_engine()
     # pruned candidates respect budget+bandwidth, so the job objective
     # degenerates to exactly total latency ("th") / total energy ("ee")
-    lat, en = eng.candidate_values(jobs, [rows, rows])
+    if engine is not None:
+        lat, en = engine.candidate_values(jobs, [rows, rows])
+    else:
+        from repro.service.client import default_service
+        svc = default_service()
+        futures = [svc.submit_values(j, rows) for j in jobs]
+        lat, en = (np.asarray(f.result()) for f in futures)
+    return pareto_frontier_from_values(cands, lat, en, workload, macro, bw)
 
+
+def pareto_frontier_from_values(
+    cands: np.ndarray,
+    lat: np.ndarray,
+    en: np.ndarray,
+    workload: Workload,
+    macro: MacroSpec,
+    bw: int,
+) -> list[dict]:
+    """Frontier points (maximize GOPS and TOPS/W jointly) from per-candidate
+    total latency / total energy sweeps; shared by :func:`pareto_explore`
+    and the service's streaming ``stream_pareto``."""
+    wl = workload.merged()
     total_ops = float(wl.total_ops)
     gops = total_ops / (lat / (macro.freq_mhz * 1e6)) / 1e9
     tops_w = total_ops / (en * 1e-12) / 1e12
 
-    # Pareto: maximize both gops and tops_w
     order = np.argsort(-gops)
     frontier = []
     best_ee = -np.inf

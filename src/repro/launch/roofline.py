@@ -18,6 +18,12 @@ params, D = tokens -- and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
 The projected roofline fraction (the Perf score driver) is
     frac = compute_term / max(all terms)
 i.e. how much of the step's bound time the MXUs could be busy.
+
+``--cim-sweep`` additionally routes every architecture's GEMM mix through
+the async DSE service (``repro.service``): per-arch EE/Th co-explorations
+stream out incrementally as their executable buckets finish, giving the
+CIM-side counterpart of the roofline table without blocking on the slowest
+network.
 """
 from __future__ import annotations
 
@@ -25,6 +31,7 @@ import argparse
 import glob
 import json
 import os
+import time
 
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip
@@ -118,13 +125,92 @@ def to_markdown(rows: list[dict]) -> str:
     return hdr + "\n".join(lines) + "\n"
 
 
+def cim_sweep(
+    arch_ids: list[str],
+    area_budget_mm2: float = 5.0,
+    macro_name: str = "vanilla-dcim",
+    seq: int = 512,
+    method: str = "exhaustive",
+    emit=None,
+) -> list[dict]:
+    """Stream per-arch CIM co-exploration rows through the DSE service.
+
+    Submits ``2 x len(arch_ids)`` jobs (best-EE and best-Th per network) in
+    one shot; ``emit`` fires a formatted row the moment BOTH of a network's
+    jobs complete, so fast executable buckets report while slow ones still
+    sweep.  Returns the per-arch records in completion order."""
+    from repro.configs import get_arch
+    from repro.core.engine import ExploreJob
+    from repro.core.macro import get_macro
+    from repro.service import as_completed, default_service
+
+    if emit is None:
+        emit = lambda s: print(s, flush=True)
+    svc = default_service()
+    macro = get_macro(macro_name)
+    t0 = time.perf_counter()
+    futures = []
+    for arch in arch_ids:
+        wl = get_arch(arch).workload(seq=seq)
+        for obj in ("ee", "th"):
+            futures.append(svc.submit(
+                ExploreJob(macro, wl, area_budget_mm2, objective=obj),
+                method=method, meta=(arch, obj)))
+
+    done: dict[str, dict] = {a: {} for a in arch_ids}
+    rows: list[dict] = []
+    for fut in as_completed(futures):
+        arch, obj = fut.meta
+        done[arch][obj] = fut.result()
+        if len(done[arch]) < 2:
+            continue
+        ee, th = done[arch]["ee"], done[arch]["th"]
+        row = {
+            "arch": arch, "macro": macro_name,
+            "budget_mm2": area_budget_mm2,
+            "best_ee_cfg": ee.config.as_tuple(),
+            "tops_w": ee.metrics["tops_w"],
+            "best_th_cfg": th.config.as_tuple(),
+            "gops": th.metrics["gops"],
+            "elapsed_s": time.perf_counter() - t0,
+            "cached": ee.search.get("cache") == "store",
+        }
+        rows.append(row)
+        emit(f"| {arch} | {macro_name} | {row['best_ee_cfg']} | "
+             f"{row['tops_w']:.2f} TOPS/W | {row['best_th_cfg']} | "
+             f"{row['gops']:.0f} GOPS | {row['elapsed_s']:.1f}s"
+             f"{' (cached)' if row['cached'] else ''} |")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out-dir", default="experiments/dryrun")
     ap.add_argument("--tag", default="single")
     ap.add_argument("--json", default="experiments/roofline.json")
     ap.add_argument("--md", default="experiments/roofline.md")
+    ap.add_argument("--cim-sweep", default=None, metavar="ARCHS",
+                    help="comma-separated arch ids (or 'all'): stream CIM "
+                         "co-exploration rows via the DSE service instead "
+                         "of analyzing dry-run artifacts")
+    ap.add_argument("--cim-budget", type=float, default=5.0)
+    ap.add_argument("--cim-macro", default="vanilla-dcim")
     args = ap.parse_args()
+
+    if args.cim_sweep:
+        from repro.configs import ARCH_IDS
+        archs = list(ARCH_IDS) if args.cim_sweep == "all" \
+            else args.cim_sweep.split(",")
+        print("| arch | macro | best-EE cfg | TOPS/W | best-Th cfg | GOPS "
+              "| elapsed |", flush=True)
+        rows = cim_sweep(archs, args.cim_budget, args.cim_macro)
+        out_dir = os.path.dirname(args.json)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1, default=list)
+        return
+
     rows = build(args.out_dir, tag=args.tag)
     with open(args.json, "w") as f:
         json.dump(rows, f, indent=1)

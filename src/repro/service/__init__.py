@@ -1,0 +1,42 @@
+"""Async DSE service over the batched exploration engine.
+
+Turns ``ExplorationEngine`` into an always-on exploration service:
+
+* ``queue.py``   -- thread-backed job queue: priorities, micro-batching
+  (submissions coalesce for a small window / size threshold), canonical-key
+  dedup, one engine ``run()`` per executable bucket;
+* ``streams.py`` -- ``submit() -> ExploreFuture``, ``as_completed()``,
+  ``stream_pareto()``: callers receive each job's result the moment its
+  bucket finishes, not when the whole submission drains;
+* ``store.py``   -- persistent on-disk result store (content-addressed by
+  job key, JSONL records, atomic rename) so repeated queries across
+  processes hit cache instead of re-annealing;
+* ``client.py``  -- programmatic client + process-wide
+  :func:`default_service`, which ``co_explore`` / ``co_explore_macros`` /
+  ``pareto_explore`` use as their synchronous front door;
+* ``python -m repro.service`` -- CLI: stream result batches as they arrive.
+
+Quickstart::
+
+    from repro.service import default_service
+    svc = default_service()
+    futures = svc.submit_many(jobs, method="exhaustive")
+    for fut in as_completed(futures):
+        print(fut.result().summary())
+"""
+from repro.service.client import (ServiceClient, default_service,
+                                  job_from_spec, reset_default_service)
+from repro.service.queue import JobQueue, QueueConfig
+from repro.service.store import (ResultStore, default_store,
+                                 deserialize_result, serialize_result)
+from repro.service.streams import (ExploreFuture, as_completed,
+                                   stream_pareto, stream_results)
+
+__all__ = [
+    "ServiceClient", "default_service", "reset_default_service",
+    "job_from_spec",
+    "JobQueue", "QueueConfig",
+    "ResultStore", "default_store", "serialize_result",
+    "deserialize_result",
+    "ExploreFuture", "as_completed", "stream_results", "stream_pareto",
+]

@@ -1,0 +1,114 @@
+"""CLI front door of the async DSE service.
+
+    python -m repro.service explore jobs.json --stream
+    python -m repro.service explore jobs.json --json
+    python -m repro.service store --info
+    python -m repro.service store --clear
+
+``jobs.json`` is a list of job specs (see
+:func:`repro.service.client.job_from_spec`)::
+
+    [{"macro": "vanilla-dcim", "workload": "bert-large",
+      "area_budget_mm2": 5.0, "objective": "ee", "method": "exhaustive"},
+     {"macro": "tpdcim-macro", "workload": {"name": "yi-6b", "seq": 512},
+      "area_budget_mm2": 2.23, "objective": "th"}]
+
+With ``--stream`` each result line prints the moment its micro-batch
+bucket finishes (completion order); without it, results print in
+submission order once all are done.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def _cmd_explore(args) -> int:
+    from repro.service import ServiceClient, serialize_result
+
+    with open(args.jobs_file) as f:
+        specs = json.load(f)
+    if not isinstance(specs, list) or not specs:
+        print("error: jobs file must be a non-empty JSON list",
+              file=sys.stderr)
+        return 2
+
+    svc = ServiceClient(store=None if args.no_store else "auto")
+    t0 = time.perf_counter()
+
+    def emit(i, result):
+        dt = time.perf_counter() - t0
+        if args.json:
+            rec = {"index": i, "elapsed_s": round(dt, 3),
+                   "source": "store" if result.search.get("cache") == "store"
+                   else "engine",
+                   "result": serialize_result(result)}
+            print(json.dumps(rec), flush=True)
+        else:
+            src = " [cached]" if result.search.get("cache") == "store" else ""
+            print(f"[{dt:7.2f}s] #{i} {result.summary()}{src}", flush=True)
+
+    try:
+        if args.stream:
+            for i, result in svc.explore_specs(specs, stream=True):
+                emit(i, result)
+        else:
+            for i, result in enumerate(svc.explore_specs(specs)):
+                emit(i, result)
+    finally:
+        svc.close()
+    if not args.json:
+        print(f"# {len(specs)} jobs in {time.perf_counter()-t0:.2f}s "
+              f"(stats: {svc.stats})", flush=True)
+    return 0
+
+
+def _cmd_store(args) -> int:
+    from repro.service import default_store
+
+    store = default_store()
+    if store is None:
+        print("result store disabled (CIM_TUNER_DISABLE_RESULT_STORE)")
+        return 0
+    if args.clear:
+        print(f"cleared {store.clear()} records from {store.root}")
+        return 0
+    keys = store.keys()
+    print(f"store root : {store.root}")
+    print(f"records    : {len(keys)}")
+    for k in keys[:20]:
+        print(f"  {k}")
+    if len(keys) > 20:
+        print(f"  ... {len(keys) - 20} more")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-service",
+        description="Async DSE service over the batched exploration engine")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    ex = sub.add_parser("explore", help="run a JSON job file")
+    ex.add_argument("jobs_file")
+    ex.add_argument("--stream", action="store_true",
+                    help="print each result as its bucket finishes")
+    ex.add_argument("--json", action="store_true",
+                    help="machine-readable JSONL output")
+    ex.add_argument("--no-store", action="store_true",
+                    help="bypass the persistent result store")
+    ex.set_defaults(fn=_cmd_explore)
+
+    st = sub.add_parser("store", help="inspect / clear the result store")
+    st.add_argument("--info", action="store_true", default=True)
+    st.add_argument("--clear", action="store_true")
+    st.set_defaults(fn=_cmd_store)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,188 @@
+"""Programmatic client of the async DSE service + process-wide default.
+
+``ServiceClient`` wraps a :class:`~repro.service.queue.JobQueue` with the
+call shapes consumers actually want: blocking ``explore`` (what the
+``co_explore`` family delegates to), streaming ``explore(..., stream=True)``
+(yields ``(meta, result)`` the moment each micro-batch bucket finishes), and
+dict-based job specs so the CLI / JSON job files share one parser.
+
+:func:`default_service` is the process-wide instance the blocking wrappers
+in ``core/explorer.py`` use -- interleaved callers (tests, notebooks,
+benchmark sweeps) therefore share one queue, one engine executable cache,
+and one persistent result store.
+"""
+from __future__ import annotations
+
+import atexit
+import threading
+import typing
+
+from repro.core.annealing import SASettings
+from repro.core.engine import ExplorationEngine, ExploreJob
+from repro.core.ir import MatmulOp, Workload, bert_large_workload
+from repro.core.macro import get_macro
+from repro.core.pruning import DesignSpace
+from repro.service.queue import JobQueue, QueueConfig
+from repro.service.streams import ExploreFuture, stream_results
+
+__all__ = ["ServiceClient", "default_service", "reset_default_service",
+           "job_from_spec"]
+
+
+# --------------------------------------------------------------------- #
+# JSON job specs (CLI + programmatic)
+# --------------------------------------------------------------------- #
+def _workload_from_spec(spec) -> Workload:
+    if isinstance(spec, dict) and "ops" in spec:
+        ops = tuple(
+            MatmulOp(m=o[0], k=o[1], n=o[2],
+                     count=o[3] if len(o) > 3 else 1,
+                     name=f"op{i}")
+            for i, o in enumerate(spec["ops"]))
+        return Workload(spec.get("name", "custom"), ops)
+    name = spec["name"] if isinstance(spec, dict) else str(spec)
+    seq = spec.get("seq", 512) if isinstance(spec, dict) else 512
+    if name == "bert-large":
+        return bert_large_workload(seq)
+    from repro.configs import get_arch
+    return get_arch(name).workload(seq=seq)
+
+
+def job_from_spec(spec: dict) -> tuple[ExploreJob, str]:
+    """``(ExploreJob, method)`` from one JSON job record.
+
+    Minimal record::
+
+        {"macro": "vanilla-dcim", "workload": "bert-large",
+         "area_budget_mm2": 5.0}
+
+    Optional keys: ``objective`` ("ee"|"th"|"edp"), ``strategy_set``
+    ("st"|"so"), ``bw``, ``seq`` (inside workload dict), ``method``
+    ("sa"|"exhaustive"), ``space`` (axis-name -> value list), and inline
+    workloads via ``{"workload": {"name": ..., "ops": [[m,k,n,count], ...]}}``.
+    """
+    space = None
+    if "space" in spec:
+        axes = {k: tuple(v) for k, v in spec["space"].items()}
+        for k, v in axes.items():
+            if not v:
+                raise ValueError(f"space axis {k!r} must be non-empty")
+        space = DesignSpace(**axes)
+    job = ExploreJob(
+        macro=get_macro(spec["macro"]),
+        workload=_workload_from_spec(spec["workload"]),
+        area_budget_mm2=float(spec["area_budget_mm2"]),
+        objective=spec.get("objective", "ee"),
+        strategy_set=spec.get("strategy_set", "st"),
+        bw=int(spec.get("bw", 256)),
+        space=space,
+    )
+    return job, spec.get("method", "sa")
+
+
+# --------------------------------------------------------------------- #
+# the client
+# --------------------------------------------------------------------- #
+class ServiceClient:
+    """Convenience facade over one :class:`JobQueue`."""
+
+    def __init__(
+        self,
+        queue: JobQueue | None = None,
+        engine: ExplorationEngine | None = None,
+        store="auto",
+        config: QueueConfig = QueueConfig(),
+    ):
+        self.queue = queue or JobQueue(engine=engine, store=store,
+                                       config=config)
+
+    # passthroughs --------------------------------------------------- #
+    def submit(self, job: ExploreJob, method: str = "sa",
+               sa_settings: SASettings | None = None, priority: int = 0,
+               meta=None) -> ExploreFuture:
+        return self.queue.submit(job, method, sa_settings, priority, meta)
+
+    def submit_many(self, jobs, method="sa", sa_settings=None,
+                    priority=0, metas=None) -> list[ExploreFuture]:
+        return self.queue.submit_many(jobs, method, sa_settings, priority,
+                                      metas)
+
+    def submit_values(self, job, candidates, priority=0, meta=None):
+        return self.queue.submit_values(job, candidates, priority, meta)
+
+    @property
+    def stats(self) -> dict:
+        return self.queue.stats
+
+    @property
+    def store(self):
+        return self.queue.store
+
+    # blocking / streaming ------------------------------------------- #
+    def explore(
+        self,
+        jobs: typing.Sequence[ExploreJob],
+        method: str = "sa",
+        sa_settings: SASettings | None = None,
+        stream: bool = False,
+        metas: typing.Sequence | None = None,
+        timeout: float | None = None,
+    ):
+        """Run a job list through the service.
+
+        ``stream=False`` (default): blocking, returns results in
+        submission order.  ``stream=True``: returns an iterator of
+        ``(meta, result)`` in *completion* order -- metas default to the
+        submission index.
+        """
+        if metas is None:
+            metas = list(range(len(jobs)))
+        futures = self.submit_many(jobs, method, sa_settings, metas=metas)
+        if stream:
+            return stream_results(futures, timeout=timeout)
+        return [f.result(timeout) for f in futures]
+
+    def explore_specs(self, specs: typing.Sequence[dict],
+                      stream: bool = False, timeout: float | None = None):
+        """Dict-spec variant (the CLI path); method comes from each spec."""
+        futures = []
+        for i, spec in enumerate(specs):
+            job, method = job_from_spec(spec)
+            futures.append(self.submit(job, method, meta=i))
+        if stream:
+            return stream_results(futures, timeout=timeout)
+        return [f.result(timeout) for f in futures]
+
+    def close(self) -> None:
+        self.queue.close()
+
+
+# --------------------------------------------------------------------- #
+# process-wide default service
+# --------------------------------------------------------------------- #
+_default_service: ServiceClient | None = None
+_default_lock = threading.Lock()
+
+
+def default_service() -> ServiceClient:
+    """The shared always-on service (lazy; worker thread starts on first
+    submission, drained at interpreter exit)."""
+    global _default_service
+    with _default_lock:
+        if _default_service is None:
+            _default_service = ServiceClient()
+            atexit.register(_shutdown_default)
+        return _default_service
+
+
+def _shutdown_default() -> None:
+    global _default_service
+    with _default_lock:
+        svc, _default_service = _default_service, None
+    if svc is not None:
+        svc.close()
+
+
+def reset_default_service() -> None:
+    """Tear down the shared service (tests / store re-pointing)."""
+    _shutdown_default()

@@ -1,0 +1,329 @@
+"""Thread-backed exploration job queue: priorities, micro-batching, dedup.
+
+Submissions accumulate for a small window (or until a batch-size threshold),
+dedup by canonical job key, and dispatch as ONE ``ExplorationEngine.run()``
+per executable bucket -- so concurrent callers share compiled executables
+exactly like a hand-built batch, while each caller's
+:class:`~repro.service.streams.ExploreFuture` resolves the moment *its*
+bucket finishes, not when the whole micro-batch drains.
+
+Three admission tiers, checked in order at submit time:
+
+1. **persistent store** (``store.py``) -- repeated queries across processes
+   resolve immediately with zero engine work;
+2. **in-flight dedup** -- an identical pending/running job fans its result
+   out to every duplicate future;
+3. **queue** -- new work enters the micro-batch window.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+import time
+import typing
+
+import numpy as np
+
+from repro.core.annealing import SASettings
+from repro.core.engine import (
+    ExplorationEngine,
+    ExploreJob,
+    ExploreResult,
+    clone_result,
+    default_engine,
+    job_key,
+)
+from repro.service.store import ResultStore, default_store
+from repro.service.streams import ExploreFuture
+
+__all__ = ["QueueConfig", "JobQueue"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QueueConfig:
+    #: micro-batch accumulation window after the first pending submission
+    batch_window_s: float = 0.02
+    #: dispatch early once this many submissions are pending
+    max_batch_jobs: int = 64
+
+
+class _Entry:
+    __slots__ = ("priority", "seq", "kind", "key", "job", "method",
+                 "settings", "payload", "futures", "bucket")
+
+    def __init__(self, priority, seq, kind, key, job, method, settings,
+                 payload, future):
+        self.priority = priority
+        self.seq = seq
+        self.kind = kind                  # "explore" | "values"
+        self.key = key
+        self.job = job
+        self.method = method
+        self.settings = settings
+        self.payload = payload            # candidate rows for "values"
+        self.futures = [future]
+        self.bucket = None                # lazily cached executable bucket
+
+    def order(self) -> tuple:
+        return (-self.priority, self.seq)
+
+
+def _values_key(job: ExploreJob, rows: np.ndarray) -> str:
+    base = job_key(job, "exhaustive", None)
+    h = hashlib.sha256()
+    h.update(base.encode())
+    h.update(np.ascontiguousarray(rows, dtype=np.float64).tobytes())
+    return "values-" + h.hexdigest()
+
+
+class JobQueue:
+    """The always-on exploration service core (one worker thread).
+
+    ``engine=None`` uses the process-wide :func:`default_engine`;
+    ``store=None`` disables the persistent result cache; the default
+    (``"auto"``) resolves via :func:`repro.service.store.default_store`
+    (honouring ``CIM_TUNER_RESULT_STORE`` / the disable env var).
+    """
+
+    def __init__(
+        self,
+        engine: ExplorationEngine | None = None,
+        store: ResultStore | None | str = "auto",
+        config: QueueConfig = QueueConfig(),
+    ):
+        self._engine = engine
+        self.store = default_store() if store == "auto" else store
+        self.config = config
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._pending: list[_Entry] = []
+        self._inflight: dict[str, _Entry] = {}
+        self._thread: threading.Thread | None = None
+        self._closed = False
+        self._seq = 0
+        self.stats = {
+            "submitted": 0, "store_hits": 0, "inflight_dedup": 0,
+            "dispatches": 0, "completed": 0, "failed": 0,
+        }
+
+    # ------------------------------------------------------------- #
+    # engine access (lazy so tests can build queues without JAX work)
+    # ------------------------------------------------------------- #
+    @property
+    def engine(self) -> ExplorationEngine:
+        if self._engine is None:
+            self._engine = default_engine()
+        return self._engine
+
+    # ------------------------------------------------------------- #
+    # submission API
+    # ------------------------------------------------------------- #
+    def submit(
+        self,
+        job: ExploreJob,
+        method: str = "sa",
+        sa_settings: SASettings | None = None,
+        priority: int = 0,
+        meta=None,
+    ) -> ExploreFuture:
+        """Admit one exploration job; returns immediately with a future."""
+        if method not in ("sa", "exhaustive"):
+            raise ValueError(f"unknown method {method!r}")
+        if method != "sa":
+            settings = None
+        else:
+            # resolve the effective settings WITHOUT instantiating the
+            # default engine (store-only submissions skip engine
+            # construction and its persistent-cache setup); a
+            # default-constructed engine uses SASettings() too, so the
+            # canonical key matches either way
+            settings = sa_settings or (
+                self._engine.sa_settings if self._engine is not None
+                else SASettings())
+        key = job_key(job, method, settings)
+        future = ExploreFuture(job, method, key, meta=meta)
+        self.stats["submitted"] += 1
+
+        if self.store is not None:
+            cached = self.store.get(key)
+            if cached is not None:
+                self.stats["store_hits"] += 1
+                future._finish(cached, source="store")
+                return future
+
+        self._enqueue("explore", key, job, method, settings, None,
+                      priority, future)
+        return future
+
+    def submit_many(
+        self,
+        jobs: typing.Sequence[ExploreJob],
+        method: str = "sa",
+        sa_settings: SASettings | None = None,
+        priority: int = 0,
+        metas: typing.Sequence | None = None,
+    ) -> list[ExploreFuture]:
+        metas = metas if metas is not None else [None] * len(jobs)
+        if len(metas) != len(jobs):
+            raise ValueError(
+                f"metas length {len(metas)} != jobs length {len(jobs)}")
+        return [self.submit(j, method, sa_settings, priority, meta=m)
+                for j, m in zip(jobs, metas)]
+
+    def submit_values(
+        self,
+        job: ExploreJob,
+        candidates: np.ndarray,
+        priority: int = 0,
+        meta=None,
+    ) -> ExploreFuture:
+        """Admit an explicit candidate sweep (the Pareto path); the future
+        resolves to the ``[C]`` objective-value array."""
+        rows = np.asarray(candidates, dtype=np.float64)
+        key = _values_key(job, rows)
+        future = ExploreFuture(job, "values", key, meta=meta)
+        self.stats["submitted"] += 1
+        self._enqueue("values", key, job, "values", None, rows,
+                      priority, future)
+        return future
+
+    def run_sync(
+        self,
+        jobs: typing.Sequence[ExploreJob],
+        method: str = "sa",
+        sa_settings: SASettings | None = None,
+        timeout: float | None = None,
+    ) -> list[ExploreResult]:
+        """Blocking batch call with service semantics (store, dedup) --
+        what the ``co_explore`` family uses under the hood."""
+        futures = self.submit_many(jobs, method, sa_settings)
+        return [f.result(timeout) for f in futures]
+
+    # ------------------------------------------------------------- #
+    # lifecycle
+    # ------------------------------------------------------------- #
+    def close(self, timeout: float | None = 10.0) -> None:
+        """Drain pending work, then stop the worker thread."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+            thread = self._thread
+        if thread is not None:
+            thread.join(timeout)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ------------------------------------------------------------- #
+    # internals
+    # ------------------------------------------------------------- #
+    def _enqueue(self, kind, key, job, method, settings, payload,
+                 priority, future) -> None:
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("service queue is closed")
+            entry = self._inflight.get(key)
+            if entry is not None:
+                entry.futures.append(future)
+                self.stats["inflight_dedup"] += 1
+                return
+            self._seq += 1
+            entry = _Entry(priority, self._seq, kind, key, job, method,
+                           settings, payload, future)
+            self._pending.append(entry)
+            self._inflight[key] = entry
+            if self._thread is None:
+                self._thread = threading.Thread(
+                    target=self._worker, name="cim-tuner-dse-queue",
+                    daemon=True)
+                self._thread.start()
+            self._cv.notify_all()
+
+    def _worker(self) -> None:
+        while True:
+            with self._cv:
+                while not self._pending and not self._closed:
+                    self._cv.wait()
+                if not self._pending and self._closed:
+                    return
+                # micro-batch window: let near-simultaneous submissions
+                # (NAS-style callers, sweep loops) coalesce into one batch
+                deadline = time.monotonic() + self.config.batch_window_s
+                while len(self._pending) < self.config.max_batch_jobs:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0 or self._closed:
+                        break
+                    self._cv.wait(remaining)
+                batch = sorted(self._pending, key=_Entry.order)
+                self._pending = []
+            try:
+                self._dispatch(batch)
+            except Exception as exc:    # noqa: BLE001 -- worker must survive
+                # reject whatever the dispatch didn't resolve (resolved
+                # futures ignore the second _finish) and keep serving
+                self._resolve_group(batch, None, exc)
+
+    def _groups(self, batch: list[_Entry]) -> list[list[_Entry]]:
+        """Group a micro-batch by executable signature; one engine call
+        per group, dispatched in (priority, arrival) order.  Entries whose
+        jobs can't even be bucketed (malformed space/workload) are
+        rejected individually so one bad spec can't poison the batch."""
+        groups: dict[tuple, list[_Entry]] = {}
+        for e in batch:
+            try:
+                if e.bucket is None:
+                    method = "exhaustive" if e.kind == "values" else e.method
+                    e.bucket = (e.kind, e.method, e.settings,
+                                self.engine.bucket_key(e.job, method))
+            except Exception as exc:     # noqa: BLE001 -- reject this entry
+                self._resolve_group([e], None, exc)
+                continue
+            groups.setdefault(e.bucket, []).append(e)
+        return list(groups.values())
+
+    def _dispatch(self, batch: list[_Entry]) -> None:
+        for group in self._groups(batch):
+            self.stats["dispatches"] += 1
+            try:
+                if group[0].kind == "values":
+                    outs = self.engine.candidate_values(
+                        [e.job for e in group], [e.payload for e in group])
+                else:
+                    # pass the canonical keys computed at submit time so
+                    # the engine's dedup pass skips re-hashing
+                    outs = self.engine.run(
+                        [e.job for e in group], method=group[0].method,
+                        sa_settings=group[0].settings,
+                        keys=[e.key for e in group])
+            except Exception as exc:              # noqa: BLE001 -- reject group
+                self._resolve_group(group, None, exc)
+                continue
+            self._resolve_group(group, outs, None)
+
+    def _resolve_group(self, group, outs, exc) -> None:
+        for i, e in enumerate(group):
+            out = outs[i] if exc is None else None
+            if exc is None and e.kind == "explore" and \
+                    self.store is not None:
+                # persist BEFORE leaving the in-flight map: an identical
+                # submission always sees either the running entry or the
+                # stored result, never a gap
+                self.store.put(e.key, out)
+            with self._lock:
+                self._inflight.pop(e.key, None)
+                futures = list(e.futures)
+            if exc is not None:
+                self.stats["failed"] += 1
+                for f in futures:
+                    f._finish(exc=exc, source="engine")
+                continue
+            self.stats["completed"] += 1
+            for j, f in enumerate(futures):
+                r = out
+                if j > 0 and isinstance(out, ExploreResult):
+                    r = clone_result(out)
+                f._finish(r, source="engine" if j == 0 else "inflight")

@@ -1,0 +1,156 @@
+"""Persistent on-disk result store, content-addressed by canonical job key.
+
+Repeated queries across processes -- CI runs, benchmark re-runs, notebook
+users -- hit this cache instead of re-annealing.  Layout: one JSONL record
+per result at ``<root>/<key[:2]>/<key>.jsonl``, written to a temp file and
+moved into place with ``os.replace`` so concurrent writers (parallel CI
+shards, several notebooks) can never expose a torn record.
+
+The key already folds in everything that determines the answer bit-for-bit
+(job ingredients, method, SA settings, x64 mode, and a schema version --
+see :func:`repro.core.engine.job_key`), so ``get`` is a pure content
+lookup.  Corrupt or schema-mismatched records read as misses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.engine import ExploreResult
+from repro.core.macro import MacroSpec
+from repro.core.template import AcceleratorConfig
+
+__all__ = ["ResultStore", "default_store", "serialize_result",
+           "deserialize_result", "STORE_SCHEMA"]
+
+#: bump together with ``engine.JOB_KEY_SCHEMA`` when the serialized result
+#: layout changes shape
+STORE_SCHEMA = 1
+
+
+def _to_py(v):
+    if isinstance(v, (np.bool_,)):
+        return bool(v)
+    if isinstance(v, np.integer):
+        return int(v)
+    if isinstance(v, np.floating):
+        return float(v)
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    if isinstance(v, dict):
+        return {k: _to_py(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_to_py(x) for x in v]
+    return v
+
+
+def serialize_result(r: ExploreResult) -> dict:
+    """JSON-able record of an ExploreResult.  The SA trace arrays are
+    deliberately dropped (they are diagnostics, not the answer); rehydrated
+    results carry ``sa=None``."""
+    return {
+        "config": dataclasses.asdict(r.config),
+        "macro": dataclasses.asdict(r.macro),
+        "workload": r.workload,
+        "objective": r.objective,
+        "strategy_set": r.strategy_set,
+        "per_op_strategy": dict(r.per_op_strategy),
+        "metrics": _to_py(r.metrics),
+        "search": _to_py(r.search),
+    }
+
+
+def deserialize_result(rec: dict) -> ExploreResult:
+    return ExploreResult(
+        config=AcceleratorConfig(**rec["config"]),
+        macro=MacroSpec(**rec["macro"]),
+        workload=rec["workload"],
+        objective=rec["objective"],
+        strategy_set=rec["strategy_set"],
+        per_op_strategy=dict(rec["per_op_strategy"]),
+        metrics=dict(rec["metrics"]),
+        search=dict(rec["search"]),
+        sa=None,
+    )
+
+
+class ResultStore:
+    """Content-addressed persistent cache of ExploreResults."""
+
+    def __init__(self, root: str | None = None):
+        self.root = root or os.environ.get("CIM_TUNER_RESULT_STORE") or \
+            os.path.join(os.path.expanduser("~"), ".cache", "cim-tuner",
+                         "result-store")
+        self.stats = {"hits": 0, "misses": 0, "puts": 0}
+
+    # ------------------------------------------------------------- #
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, key[:2], f"{key}.jsonl")
+
+    def get(self, key: str) -> ExploreResult | None:
+        try:
+            with open(self._path(key)) as f:
+                rec = json.loads(f.readline())
+            if rec.get("schema") != STORE_SCHEMA:
+                raise ValueError("schema mismatch")
+            out = deserialize_result(rec["result"])
+        except (OSError, ValueError, KeyError, TypeError):
+            self.stats["misses"] += 1
+            return None
+        self.stats["hits"] += 1
+        out.search["cache"] = "store"
+        return out
+
+    def put(self, key: str, result: ExploreResult) -> None:
+        rec = {"schema": STORE_SCHEMA, "key": key,
+               "created_s": time.time(),
+               "result": serialize_result(result)}
+        path = self._path(key)
+        try:
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            fd, tmp = tempfile.mkstemp(
+                dir=os.path.dirname(path), suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                f.write(json.dumps(rec) + "\n")
+            os.replace(tmp, path)                      # atomic publish
+        except OSError:                                # pragma: no cover
+            return                                     # read-only FS etc.
+        self.stats["puts"] += 1
+
+    def __contains__(self, key: str) -> bool:
+        return os.path.exists(self._path(key))
+
+    def keys(self) -> list[str]:
+        out = []
+        if not os.path.isdir(self.root):
+            return out
+        for shard in sorted(os.listdir(self.root)):
+            d = os.path.join(self.root, shard)
+            if os.path.isdir(d):
+                out.extend(sorted(
+                    f[:-len(".jsonl")] for f in os.listdir(d)
+                    if f.endswith(".jsonl")))
+        return out
+
+    def clear(self) -> int:
+        n = 0
+        for key in self.keys():
+            try:
+                os.remove(self._path(key))
+                n += 1
+            except OSError:                            # pragma: no cover
+                pass
+        return n
+
+
+def default_store() -> ResultStore | None:
+    """The store the process-wide service uses; ``None`` (cache off) when
+    ``CIM_TUNER_DISABLE_RESULT_STORE`` is set."""
+    if os.environ.get("CIM_TUNER_DISABLE_RESULT_STORE"):
+        return None
+    return ResultStore()

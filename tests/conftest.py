@@ -1,8 +1,20 @@
+import atexit
 import os
+import shutil
 import sys
+import tempfile
 
 # tests run single-device (the multi-device dry-run has its own subprocess
 # test); never inherit a forced device count from the environment
 os.environ.pop("XLA_FLAGS", None)
+
+# hermetic service result store: co_explore & friends go through the
+# process-wide DSE service, whose persistent cache must not leak results
+# between test runs (or from a developer's warm ~/.cache); registered here
+# (before the service's own atexit close) so LIFO ordering removes the
+# directory only after the queue has drained
+_test_store = tempfile.mkdtemp(prefix="cim-tuner-test-store-")
+os.environ["CIM_TUNER_RESULT_STORE"] = _test_store
+atexit.register(shutil.rmtree, _test_store, ignore_errors=True)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

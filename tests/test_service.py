@@ -1,0 +1,319 @@
+"""Async DSE service: streaming order, dedup, store semantics, wrappers.
+
+The deterministic streaming/caching tests drive the queue with stub engines
+(a counting stub for cache assertions, a blocking stub for order
+assertions) so they make no JAX calls and cannot flake on timing; the
+end-to-end equivalence tests run the real engine on a small design space.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DesignSpace,
+    ExplorationEngine,
+    ExploreJob,
+    bert_large_workload,
+    co_explore,
+    get_macro,
+    job_key,
+    pareto_explore,
+)
+from repro.core.engine import ExploreResult
+from repro.core.macro import TPDCIM_MACRO
+from repro.core.template import AcceleratorConfig
+from repro.service import (
+    JobQueue,
+    QueueConfig,
+    ResultStore,
+    ServiceClient,
+    as_completed,
+    deserialize_result,
+    serialize_result,
+)
+
+SMALL = DesignSpace(mr=(1, 2, 3), mc=(1, 2), scr=(1, 4, 16),
+                    is_kb=(2, 16, 128), os_kb=(2, 16, 64))
+
+
+def _job(objective="ee", budget=2.23, wl=None):
+    return ExploreJob(TPDCIM_MACRO, wl or bert_large_workload(), budget,
+                      objective=objective, space=SMALL)
+
+
+def _fake_result(job, tag="x") -> ExploreResult:
+    return ExploreResult(
+        config=AcceleratorConfig(1, 1, 1, 2, 2),
+        macro=job.macro, workload=job.workload.name,
+        objective=job.objective, strategy_set=job.strategy_set,
+        per_op_strategy={"op0": "IS-W-F"},
+        metrics={"tops_w": 1.0, "gops": 1.0, "energy_pj": 1.0,
+                 "latency_cycles": 1.0, "latency_s": 1.0, "area_mm2": 1.0},
+        search={"method": "stub", "tag": tag},
+    )
+
+
+class CountingStubEngine:
+    """Engine double: counts run() invocations, optional per-bucket block.
+
+    ``block_buckets``: bucket keys whose dispatch waits on ``release``
+    before returning -- lets tests hold the slow bucket open while
+    asserting the fast bucket already streamed out."""
+
+    def __init__(self, block_buckets=(), bucket_of=None):
+        self.runs = 0
+        self.jobs_seen = []
+        self.release = threading.Event()
+        self.block_buckets = set(block_buckets)
+        self.sa_settings = None
+        self._bucket_of = bucket_of or (
+            lambda job, method: (len(job.merged_workload().ops),))
+
+    def bucket_key(self, job, method="sa"):
+        return self._bucket_of(job, method)
+
+    def run(self, jobs, method="sa", sa_settings=None, keys=None):
+        if self.bucket_key(jobs[0], method) in self.block_buckets:
+            assert self.release.wait(30), "blocked bucket never released"
+        self.runs += 1
+        self.jobs_seen.extend(jobs)
+        return [_fake_result(j, tag=f"run{self.runs}") for j in jobs]
+
+    def candidate_values(self, jobs, candidates):
+        self.runs += 1
+        return [np.arange(len(c), dtype=float) + 1.0 for c in candidates]
+
+
+# ------------------------------------------------------------------ #
+# streaming order (satellite: multi-bucket submission yields the fast
+# bucket's results before the slow bucket completes)
+# ------------------------------------------------------------------ #
+def test_fast_bucket_streams_before_slow_bucket_completes(tmp_path):
+    from repro.configs import get_arch
+    fast_wl = bert_large_workload()                       # few merged ops
+    slow_wl = get_arch("whisper-small").workload(seq=512)  # many ops
+    eng = CountingStubEngine()
+    slow_bucket = eng.bucket_key(ExploreJob(
+        TPDCIM_MACRO, slow_wl, 2.23, space=SMALL), "exhaustive")
+    fast_bucket = eng.bucket_key(ExploreJob(
+        TPDCIM_MACRO, fast_wl, 2.23, space=SMALL), "exhaustive")
+    assert slow_bucket != fast_bucket, "test needs two distinct buckets"
+    eng.block_buckets = {slow_bucket}
+
+    q = JobQueue(engine=eng, store=ResultStore(str(tmp_path)),
+                 config=QueueConfig(batch_window_s=0.01))
+    try:
+        f_fast = q.submit(_job(wl=fast_wl), method="exhaustive", priority=1)
+        f_slow = q.submit(_job(wl=slow_wl), method="exhaustive")
+        # the fast bucket must resolve while the slow bucket is still held
+        first = next(as_completed([f_fast, f_slow], timeout=30))
+        assert first is f_fast
+        assert not f_slow.done(), \
+            "slow bucket finished before fast bucket streamed out"
+        eng.release.set()
+        assert f_slow.result(timeout=30).workload == slow_wl.name
+    finally:
+        eng.release.set()
+        q.close()
+    assert eng.runs == 2, "each bucket must dispatch as its own run()"
+
+
+# ------------------------------------------------------------------ #
+# cache semantics (satellite: warm store serves a repeated job without
+# invoking the engine -- counting stub)
+# ------------------------------------------------------------------ #
+def test_warm_store_skips_engine(tmp_path):
+    eng = CountingStubEngine()
+    store = ResultStore(str(tmp_path))
+    with JobQueue(engine=eng, store=store,
+                  config=QueueConfig(batch_window_s=0.0)) as q:
+        cold = q.submit(_job(), method="exhaustive").result(timeout=30)
+    assert eng.runs == 1 and store.stats["puts"] == 1
+
+    eng2 = CountingStubEngine()
+    with JobQueue(engine=eng2, store=ResultStore(str(tmp_path))) as q2:
+        warm = q2.submit(_job(), method="exhaustive").result(timeout=30)
+        assert q2.stats["store_hits"] == 1
+    assert eng2.runs == 0, "warm store must serve without engine invocation"
+    assert warm.config.as_tuple() == cold.config.as_tuple()
+    assert warm.metrics == cold.metrics
+    assert warm.search["cache"] == "store"
+
+
+def test_inflight_dedup_fans_out_single_evaluation(tmp_path):
+    eng = CountingStubEngine()
+    eng.block_buckets = {eng.bucket_key(_job(), "exhaustive")}
+    q = JobQueue(engine=eng, store=ResultStore(str(tmp_path)),
+                 config=QueueConfig(batch_window_s=0.01))
+    try:
+        futs = [q.submit(_job(), method="exhaustive") for _ in range(4)]
+        eng.release.set()
+        results = [f.result(timeout=30) for f in futs]
+    finally:
+        eng.release.set()
+        q.close()
+    assert eng.runs == 1 and len(eng.jobs_seen) == 1
+    assert q.stats["inflight_dedup"] == 3
+    for a, b in zip(results, results[1:]):
+        assert a.config.as_tuple() == b.config.as_tuple()
+        assert a.metrics is not b.metrics, "fan-out must not alias dicts"
+
+
+def test_store_roundtrip_is_exact(tmp_path):
+    job = _job()
+    r = _fake_result(job)
+    r.metrics["tops_w"] = 3.141592653589793116  # full float64 precision
+    store = ResultStore(str(tmp_path))
+    key = job_key(job, "exhaustive", None)
+    store.put(key, r)
+    back = store.get(key)
+    assert back is not None
+    assert back.metrics["tops_w"] == r.metrics["tops_w"]  # bit-for-bit
+    assert back.config == r.config
+    assert back.macro == r.macro
+    assert back.per_op_strategy == r.per_op_strategy
+
+
+def test_store_tolerates_corrupt_records(tmp_path):
+    store = ResultStore(str(tmp_path))
+    key = job_key(_job(), "exhaustive", None)
+    store.put(key, _fake_result(_job()))
+    path = store._path(key)
+    with open(path, "w") as f:
+        f.write("{not json\n")
+    assert store.get(key) is None                # miss, not crash
+
+
+def test_serialize_roundtrip_standalone():
+    r = _fake_result(_job("th"))
+    rec = serialize_result(r)
+    back = deserialize_result(rec)
+    assert back.objective == "th"
+    assert back.config == r.config
+    assert back.sa is None
+
+
+def test_failed_group_rejects_futures(tmp_path):
+    class ExplodingEngine(CountingStubEngine):
+        def run(self, jobs, method="sa", sa_settings=None, keys=None):
+            raise ValueError("no feasible hardware point under budget")
+
+    with JobQueue(engine=ExplodingEngine(), store=None,
+                  config=QueueConfig(batch_window_s=0.0)) as q:
+        fut = q.submit(_job(budget=1e-6), method="exhaustive")
+        with pytest.raises(ValueError, match="no feasible"):
+            fut.result(timeout=30)
+        assert fut.exception(timeout=1) is not None
+
+
+def test_worker_survives_unbucketable_entry():
+    """An entry whose job can't even be bucketed (malformed design space)
+    is rejected individually; the worker thread keeps serving."""
+    class PickyEngine(CountingStubEngine):
+        def bucket_key(self, job, method="sa"):
+            if not job.design_space().mr:
+                raise IndexError("empty axis")
+            return super().bucket_key(job, method)
+
+    bad = ExploreJob(TPDCIM_MACRO, bert_large_workload(), 2.23,
+                     space=DesignSpace(mr=()))
+    with JobQueue(engine=PickyEngine(), store=None,
+                  config=QueueConfig(batch_window_s=0.0)) as q:
+        fb = q.submit(bad, method="exhaustive")
+        assert fb.exception(timeout=30) is not None
+        fg = q.submit(_job(), method="exhaustive")
+        assert fg.result(timeout=30).workload == "bert-large"
+
+
+def test_priority_orders_dispatch():
+    eng = CountingStubEngine(
+        bucket_of=lambda job, method: (job.objective,))  # bucket per obj
+    q = JobQueue(engine=eng, store=None,
+                 config=QueueConfig(batch_window_s=0.5))
+    try:
+        # both submissions land inside one micro-batch window; the
+        # high-priority job's bucket must dispatch (and resolve) first
+        lo = q.submit(_job("ee"), method="exhaustive", priority=0)
+        hi = q.submit(_job("th"), method="exhaustive", priority=5)
+        first = next(as_completed([lo, hi], timeout=30))
+        assert first is hi
+    finally:
+        q.close()
+
+
+# ------------------------------------------------------------------ #
+# blocking wrappers: service path must equal direct-engine path
+# ------------------------------------------------------------------ #
+def test_co_explore_service_path_matches_engine_path():
+    macro = get_macro("vanilla-dcim")
+    wl = bert_large_workload()
+    via_service = co_explore(macro, wl, 3.0, objective="ee",
+                             method="exhaustive", space=SMALL)
+    via_engine = co_explore(macro, wl, 3.0, objective="ee",
+                            method="exhaustive", space=SMALL,
+                            engine=ExplorationEngine())
+    assert via_service.config.as_tuple() == via_engine.config.as_tuple()
+    for key in ("energy_pj", "latency_cycles", "tops_w", "gops"):
+        assert via_service.metrics[key] == via_engine.metrics[key]
+
+
+def test_pareto_explore_service_path_matches_engine_path():
+    macro = get_macro("vanilla-dcim")
+    wl = bert_large_workload()
+    via_service = pareto_explore(macro, wl, 3.0, space=SMALL)
+    via_engine = pareto_explore(macro, wl, 3.0, space=SMALL,
+                                engine=ExplorationEngine())
+    assert [(p["config"], p["gops"], p["tops_w"]) for p in via_service] == \
+        [(p["config"], p["gops"], p["tops_w"]) for p in via_engine]
+
+
+def test_service_end_to_end_two_buckets_real_engine(tmp_path):
+    """Real-engine streaming: two shape buckets, every result correct, and
+    a resubmission is served entirely from the store."""
+    from repro.configs import get_arch
+    jobs = [
+        _job(wl=bert_large_workload()),
+        _job(wl=get_arch("whisper-small").workload(seq=512), budget=5.0),
+    ]
+    svc = ServiceClient(engine=ExplorationEngine(),
+                        store=ResultStore(str(tmp_path)))
+    try:
+        futs = svc.submit_many(jobs, method="exhaustive")
+        seen = [f.result(timeout=600) for f in futs]
+        assert svc.stats["dispatches"] == 2          # one per shape bucket
+        reference = ExplorationEngine().run(jobs, method="exhaustive")
+        for got, ref in zip(seen, reference):
+            assert got.config.as_tuple() == ref.config.as_tuple()
+            assert got.metrics["energy_pj"] == ref.metrics["energy_pj"]
+
+        d0 = svc.stats["dispatches"]
+        warm = svc.explore(jobs, method="exhaustive")
+        assert svc.stats["dispatches"] == d0, "warm path must skip engine"
+        assert svc.stats["store_hits"] == 2
+        for got, ref in zip(warm, reference):
+            assert got.config.as_tuple() == ref.config.as_tuple()
+            assert got.metrics["energy_pj"] == ref.metrics["energy_pj"]
+    finally:
+        svc.close()
+
+
+def test_cli_job_spec_parsing():
+    from repro.service import job_from_spec
+    job, method = job_from_spec({
+        "macro": "tpdcim-macro", "workload": "bert-large",
+        "area_budget_mm2": 2.23, "objective": "th",
+        "method": "exhaustive",
+        "space": {"mr": [1, 2], "mc": [1, 2], "scr": [1, 4],
+                  "is_kb": [16], "os_kb": [16]},
+    })
+    assert method == "exhaustive"
+    assert job.macro.name == "tpdcim-macro"
+    assert job.objective == "th"
+    assert job.design_space().mr == (1, 2)
+    inline, _ = job_from_spec({
+        "macro": "vanilla-dcim", "area_budget_mm2": 1.0,
+        "workload": {"name": "tiny", "ops": [[64, 64, 64, 2]]}})
+    assert inline.workload.ops[0].count == 2

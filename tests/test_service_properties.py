@@ -1,0 +1,81 @@
+"""Hypothesis property: shape-bucket padding is value-transparent through
+the batched/streamed path.
+
+For random small workloads, submitting a job through the service queue
+alongside a companion job that (a) pads the operator bucket (more merged
+ops) and (b) has a different pruned-candidate count (different budget, so
+the exhaustive sweep's chunk lanes pad differently) must produce the exact
+same best config and metrics -- bit for bit -- as a solo single-job
+``ExplorationEngine.run()``.
+"""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    DesignSpace,
+    ExplorationEngine,
+    ExploreJob,
+    MatmulOp,
+    Workload,
+    get_macro,
+)
+from repro.service import JobQueue, QueueConfig  # noqa: E402
+
+pytestmark = pytest.mark.slow      # hypothesis sweeps re-trace per example
+
+MACRO = get_macro("vanilla-dcim")
+TINY = DesignSpace(mr=(1, 2), mc=(1, 2), scr=(1, 4),
+                   is_kb=(2, 16), os_kb=(2, 16))
+
+op_st = st.tuples(
+    st.integers(1, 96),          # m
+    st.integers(1, 512),         # k
+    st.integers(1, 256),         # n
+    st.integers(1, 4),           # count
+    st.booleans(),               # weights_static
+)
+workload_st = st.lists(op_st, min_size=1, max_size=6)
+
+
+def _workload(ops, name="prop"):
+    return Workload(name, tuple(
+        MatmulOp(m=m, k=k, n=n, count=c, weights_static=w,
+                 name=f"op{i}")
+        for i, (m, k, n, c, w) in enumerate(ops)))
+
+
+# 7 distinct merged ops -> pads the 8-wide operator bucket that 5-6-op
+# random workloads share; its larger budget keeps MORE pruned candidates,
+# so the shared [jobs, chunk] sweep pads the small job's exhausted lane
+BIG_JOB = ExploreJob(
+    MACRO,
+    _workload([(64, 64 + 8 * i, 64, 1, True) for i in range(7)],
+              name="big"),
+    5.0, objective="ee", space=TINY)
+
+# module-level engines/queue: the executable cache amortizes compiles
+# across hypothesis examples (results are state-independent)
+SOLO_ENGINE = ExplorationEngine()
+QUEUE = JobQueue(engine=ExplorationEngine(), store=None,
+                 config=QueueConfig(batch_window_s=0.02))
+
+
+@settings(max_examples=15, deadline=None)
+@given(ops=workload_st, objective=st.sampled_from(["ee", "th"]))
+def test_streamed_best_cost_equals_single_job_bitwise(ops, objective):
+    wl = _workload(ops)
+    job = ExploreJob(MACRO, wl, 3.0, objective=objective, space=TINY)
+
+    solo = SOLO_ENGINE.run([job], method="exhaustive")[0]
+
+    futs = QUEUE.submit_many([job, BIG_JOB], method="exhaustive")
+    streamed = futs[0].result(timeout=600)
+
+    assert streamed.config.as_tuple() == solo.config.as_tuple()
+    for key in ("energy_pj", "latency_cycles", "tops_w", "gops",
+                "area_mm2"):
+        assert streamed.metrics[key] == solo.metrics[key], \
+            (key, "padded/streamed value differs from solo run")
