@@ -11,6 +11,12 @@ executable bucket finish together, so rows stream out bucket by bucket
 instead of blocking on the slowest network).  A 4-job subset is also timed
 against the sequential retrace-per-job path to report the engine's
 end-to-end speedup.
+
+``--search`` instead races the pluggable ``repro.search`` backends (SA /
+GA / DE / Sobol / portfolio, each at its default evaluation budget) on the
+same co-exploration jobs: per network it prints each backend's best-found
+objective, its gap to the exhaustive ground truth, and the measured
+wall-clock.
 """
 from __future__ import annotations
 
@@ -23,6 +29,9 @@ from repro.service import ServiceClient, as_completed
 
 BUDGET = 5.0
 STREAM_TIMEOUT_S = 1800.0
+#: networks used for the --search backend race (first two of Fig. 7)
+SEARCH_NETWORKS = ("bert-large", "yi-6b")
+SEARCH_BACKENDS = ("sa", "genetic", "evolution", "sobol", "portfolio")
 
 
 def _jobs(macro):
@@ -121,6 +130,54 @@ def run() -> typing.Iterator[str]:
     yield from _speedup_lines(macro)
 
 
+def run_search(
+    networks: typing.Sequence[str] = SEARCH_NETWORKS,
+) -> typing.Iterator[str]:
+    """Backend race: best-found objective + wall-clock per ``repro.search``
+    backend, against the exhaustive ground truth, one engine per race so
+    every backend pays its own compile exactly once."""
+    macro = get_macro("vanilla-dcim")
+    engine = ExplorationEngine()
+    for name in networks:
+        job = ExploreJob(macro, get_workload(name), BUDGET,
+                         objective="ee", strategy_set="st")
+        (ex,), t_ex = timed(engine.run, [job], method="exhaustive")
+        yield csv_line(
+            f"fig7_search_{name}_exhaustive", t_ex * 1e6,
+            f"energy={ex.metrics['energy_pj']:.6g} pJ "
+            f"EE={ex.metrics['tops_w']:.2f} TOPS/W "
+            f"(ground truth, wall {t_ex:.2f}s)")
+        best_name, best_energy = None, float("inf")
+        for backend in SEARCH_BACKENDS:
+            (res,), t_b = timed(engine.run, [job], method=backend)
+            energy = res.metrics["energy_pj"]
+            if energy < best_energy:
+                best_name, best_energy = backend, energy
+            gap = energy / ex.metrics["energy_pj"] - 1.0
+            extra = ""
+            if backend == "portfolio":
+                extra = f" winner={res.search['portfolio']['winner']}"
+            yield csv_line(
+                f"fig7_search_{name}_{backend}", t_b * 1e6,
+                f"energy={energy:.6g} pJ (gap {gap * 100:+.3f}% vs "
+                f"exhaustive) EE={res.metrics['tops_w']:.2f} TOPS/W "
+                f"wall={t_b:.2f}s{extra}")
+        yield csv_line(
+            f"fig7_search_{name}_best", 0.0,
+            f"best backend={best_name} energy={best_energy:.6g} pJ")
+
+
 if __name__ == "__main__":
-    for line in run():
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--search", action="store_true",
+                    help="race the repro.search backends instead of the "
+                         "ST-vs-SO sweep")
+    ap.add_argument("--networks", default=",".join(SEARCH_NETWORKS),
+                    help="comma-separated networks for --search")
+    args = ap.parse_args()
+    lines = run_search(tuple(args.networks.split(","))) if args.search \
+        else run()
+    for line in lines:
         print(line, flush=True)

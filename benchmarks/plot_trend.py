@@ -1,0 +1,148 @@
+"""Trend report over nightly ``results.jsonl`` benchmark artifacts.
+
+``benchmarks/run.py --jsonl`` writes one record per figure/table (module,
+status, elapsed_s, parsed rows); the nightly CI job uploads it as a 90-day
+artifact.  This script ingests one or more of those files -- downloaded
+artifacts, local runs, whatever -- and prints the per-module timing trend
+plus the largest per-row ``us_per_call`` regressions between the oldest
+and newest artifact.  With ``--plot`` it also renders a PNG (matplotlib
+optional; the textual report never needs it).
+
+    PYTHONPATH=src python -m benchmarks.plot_trend night1.jsonl night2.jsonl
+    PYTHONPATH=src python -m benchmarks.plot_trend *.jsonl --plot trend.png
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_artifact(path: str) -> dict:
+    """One results.jsonl -> {label, created_s, modules: {name: record}}."""
+    modules: dict[str, dict] = {}
+    created = None
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            if rec.get("module") == "_summary":
+                created = rec.get("created_s")
+            else:
+                modules[rec["module"]] = rec
+    if created is None:
+        created = os.path.getmtime(path)
+    return {"label": os.path.basename(path), "created_s": created,
+            "modules": modules}
+
+
+def _fmt(v) -> str:
+    return f"{v:9.1f}" if isinstance(v, (int, float)) else f"{'-':>9}"
+
+
+def module_trend_lines(artifacts: list[dict]) -> list[str]:
+    """Per-module elapsed_s across artifacts (oldest -> newest)."""
+    names: list[str] = []
+    for a in artifacts:
+        for m in a["modules"]:
+            if m not in names:
+                names.append(m)
+    head = f"{'module':24}" + "".join(
+        f"{a['label'][:16]:>18}" for a in artifacts) + "   trend"
+    out = [head, "-" * len(head)]
+    for m in names:
+        cells, vals = [], []
+        for a in artifacts:
+            rec = a["modules"].get(m)
+            ok = rec is not None and rec.get("status") == "ok"
+            el = rec.get("elapsed_s") if ok else None
+            vals.append(el)
+            cell = f"{el:.1f}s" if el is not None else (
+                "FAILED" if rec is not None else "-")
+            cells.append(f"{cell:>18}")
+        known = [v for v in vals if v is not None]
+        trend = ""
+        if len(known) >= 2 and known[0]:
+            trend = f"x{known[-1] / known[0]:.2f}"
+        out.append(f"{m:24}" + "".join(cells) + f"   {trend}")
+    return out
+
+
+def row_regression_lines(artifacts: list[dict], top: int = 10) -> list[str]:
+    """Largest us_per_call ratios between the oldest and newest artifact."""
+    if len(artifacts) < 2:
+        return []
+    old, new = artifacts[0], artifacts[-1]
+
+    def rows_of(a):
+        out = {}
+        for rec in a["modules"].values():
+            for row in rec.get("rows", []):
+                if isinstance(row.get("us_per_call"), (int, float)) \
+                        and row["us_per_call"] > 0:
+                    out[row["name"]] = row["us_per_call"]
+        return out
+
+    o, n = rows_of(old), rows_of(new)
+    shared = sorted(set(o) & set(n), key=lambda k: n[k] / o[k], reverse=True)
+    if not shared:
+        return []
+    out = [f"top row-level changes ({old['label']} -> {new['label']}):"]
+    for k in shared[:top]:
+        out.append(f"  {k:40} {o[k]:12.1f} -> {n[k]:12.1f} us  "
+                   f"x{n[k] / o[k]:.2f}")
+    return out
+
+
+def maybe_plot(artifacts: list[dict], path: str) -> bool:
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        print("matplotlib not installed; skipping --plot", file=sys.stderr)
+        return False
+    names = sorted({m for a in artifacts for m in a["modules"]})
+    xs = list(range(len(artifacts)))
+    fig, ax = plt.subplots(figsize=(8, 4.5))
+    for m in names:
+        ys = [a["modules"].get(m, {}).get("elapsed_s") for a in artifacts]
+        ax.plot(xs, ys, marker="o", label=m)
+    ax.set_xticks(xs, [a["label"][:16] for a in artifacts],
+                  rotation=30, ha="right")
+    ax.set_ylabel("elapsed_s")
+    ax.set_title("benchmark timing trend")
+    ax.legend(fontsize=7)
+    fig.tight_layout()
+    fig.savefig(path, dpi=120)
+    return True
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("files", nargs="+", help="results.jsonl artifacts")
+    ap.add_argument("--plot", default=None, metavar="PNG",
+                    help="also render a timing-trend plot")
+    ap.add_argument("--top", type=int, default=10,
+                    help="row-level regressions to show")
+    args = ap.parse_args(argv)
+
+    artifacts = sorted((load_artifact(p) for p in args.files),
+                       key=lambda a: a["created_s"])
+    for line in module_trend_lines(artifacts):
+        print(line)
+    reg = row_regression_lines(artifacts, args.top)
+    if reg:
+        print()
+        for line in reg:
+            print(line)
+    if args.plot and maybe_plot(artifacts, args.plot):
+        print(f"\nwrote {args.plot}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

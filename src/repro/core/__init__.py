@@ -10,7 +10,10 @@ Public API:
     simulate_schedule               -- cycle simulator
     co_explore / evaluate_config    -- the co-exploration tool
     ExplorationEngine / ExploreJob  -- batched multi-job engine (shared
-                                       compiled executables + caching)
+                                       compiled executables + caching);
+                                       search backends are pluggable via
+                                       repro.search (sa / genetic /
+                                       evolution / sobol / portfolio)
     distributed_co_explore          -- multi-pod DSE (shard_map)
 """
 from repro.core.calibration import DEFAULT_TECH, TechConstants
@@ -32,7 +35,7 @@ from repro.core.distributed import DistributedResult, distributed_co_explore
 from repro.core.engine import (ExplorationEngine, ExploreJob,
                                default_engine,
                                enable_persistent_compilation_cache,
-                               job_key)
+                               job_key, valid_methods)
 from repro.core.explorer import (ExploreResult, co_explore,
                                  co_explore_macros, evaluate_config,
                                  pareto_explore)
@@ -60,6 +63,6 @@ __all__ = [
     "co_explore", "co_explore_macros", "pareto_explore",
     "evaluate_config", "ExploreResult",
     "ExplorationEngine", "ExploreJob", "default_engine",
-    "enable_persistent_compilation_cache", "job_key",
+    "enable_persistent_compilation_cache", "job_key", "valid_methods",
     "distributed_co_explore", "DistributedResult",
 ]

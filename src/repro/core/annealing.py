@@ -4,7 +4,10 @@
 
 Fully jittable: chains are ``vmap``-ed, steps run under ``lax.scan``, so the
 same function drops into ``shard_map`` for the multi-pod distributed DSE
-(``core/distributed.py``).
+(``core/distributed.py``).  Registered as the ``"sa"`` backend of the
+pluggable search subsystem (``repro.search.sa`` adapts :func:`anneal` to
+the shared ``SearchBackend`` contract), so it runs through the exact same
+engine executable path as the GA / DE / Sobol / portfolio backends.
 
 The walk moves through index space of the (power-of-two constrained) axis
 value lists; the area budget enters as a smooth penalty inside the objective

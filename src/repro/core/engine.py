@@ -14,24 +14,36 @@ lists through shared compiled executables:
 2. **Job stacking** -- macro/tech constants, strategy masks, objective codes,
    area budgets and bus widths become per-job arrays
    (:class:`repro.core.cost_model.JobParams`) vmapped over a stacked job
-   axis: simulated annealing runs *all jobs' chains in one jitted call*, and
-   exhaustive sweeps evaluate a ``[jobs, chunk]`` candidate block per call.
+   axis: every ``repro.search`` backend (SA chains, GA / DE populations,
+   Sobol sweeps) runs *all jobs in one jitted call*, and exhaustive sweeps
+   evaluate a ``[jobs, chunk]`` candidate block per call.
 3. **Two-level caching** -- an in-process executable cache keyed by (bucket
-   shape, SA settings, x64 mode) means repeated submissions never retrace,
-   and JAX's persistent compilation cache is switched on by default
+   shape, backend, settings, x64 mode) means repeated submissions never
+   retrace, and JAX's persistent compilation cache is switched on by default
    (:func:`enable_persistent_compilation_cache`) so fresh processes -- CI
    runs, benchmark re-runs -- reuse compiles from disk.
+
+The search method is pluggable (``repro.search``): any registered backend
+name is a valid ``method=`` -- ``"sa"``, ``"genetic"``, ``"evolution"``,
+``"sobol"`` run as one vmapped executable per shape bucket, the composite
+``"portfolio"`` races them with successive halving per job
+(:meth:`ExplorationEngine._run_portfolio_batch`), re-using the constituent
+backends' executables, and ``"exhaustive"`` sweeps the pruned space.
+``ExploreJob.search_method`` carries the method when no explicit
+``method=`` is given, and :func:`job_key` folds (method, settings) into the
+canonical identity so cached results never cross backends.
 
 Identical jobs inside one ``run()`` (same canonical :func:`job_key`)
 evaluate once and fan the result out.  ``co_explore`` / ``co_explore_macros``
 / ``pareto_explore`` (``core/explorer.py``) are thin synchronous clients of
 the async DSE service (``repro.service``) built on this engine;
 ``benchmarks/fig7_mapping.py`` prints the measured batched-vs-sequential
-speedup.  ``core/distributed.py`` shards the same job x chain population
-across devices.
+speedup (and ``--search`` races the backends).  ``core/distributed.py``
+shards the same job x chain population across devices.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import hashlib
 import json
@@ -44,19 +56,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cost_model
-from repro.core.annealing import (
-    SAResult,
-    SASettings,
-    _axes_matrix,
-    anneal,
-    make_chain_keys,
-)
+from repro.core.annealing import SASettings, _axes_matrix
 from repro.core.calibration import DEFAULT_TECH, TechConstants
 from repro.core.ir import Workload
 from repro.core.macro import MacroSpec
 from repro.core.pruning import DesignSpace, candidates_with_bw, prune_space
 from repro.core.strategies import ALL_STRATEGIES
 from repro.core.template import AcceleratorConfig, accelerator_area_mm2
+from repro.search.base import SearchResult, available_backends, get_backend
 
 __all__ = [
     "ExploreJob",
@@ -65,6 +72,7 @@ __all__ = [
     "default_engine",
     "enable_persistent_compilation_cache",
     "job_key",
+    "valid_methods",
 ]
 
 
@@ -130,6 +138,9 @@ class ExploreJob:
     tech: TechConstants = DEFAULT_TECH
     space: DesignSpace | None = None
     merge_ops: bool = True
+    #: search backend used when ``run(method=None)`` -- any registered
+    #: ``repro.search`` backend name, or "exhaustive"
+    search_method: str = "sa"
 
     def merged_workload(self) -> Workload:
         return self.workload.merged() if self.merge_ops else self.workload
@@ -148,7 +159,9 @@ class ExploreResult:
     per_op_strategy: dict[str, str]
     metrics: dict
     search: dict                      # method, runtime, space stats
-    sa: SAResult | None = None
+    #: per-member diagnostics of the stochastic backend run (named ``sa``
+    #: for historical reasons; carries any backend's SearchResult)
+    sa: SearchResult | None = None
 
     def summary(self) -> str:
         c = self.config
@@ -166,8 +179,22 @@ class ExploreResult:
 # canonical job identity (dedup + the service result store)
 # --------------------------------------------------------------------- #
 #: bump when the cost model / result schema changes meaning, so persisted
-#: results keyed under the old schema stop matching
-JOB_KEY_SCHEMA = 1
+#: results keyed under the old schema stop matching.  Schema 2: the key
+#: folds in (search method, backend settings) for EVERY backend, so a
+#: warm-store SA result can never be returned for a GA/DE/Sobol/portfolio
+#: query (or vice versa).
+JOB_KEY_SCHEMA = 2
+
+
+def valid_methods() -> tuple[str, ...]:
+    """Every accepted ``method=`` name: the registered ``repro.search``
+    backends plus the pruned-space ``"exhaustive"`` sweep."""
+    return available_backends() + ("exhaustive",)
+
+
+def _check_method(method: str) -> None:
+    if method != "exhaustive":
+        get_backend(method)              # raises ValueError with the list
 
 
 def _canonical(obj):
@@ -195,24 +222,29 @@ def _canonical(obj):
 
 def job_key(
     job: ExploreJob,
-    method: str = "sa",
-    sa_settings: SASettings | None = None,
+    method: str | None = None,
+    settings=None,
 ) -> str:
     """Content hash identifying one exploration's *answer*.
 
     Two submissions share a key iff they are guaranteed to produce
     bit-identical results: same job ingredients (macro, workload, budget,
     objective, strategy set, bandwidth, tech constants, design space,
-    merge flag), same search method, same SA settings when the method is
-    stochastic, and the same x64 mode.  Used for in-batch dedup
+    merge flag), same search method (``None`` defers to
+    ``job.search_method``), same backend settings when the method is a
+    search backend, and the same x64 mode.  Used for in-batch dedup
     (:meth:`ExplorationEngine.run`), in-flight dedup in the service queue,
     and as the content address of the persistent result store.
     """
+    method = method or job.search_method
     payload = {
         "schema": JOB_KEY_SCHEMA,
-        "job": _canonical(dataclasses.replace(job, space=job.design_space())),
+        # normalize search_method into the job so "method override" and
+        # "job field" spellings of the same exploration share a key
+        "job": _canonical(dataclasses.replace(
+            job, space=job.design_space(), search_method=method)),
         "method": method,
-        "sa": _canonical(sa_settings) if method == "sa" else None,
+        "settings": _canonical(settings) if method != "exhaustive" else None,
         "x64": bool(jax.config.jax_enable_x64),
     }
     blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
@@ -255,10 +287,11 @@ def _stack_jobs(rows: list[cost_model.JobParams]) -> cost_model.JobParams:
 
 def clone_result(r: ExploreResult) -> ExploreResult:
     """Fan-out copy for deduped submissions (fresh mutable containers so
-    callers mutating one result cannot alias another)."""
+    callers mutating one result cannot alias another).  ``search`` is
+    deep-copied: portfolio results nest mutable dicts inside it."""
     return dataclasses.replace(
         r, per_op_strategy=dict(r.per_op_strategy),
-        metrics=dict(r.metrics), search=dict(r.search))
+        metrics=dict(r.metrics), search=copy.deepcopy(r.search))
 
 
 # --------------------------------------------------------------------- #
@@ -310,9 +343,24 @@ class ExplorationEngine:
             self._executables[key] = build()
         return self._executables[key]
 
-    def _sa_executable(self, ops_pad: int, axes_pad: int,
-                       settings: SASettings):
-        key = ("sa", ops_pad, axes_pad, settings,
+    def _search_executable(self, backend, ops_pad: int, axes_pad: int,
+                           settings):
+        """One jitted vmapped executable per (backend, bucket, settings) --
+        every ``repro.search`` backend shares this path, so a GA sweep and
+        an SA sweep over the same bucket are two cache entries, each
+        compiled once.  For backends honouring the ``seed_free_run``
+        contract (all randomness enters via the ``keys`` argument) the RNG
+        seed is normalized out of the cache key, so reseeded runs
+        (hypothesis sweeps, portfolio rungs) share one compile; backends
+        that read ``settings.seed`` inside ``run`` keep the seed in the
+        key and compile per seed."""
+        cache_settings = settings
+        if backend.seed_free_run:
+            try:
+                cache_settings = dataclasses.replace(settings, seed=0)
+            except TypeError:                          # seedless settings
+                pass
+        key = (backend.name, ops_pad, axes_pad, cache_settings,
                bool(jax.config.jax_enable_x64))
 
         def build():
@@ -320,7 +368,8 @@ class ExplorationEngine:
                 def objective(cfg_row):
                     return cost_model.job_objective(
                         job, cfg_row, self.penalty_scale)
-                return anneal(objective, mat, lens, job.bw, settings, keys)
+                return backend.run(objective, mat, lens, job.bw, settings,
+                                   keys)
             return jax.jit(jax.vmap(one_job))
 
         return self._cached(key, build)
@@ -342,32 +391,67 @@ class ExplorationEngine:
     # ------------------------------------------------------------- #
     # public API
     # ------------------------------------------------------------- #
+    def default_settings(self, method: str):
+        """Effective settings when the caller supplies none: the engine's
+        construction-time ``sa_settings`` for SA (back-compat), the
+        backend's defaults otherwise, ``None`` for exhaustive."""
+        if method == "exhaustive":
+            return None
+        if method == "sa":
+            return self.sa_settings
+        return get_backend(method).default_settings()
+
+    def _resolve_settings(self, method: str, settings):
+        if method == "exhaustive":
+            return None                # sweep has no knobs; ignore settings
+        if settings is None:
+            return self.default_settings(method)
+        backend = get_backend(method)
+        if not isinstance(settings, backend.settings_cls):
+            raise TypeError(
+                f"method {method!r} expects {backend.settings_cls.__name__}"
+                f" settings, got {type(settings).__name__}")
+        return settings
+
     def run(
         self,
         jobs: typing.Sequence[ExploreJob],
-        method: str = "sa",
+        method: str | None = None,
+        settings=None,
         sa_settings: SASettings | None = None,
         keys: typing.Sequence[str] | None = None,
     ) -> list[ExploreResult]:
         """Co-explore every job; results come back in submission order.
 
-        ``method="sa"`` anneals all jobs' chains in one jitted call per
-        shape bucket; ``method="exhaustive"`` sweeps each job's pruned
-        candidate list in shared ``[jobs, chunk]`` blocks.  ``keys`` lets
-        callers that already computed :func:`job_key` for each job (the
-        service queue) skip re-hashing; when given it must align 1:1 with
-        ``jobs``.
+        ``method`` is any registered ``repro.search`` backend name
+        (``"sa"``, ``"genetic"``, ``"evolution"``, ``"sobol"``,
+        ``"portfolio"``, ...) or ``"exhaustive"``; ``None`` uses each
+        job's own ``search_method``, so one batch may mix methods (each
+        (method, shape bucket) group runs as one jitted call).
+        ``settings`` must match the backend's settings class and requires
+        a homogeneous method across the batch; ``sa_settings`` is the
+        legacy alias.  ``keys`` lets callers that already computed
+        :func:`job_key` for each job (the service queue) skip re-hashing;
+        when given it must align 1:1 with ``jobs``.
         """
-        if method not in ("sa", "exhaustive"):
-            raise ValueError(f"unknown method {method!r}")
         t_start = time.perf_counter()
-        settings = sa_settings or self.sa_settings
+        if settings is None:
+            settings = sa_settings
+        methods = [method or j.search_method for j in jobs]
+        for m in set(methods):
+            _check_method(m)
+        if settings is not None and len(set(methods)) > 1:
+            raise ValueError(
+                "explicit settings require a single method across the "
+                f"batch, got {sorted(set(methods))}")
+        resolved = {m: self._resolve_settings(m, settings)
+                    for m in set(methods)}
 
         # identical submissions (same canonical key) evaluate ONCE; the
         # result fans out to every duplicate slot below
         if keys is None:
-            keys = [job_key(j, method, settings if method == "sa" else None)
-                    for j in jobs]
+            keys = [job_key(j, m, resolved[m])
+                    for j, m in zip(jobs, methods)]
         elif len(keys) != len(jobs):
             raise ValueError(
                 f"keys length {len(keys)} != jobs length {len(jobs)}")
@@ -385,15 +469,20 @@ class ExplorationEngine:
 
         results: list[ExploreResult | None] = [None] * len(jobs)
         for bucket, members in self._buckets(
-                [(i, prepared[i]) for i in unique], method).items():
-            del bucket
+                [(i, prepared[i]) for i in unique], methods).items():
+            m = bucket[0]
             idxs = [i for i, _ in members]
             batch = [p for _, p in members]
             self.stats["batches"] += 1
-            if method == "sa":
-                outs = self._run_sa_batch(batch, settings)
-            else:
+            if m == "exhaustive":
                 outs = self._run_exhaustive_batch(batch)
+            else:
+                backend = get_backend(m)
+                if backend.composite:
+                    outs = self._run_portfolio_batch(batch, resolved[m])
+                else:
+                    outs = self._run_search_batch(batch, backend,
+                                                  resolved[m])
             for i, out in zip(idxs, outs):
                 results[i] = out
         for i, k in enumerate(keys):
@@ -439,32 +528,38 @@ class ExplorationEngine:
             mat=mat, lens=lens,
         )
 
-    def bucket_key(self, job: ExploreJob, method: str = "sa") -> tuple:
+    def bucket_key(self, job: ExploreJob, method: str | None = None) -> tuple:
         """Executable-signature bucket of a job: jobs sharing a bucket run
         in one batched call (the service queue groups submissions by this
         so each micro-batch dispatches as exactly one ``run()``)."""
+        method = method or job.search_method
         return self._bucket_key(self._prepare(job), method)
 
     @staticmethod
     def _bucket_key(p: _PreparedJob, method: str) -> tuple:
-        if method == "sa":
-            return (p.ops_pad, _pow2_at_least(p.mat.shape[1]))
-        return (p.ops_pad,)
+        if method == "exhaustive":
+            return ("exhaustive", p.ops_pad)
+        return (method, p.ops_pad, _pow2_at_least(p.mat.shape[1]))
 
     def _buckets(
-        self, prepared: list[tuple[int, _PreparedJob]], method: str,
+        self, prepared: list[tuple[int, _PreparedJob]],
+        methods: typing.Sequence[str],
     ) -> dict:
-        """Group (index, prepared) pairs by executable signature,
-        preserving order."""
+        """Group (index, prepared) pairs by executable signature (whose
+        first element is the method), preserving order."""
         groups: dict = {}
         for i, p in prepared:
-            groups.setdefault(self._bucket_key(p, method), []).append((i, p))
+            groups.setdefault(
+                self._bucket_key(p, methods[i]), []).append((i, p))
         return groups
 
-    # ---- SA path -------------------------------------------------- #
-    def _run_sa_batch(
-        self, batch: list[_PreparedJob], settings: SASettings,
-    ) -> list[ExploreResult]:
+    # ---- pluggable search-backend path ---------------------------- #
+    def _dispatch_backend(
+        self, batch: list[_PreparedJob], backend, settings,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """One batched backend call over a shape bucket.  Returns numpy
+        ``(best_idx [J, members, 5], best_val [J, members],
+        trace [J, steps])``."""
         axes_pad = _pow2_at_least(max(p.mat.shape[1] for p in batch))
         stacked = _stack_jobs([_job_arrays(p) for p in batch])
         mats = np.stack([
@@ -474,40 +569,139 @@ class ExplorationEngine:
             for p in batch])                                 # [J, 5, L]
         lens = np.stack([p.lens for p in batch])             # [J, 5]
         keys = np.stack([
-            np.asarray(make_chain_keys(settings)) for _ in batch])
+            np.asarray(backend.make_keys(settings)) for _ in batch])
 
-        fn = self._sa_executable(batch[0].ops_pad, axes_pad, settings)
-        best_idx, best_val, hists = fn(
+        fn = self._search_executable(
+            backend, batch[0].ops_pad, axes_pad, settings)
+        best_idx, best_val, trace = fn(
             stacked, jnp.asarray(mats), jnp.asarray(lens), jnp.asarray(keys))
-        best_idx = np.asarray(best_idx)                      # [J, chains, 5]
-        best_val = np.asarray(best_val)                      # [J, chains]
-        hists = np.asarray(hists)                            # [J, chains, S]
+        return (np.asarray(best_idx), np.asarray(best_val),
+                np.asarray(trace))
+
+    def _wrap_search_winner(
+        self, p: _PreparedJob, method: str,
+        best_idx: np.ndarray,          # [members, 5] of this job
+        best_val: np.ndarray,          # [members]
+        trace: np.ndarray,             # [steps]
+    ) -> ExploreResult:
+        """Shared epilogue of every stochastic backend: pick the winning
+        member, snap-verify the area budget, attach diagnostics."""
+        job = p.job
+        winner = int(np.argmin(best_val))
+        vals = p.mat[np.arange(5), best_idx[winner]]
+        diag = SearchResult(
+            best_cfg=jnp.asarray(
+                np.concatenate([vals, [float(job.bw)]])),
+            best_value=jnp.asarray(best_val[winner]),
+            best_per_chain=jnp.asarray(best_val),
+            trace_best=jnp.asarray(trace),
+        )
+        cfg = AcceleratorConfig(
+            *[int(round(v)) for v in vals], bw=job.bw)
+        search: dict = {"method": method,
+                        "merged_ops": len(p.workload.ops),
+                        "raw_ops": len(job.workload.ops)}
+        # backends walk the raw grid with an area penalty; snap-verify
+        # feasibility and fall back to the pruned-space optimum if the
+        # penalty let the winner out of budget (rare)
+        if accelerator_area_mm2(cfg, job.macro, job.tech) > \
+                job.area_budget_mm2 * 1.001:
+            cfg, stats = self._exhaustive_one(p)
+            search.update(stats)
+        return self._finish(p, cfg, search, diag)
+
+    def _run_search_batch(
+        self, batch: list[_PreparedJob], backend, settings,
+    ) -> list[ExploreResult]:
+        best_idx, best_val, trace = self._dispatch_backend(
+            batch, backend, settings)
+        return [
+            self._wrap_search_winner(
+                p, backend.name, best_idx[jx], best_val[jx], trace[jx])
+            for jx, p in enumerate(batch)
+        ]
+
+    # ---- portfolio (successive-halving racer) --------------------- #
+    def _run_portfolio_batch(
+        self, batch: list[_PreparedJob], settings,
+    ) -> list[ExploreResult]:
+        """Race the constituent backends per job: every rung runs each
+        job's surviving backends (batched across jobs, re-using the
+        backends' regular executables), culls to the best ``ceil(k/2)``,
+        then spends the remaining budget on each job's winner.  The
+        reported best is the min across every phase."""
+        from repro.search.portfolio import final_plan, race_plan
+
+        names = settings.backends
+        n_jobs, n_back = len(batch), len(names)
+        best_val = np.full(n_jobs, np.inf)
+        best_idx = np.zeros((n_jobs, 5), dtype=np.int64)
+        per_backend = np.full((n_jobs, n_back), np.inf)
+        alive = np.ones((n_jobs, n_back), dtype=bool)
+        # diagnostics track the run that PRODUCED each job's current best,
+        # so min(best_per_chain) == min(trace_best) == the reported value
+        member_vals: list[np.ndarray | None] = [None] * n_jobs
+        traces: list[np.ndarray | None] = [None] * n_jobs
+
+        def _race(name: str, scaled, sel: list[int]) -> dict[int, float]:
+            """One backend run over ``sel``; folds global bests, returns
+            each job's best value of THIS run."""
+            if not sel:
+                return {}
+            sub = [batch[j] for j in sel]
+            idx_a, val_a, tr_a = self._dispatch_backend(
+                sub, get_backend(name), scaled)
+            run_best: dict[int, float] = {}
+            for pos, j in enumerate(sel):
+                w = int(np.argmin(val_a[pos]))
+                v = float(val_a[pos, w])
+                run_best[j] = v
+                if v < best_val[j]:
+                    best_val[j] = v
+                    best_idx[j] = idx_a[pos, w]
+                    member_vals[j] = val_a[pos]
+                    traces[j] = tr_a[pos]
+            return run_best
+
+        for rung in race_plan(settings):
+            for b_idx, name in enumerate(names):
+                sel = [j for j in range(n_jobs) if alive[j, b_idx]]
+                for j, v in _race(name, rung[name], sel).items():
+                    per_backend[j, b_idx] = min(per_backend[j, b_idx], v)
+            # cull: each job keeps its best ceil(k/2) surviving backends
+            for j in range(n_jobs):
+                live = np.flatnonzero(alive[j])
+                keep = -(-len(live) // 2)
+                order = live[np.argsort(per_backend[j, live],
+                                        kind="stable")]
+                alive[j, order[keep:]] = False
+
+        # exploitation: the per-job winner gets the remaining budget
+        # (kept out of per_backend so `race` stays race-phase-only)
+        winners = per_backend.argmin(axis=1)
+        final = final_plan(settings)
+        final_best = np.full(n_jobs, np.inf)
+        for b_idx, name in enumerate(names):
+            sel = [j for j in range(n_jobs) if winners[j] == b_idx]
+            for j, v in _race(name, final[name], sel).items():
+                final_best[j] = v
 
         results = []
-        for jx, p in enumerate(batch):
-            job = p.job
-            winner = int(np.argmin(best_val[jx]))
-            vals = p.mat[np.arange(5), best_idx[jx, winner]]
-            sa_res = SAResult(
-                best_cfg=jnp.asarray(
-                    np.concatenate([vals, [float(job.bw)]])),
-                best_value=jnp.asarray(best_val[jx, winner]),
-                best_per_chain=jnp.asarray(best_val[jx]),
-                trace_best=jnp.asarray(hists[jx].min(axis=0)),
-            )
-            cfg = AcceleratorConfig(
-                *[int(round(v)) for v in vals], bw=job.bw)
-            search: dict = {"method": "sa",
-                            "merged_ops": len(p.workload.ops),
-                            "raw_ops": len(job.workload.ops)}
-            # SA walks the raw grid with an area penalty; snap-verify
-            # feasibility and fall back to the pruned-space optimum if the
-            # penalty let the winner out of budget (rare)
-            if accelerator_area_mm2(cfg, job.macro, job.tech) > \
-                    job.area_budget_mm2 * 1.001:
-                cfg, stats = self._exhaustive_one(p)
-                search.update(stats)
-            results.append(self._finish(p, cfg, search, sa_res))
+        for j, p in enumerate(batch):
+            out = self._wrap_search_winner(
+                p, "portfolio", best_idx[j][None, :],
+                np.asarray([best_val[j]]), traces[j])
+            out.search["portfolio"] = {
+                "winner": names[int(winners[j])],
+                "race": {name: float(per_backend[j, b])
+                         for b, name in enumerate(names)},
+                "final": float(final_best[j]),
+                "rungs": settings.rungs,
+                "total_evals": settings.total_evals,
+            }
+            out.sa = out.sa._replace(
+                best_per_chain=jnp.asarray(member_vals[j]))
+            results.append(out)
         return results
 
     # ---- exhaustive path ------------------------------------------ #
@@ -577,7 +771,7 @@ class ExplorationEngine:
 
     # ---- shared epilogue ------------------------------------------ #
     def _finish(self, p: _PreparedJob, cfg: AcceleratorConfig, search: dict,
-                sa_res: SAResult | None) -> ExploreResult:
+                sa_res: SearchResult | None) -> ExploreResult:
         job = p.job
         cfg_row = jnp.asarray(
             [cfg.mr, cfg.mc, cfg.scr, cfg.is_kb, cfg.os_kb, cfg.bw],

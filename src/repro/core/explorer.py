@@ -7,11 +7,22 @@ mapping strategy and PPA metrics.  Mapping exploration (the per-operator
 8-strategy argmin) runs as a sub-process of hardware exploration, exactly as
 in the paper's workflow.
 
-Two search methods:
+The search method is pluggable (``repro.search``):
   * ``sa``          -- the paper's simulated annealing (vectorized chains);
+  * ``genetic``     -- tournament-selection GA with uniform crossover and
+    axis-index mutation;
+  * ``evolution``   -- discrete differential evolution (rand/1/bin);
+  * ``sobol``       -- scrambled quasi-random baseline;
+  * ``portfolio``   -- successive-halving race over the backends above,
+    per job (winner gets the remaining budget);
   * ``exhaustive``  -- ground truth over the pruned space (feasible because
-    the whole evaluation is one vmapped jnp expression); used to validate SA
-    quality in tests and available to users for small spaces.
+    the whole evaluation is one vmapped jnp expression); used to validate
+    backend quality in tests and available to users for small spaces.
+
+Custom backends registered via ``repro.search.register_backend`` become
+valid ``method=`` values immediately.  Backend-specific settings go in
+``settings=`` (e.g. ``GASettings``); ``sa_settings`` remains the SA
+spelling.
 
 Everything here is a thin synchronous client of the process-wide async DSE
 service (``repro.service``): a single call submits a batch of one, so
@@ -56,15 +67,17 @@ def _run_jobs(
     method: str,
     sa_settings: SASettings | None,
     engine: ExplorationEngine | None,
+    settings=None,
 ) -> list[ExploreResult]:
     """Dispatch a job list: direct engine call when the caller supplied an
     engine, otherwise through the process-wide service (micro-batching,
     in-flight dedup, persistent result store)."""
+    if settings is None and method == "sa":
+        settings = sa_settings
     if engine is not None:
-        return engine.run(jobs, method=method, sa_settings=sa_settings)
+        return engine.run(jobs, method=method, settings=settings)
     from repro.service.client import default_service
-    return default_service().explore(
-        jobs, method=method, sa_settings=sa_settings)
+    return default_service().explore(jobs, method=method, settings=settings)
 
 
 def co_explore(
@@ -81,17 +94,23 @@ def co_explore(
     sa_settings: SASettings = SASettings(),
     merge_ops: bool = True,
     engine: ExplorationEngine | None = None,
+    settings=None,
 ) -> ExploreResult:
-    """Single-job co-exploration (batch of one on the shared engine)."""
+    """Single-job co-exploration (batch of one on the shared engine).
+
+    ``method`` accepts any registered ``repro.search`` backend name or
+    ``"exhaustive"``; ``settings`` carries that backend's settings object
+    (``sa_settings`` is the SA-specific spelling, kept for back-compat).
+    """
     space = space or DesignSpace()
     if fixed:
         space = space.fix(**fixed)
     job = ExploreJob(
         macro=macro, workload=workload, area_budget_mm2=area_budget_mm2,
         objective=objective, strategy_set=strategy_set, bw=bw, tech=tech,
-        space=space, merge_ops=merge_ops,
+        space=space, merge_ops=merge_ops, search_method=method,
     )
-    return _run_jobs([job], method, sa_settings, engine)[0]
+    return _run_jobs([job], method, sa_settings, engine, settings)[0]
 
 
 def co_explore_macros(
@@ -112,16 +131,18 @@ def co_explore_macros(
     objective = kw.get("objective", "ee")
     method = kw.pop("method", "sa")
     sa_settings = kw.pop("sa_settings", SASettings())
+    settings = kw.pop("settings", None)
     space = kw.pop("space", None) or DesignSpace()
     fixed = kw.pop("fixed", None)
     if fixed:
         space = space.fix(**fixed)
     jobs = [
         ExploreJob(macro=m, workload=workload,
-                   area_budget_mm2=area_budget_mm2, space=space, **kw)
+                   area_budget_mm2=area_budget_mm2, space=space,
+                   search_method=method, **kw)
         for m in macros
     ]
-    results = _run_jobs(jobs, method, sa_settings, engine)
+    results = _run_jobs(jobs, method, sa_settings, engine, settings)
     key = (lambda r: -r.metrics["tops_w"]) if objective == "ee" else \
         (lambda r: -r.metrics["gops"]) if objective == "th" else \
         (lambda r: r.metrics["latency_s"] * r.metrics["energy_pj"])

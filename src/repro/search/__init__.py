@@ -1,0 +1,45 @@
+"""``repro.search`` -- pluggable batched optimizer portfolio.
+
+The extended CIM-Tuner search space (hardware sizing x two-level mapping
+under an area budget) is explored by interchangeable, fully jittable
+backends that all share one interface (:class:`~repro.search.base.
+SearchBackend`) and the same ``[jobs]``-leading-axis contract as
+``core/annealing.anneal`` -- so every backend drops straight into the
+batched engine's vmapped one-executable-per-bucket path:
+
+* ``"sa"``         -- the paper's simulated annealing (adapter over
+  ``core/annealing``);
+* ``"genetic"``    -- tournament-selection GA, uniform crossover +
+  axis-index mutation;
+* ``"evolution"``  -- discrete differential evolution (rand/1/bin on
+  index space);
+* ``"sobol"``      -- scrambled quasi-random baseline (and the init-
+  population provider for GA / DE);
+* ``"portfolio"``  -- successive-halving racer over the other backends
+  (composite; the engine orchestrates it, per job).
+
+Every registered name is a valid ``method=`` for ``ExplorationEngine.run``,
+the ``co_explore`` family, service submissions, JSON job specs
+(``"search": "genetic"``) and ``benchmarks/fig7_mapping.py --search``.
+Register your own with :func:`register_backend` (see ``base.py``).
+"""
+from repro.search.base import (SearchBackend, SearchResult,
+                               available_backends, cfg_from_indices,
+                               get_backend, register_backend)
+from repro.search.evolution import DESettings, DifferentialEvolutionBackend
+from repro.search.genetic import GASettings, GeneticBackend
+from repro.search.portfolio import (PortfolioBackend, PortfolioSettings,
+                                    final_plan, race_plan)
+from repro.search.sa import SASettings, SimulatedAnnealingBackend
+from repro.search.sobol import (SobolBackend, SobolSettings,
+                                sobol_index_population)
+
+__all__ = [
+    "SearchBackend", "SearchResult", "register_backend", "get_backend",
+    "available_backends", "cfg_from_indices",
+    "SASettings", "SimulatedAnnealingBackend",
+    "GASettings", "GeneticBackend",
+    "DESettings", "DifferentialEvolutionBackend",
+    "SobolSettings", "SobolBackend", "sobol_index_population",
+    "PortfolioSettings", "PortfolioBackend", "race_plan", "final_plan",
+]

@@ -1,0 +1,157 @@
+"""Pluggable batched search-backend interface + registry.
+
+Every optimizer in ``repro.search`` (simulated annealing, genetic algorithm,
+differential evolution, scrambled Sobol, the portfolio racer) implements one
+contract so the batched exploration engine can treat them interchangeably:
+
+``backend.run(objective_fn, mat, lens, bw, settings, keys)`` is a *pure,
+fully jittable* function over the padded axis-index space -- every operand
+may be traced, so the engine ``vmap``s it over a stacked job axis exactly
+like ``core/annealing.anneal`` and compiles ONE executable per
+(shape bucket, backend, settings).  It returns the raw triple
+
+    (best_idx [members, 5], best_val [members], trace_best [steps])
+
+where *members* is the backend's population axis (chains for SA, the
+population for GA/DE, the point count for Sobol) and ``trace_best`` is the
+population-best objective value per step (diagnostics).  The engine picks
+the argmin member, snaps it to a config and wraps it in a
+:class:`SearchResult`.  ``run`` must derive ALL of its randomness from the
+``keys`` argument -- ``settings.seed`` only feeds :meth:`SearchBackend.
+make_keys` -- or declare ``seed_free_run = False`` (see the class).
+
+Backends also expose a budget algebra (``budget`` / ``with_budget`` /
+``reseed``) so the portfolio racer can hand every backend a comparable
+slice of the evaluation budget.
+
+Registering a custom backend::
+
+    from repro.search import SearchBackend, register_backend
+
+    class MyBackend(SearchBackend):
+        name = "mine"
+        settings_cls = MySettings
+        def run(self, objective_fn, mat, lens, bw, settings, keys): ...
+
+    register_backend(MyBackend())
+    co_explore(macro, wl, 5.0, method="mine")         # now a valid method
+"""
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "SearchResult",
+    "SearchBackend",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "cfg_from_indices",
+]
+
+
+class SearchResult(typing.NamedTuple):
+    """Summary of one backend run on one job (attached to ExploreResult)."""
+
+    best_cfg: jax.Array        # [6] (mr, mc, scr, is_kb, os_kb, bw)
+    best_value: jax.Array      # scalar raw objective of the winner
+    best_per_chain: jax.Array  # [members] per-member best values
+    trace_best: jax.Array      # [steps] population-best value per step
+
+
+def cfg_from_indices(mat, idx, bw):
+    """Axis-index row -> cfg row [6]; shared by every index-space backend."""
+    vals = mat[jnp.arange(5), idx]
+    return jnp.concatenate([vals, jnp.asarray(bw)[None]])
+
+
+class SearchBackend:
+    """Base class: subclasses set ``name`` + ``settings_cls`` and implement
+    :meth:`run`; ``composite`` backends (the portfolio) are orchestrated by
+    the engine over the other backends' executables instead of running as
+    one jitted call themselves."""
+
+    name: str = ""
+    settings_cls: type = type(None)
+    #: composite backends don't own a jitted executable; the engine races
+    #: the registered primitives and re-uses THEIR compiled executables
+    composite: bool = False
+    #: contract flag: ``run()`` derives ALL randomness from the ``keys``
+    #: argument and never reads ``settings.seed`` (which only feeds
+    #: :meth:`make_keys`).  The engine then shares one compiled executable
+    #: across reseeded runs by normalizing the seed out of its cache key.
+    #: Set False in a custom backend whose ``run`` does read
+    #: ``settings.seed`` -- the engine will keep the seed in the cache key
+    #: and compile per seed instead of silently replaying the first one.
+    seed_free_run: bool = True
+
+    # ------------------------------------------------------------- #
+    # settings algebra (used by the portfolio's budget split)
+    # ------------------------------------------------------------- #
+    def default_settings(self):
+        return self.settings_cls()
+
+    def reseed(self, settings, seed: int):
+        return dataclasses.replace(settings, seed=int(seed))
+
+    def budget(self, settings) -> int:
+        """Approximate number of objective evaluations one run performs."""
+        raise NotImplementedError
+
+    def with_budget(self, settings, n_evals: int):
+        """Settings rescaled to roughly ``n_evals`` objective evaluations."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------------- #
+    # the jittable core
+    # ------------------------------------------------------------- #
+    def make_keys(self, settings, key: jax.Array | None = None) -> jax.Array:
+        """RNG block consumed by :meth:`run` (shape is backend-specific);
+        defaults derive from ``settings.seed`` so equal settings replay
+        bit-identically."""
+        if key is None:
+            key = jax.random.PRNGKey(settings.seed)
+        return key
+
+    def run(self, objective_fn, mat, lens, bw, settings, keys):
+        """Pure batched search over index space -- see the module docstring
+        for the exact contract."""
+        raise NotImplementedError
+
+
+# --------------------------------------------------------------------- #
+# registry
+# --------------------------------------------------------------------- #
+_REGISTRY: dict[str, SearchBackend] = {}
+
+
+def register_backend(backend: SearchBackend, overwrite: bool = False) -> SearchBackend:
+    """Add a backend to the process-wide registry; its ``name`` becomes a
+    valid ``method=`` for the engine, the ``co_explore`` family, service
+    submissions and the CLI's ``"search"`` job-spec key."""
+    if not backend.name:
+        raise ValueError("backend must define a non-empty name")
+    if backend.name == "exhaustive":
+        raise ValueError("'exhaustive' is reserved for the pruned sweep")
+    if backend.name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {backend.name!r} already registered")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> SearchBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown search backend {name!r}; registered: "
+            f"{sorted(_REGISTRY)} (plus 'exhaustive')") from None
+
+
+def available_backends() -> tuple[str, ...]:
+    """Registered backend names, sorted (excludes 'exhaustive')."""
+    return tuple(sorted(_REGISTRY))

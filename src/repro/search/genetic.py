@@ -1,0 +1,114 @@
+"""Tournament-selection genetic algorithm over the pruned pow-2 index space.
+
+Population members are [5] axis-index rows (the same walk space as SA);
+generations run under ``lax.scan`` so the whole search is one jitted,
+vmappable expression:
+
+* **init** -- scrambled-Sobol stratified population
+  (:func:`repro.search.sobol.sobol_index_population`);
+* **selection** -- size-``tournament`` tournaments (argmin fitness wins);
+* **crossover** -- uniform: each axis independently picks parent A or B;
+* **mutation** -- axis-index redraw: each gene resamples uniformly inside
+  its axis's true length with probability ``mutation_prob`` (the discrete
+  analogue of a jump move);
+* **elitism** -- the best ``elite`` members survive unchanged, so the
+  incumbent best can never be lost.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.search.base import SearchBackend, cfg_from_indices, register_backend
+from repro.search.sobol import sobol_index_population
+
+__all__ = ["GASettings", "GeneticBackend"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GASettings:
+    pop: int = 64
+    generations: int = 400            # ~ SA's default budget (64 x 400)
+    tournament: int = 3
+    crossover_prob: float = 0.9
+    mutation_prob: float = 0.15
+    elite: int = 2
+    seed: int = 0
+
+
+class GeneticBackend(SearchBackend):
+    name = "genetic"
+    settings_cls = GASettings
+
+    def budget(self, settings: GASettings) -> int:
+        return settings.pop * (settings.generations + 1)
+
+    def with_budget(self, settings: GASettings, n_evals: int):
+        pop = min(settings.pop, max(8, int(n_evals) // 8))
+        return dataclasses.replace(
+            settings, pop=pop,
+            generations=max(1, int(n_evals) // pop - 1),
+            elite=min(settings.elite, pop - 1))
+
+    def make_keys(self, settings: GASettings, key=None):
+        if key is None:
+            key = jax.random.PRNGKey(settings.seed)
+        return jax.random.split(key, settings.generations + 1)
+
+    def run(self, objective_fn, mat, lens, bw, settings: GASettings, keys):
+        pop_n, elite = settings.pop, settings.elite
+        evaluate = jax.vmap(
+            lambda row: objective_fn(cfg_from_indices(mat, row, bw)))
+
+        pop = sobol_index_population(pop_n, lens, keys[0])
+        fit = evaluate(pop)
+        w0 = jnp.argmin(fit)
+        best_idx, best_val = pop[w0], fit[w0]
+
+        def generation(state, k):
+            pop, fit, best_idx, best_val = state
+            k_sel, k_cx, k_mask, k_mut, k_draw = jax.random.split(k, 5)
+
+            # tournament selection of 2 parents per child
+            tsel = jax.random.randint(
+                k_sel, (2 * pop_n, settings.tournament), 0, pop_n)
+            winners = tsel[jnp.arange(2 * pop_n),
+                           jnp.argmin(fit[tsel], axis=1)]
+            pa, pb = pop[winners[:pop_n]], pop[winners[pop_n:]]
+
+            # uniform crossover (whole-child bernoulli gates the operator)
+            do_cx = jax.random.uniform(k_cx, (pop_n, 1)) < \
+                settings.crossover_prob
+            take_b = jax.random.bernoulli(k_mask, 0.5, (pop_n, 5))
+            child = jnp.where(do_cx & take_b, pb, pa)
+
+            # axis-index mutation: uniform redraw within the axis bounds
+            mutate = jax.random.bernoulli(
+                k_mut, settings.mutation_prob, (pop_n, 5))
+            redraw = jax.random.randint(
+                k_draw, (pop_n, 5), 0, 1 << 20) % lens[None, :]
+            child = jnp.where(mutate, redraw.astype(child.dtype), child)
+
+            # elitism: current best members overwrite the first rows
+            order = jnp.argsort(fit)
+            child = child.at[:elite].set(pop[order[:elite]])
+            fit = evaluate(child)
+
+            w = jnp.argmin(fit)
+            better = fit[w] < best_val
+            best_idx = jnp.where(better, child[w], best_idx)
+            best_val = jnp.where(better, fit[w], best_val)
+            return (child, fit, best_idx, best_val), best_val
+
+        (pop, fit, best_idx, best_val), trace = jax.lax.scan(
+            generation, (pop, fit, best_idx, best_val), keys[1:])
+        # pin the global best into member 0 so the engine's per-member
+        # argmin always sees it regardless of elitism settings
+        pop = pop.at[0].set(best_idx)
+        fit = fit.at[0].set(best_val)
+        return pop, fit, trace
+
+
+register_backend(GeneticBackend())

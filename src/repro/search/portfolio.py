@@ -1,0 +1,114 @@
+"""Portfolio racer: successive halving over the registered backends.
+
+No single optimizer dominates every (macro, workload, objective, budget)
+job, so the portfolio races them: every constituent backend gets an equal
+slice of the evaluation budget per rung, the per-job losers are culled
+(keep the best ``ceil(k/2)`` each rung), and whatever budget remains is
+spent on each job's winning backend.  The returned best is the min over
+*all* phases, so the portfolio can never report worse than any race run it
+performed.
+
+The portfolio is a *composite* backend: it owns no jitted executable of
+its own.  The engine orchestrates it (``_run_portfolio_batch``), batching
+each rung's surviving jobs through the constituent backends' regular
+executables -- so racing N backends still compiles exactly one executable
+per (bucket, backend, scaled settings), shared with every direct user of
+that backend.
+
+Budget split (``race_plan`` / ``final_plan``) is deterministic from the
+settings alone, and every scaled constituent gets a seed derived only from
+``(seed, backend index, rung)`` -- running a constituent standalone with a
+plan entry's settings reproduces the portfolio's race run bit-for-bit
+(what the parity/property tests assert).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.search.base import SearchBackend, get_backend, register_backend
+
+__all__ = ["PortfolioSettings", "PortfolioBackend", "race_plan",
+           "final_plan", "derived_seed"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PortfolioSettings:
+    #: constituent backends to race (must be registered, non-composite)
+    backends: tuple[str, ...] = ("sa", "genetic", "evolution", "sobol")
+    #: total objective-evaluation budget per job (~ SA's default 64 x 400)
+    total_evals: int = 25_600
+    #: fraction of the budget spent racing (the rest goes to the winner)
+    race_fraction: float = 0.5
+    rungs: int = 2
+    seed: int = 0
+
+
+def derived_seed(seed: int, backend_index: int, rung: int) -> int:
+    """Per-(backend, rung) seed; primes keep distinct slots distinct."""
+    return int(seed) + 7919 * (backend_index + 1) + 104_729 * rung
+
+
+def _validate(settings: PortfolioSettings) -> None:
+    if not settings.backends:
+        raise ValueError("portfolio needs at least one constituent backend")
+    for name in settings.backends:
+        if get_backend(name).composite:
+            raise ValueError(
+                f"portfolio constituent {name!r} is itself composite")
+
+
+def race_plan(settings: PortfolioSettings) -> list[dict]:
+    """Per-rung ``{backend name: scaled settings}``.  Each rung splits an
+    equal share of the race budget among that rung's survivor count
+    (``ceil(n / 2**rung)``), so every surviving backend gets the same
+    number of evaluations per rung regardless of which ones survived."""
+    _validate(settings)
+    n = len(settings.backends)
+    race = int(settings.total_evals * settings.race_fraction)
+    plans = []
+    for r in range(settings.rungs):
+        alive = max(1, -(-n // (2 ** r)))                # ceil(n / 2^r)
+        per_backend = max(1, race // (settings.rungs * alive))
+        rung = {}
+        for b_idx, name in enumerate(settings.backends):
+            b = get_backend(name)
+            scaled = b.with_budget(b.default_settings(), per_backend)
+            rung[name] = b.reseed(scaled, derived_seed(settings.seed, b_idx, r))
+        plans.append(rung)
+    return plans
+
+
+def final_plan(settings: PortfolioSettings) -> dict:
+    """``{backend name: settings}`` for the post-race exploitation phase
+    (the remaining budget, spent entirely on each job's winner)."""
+    _validate(settings)
+    remaining = max(
+        1, settings.total_evals
+        - int(settings.total_evals * settings.race_fraction))
+    out = {}
+    for b_idx, name in enumerate(settings.backends):
+        b = get_backend(name)
+        scaled = b.with_budget(b.default_settings(), remaining)
+        out[name] = b.reseed(
+            scaled, derived_seed(settings.seed, b_idx, settings.rungs))
+    return out
+
+
+class PortfolioBackend(SearchBackend):
+    name = "portfolio"
+    settings_cls = PortfolioSettings
+    composite = True
+
+    def budget(self, settings: PortfolioSettings) -> int:
+        return settings.total_evals
+
+    def with_budget(self, settings: PortfolioSettings, n_evals: int):
+        return dataclasses.replace(settings, total_evals=max(8, int(n_evals)))
+
+    def run(self, objective_fn, mat, lens, bw, settings, keys):
+        raise NotImplementedError(
+            "the portfolio is composite: the engine orchestrates it over "
+            "the constituent backends' executables")
+
+
+register_backend(PortfolioBackend())

@@ -1,0 +1,45 @@
+"""Simulated annealing as *just another* search backend.
+
+The paper's optimizer (``core/annealing.anneal``) pre-dates the pluggable
+subsystem; this adapter registers it under ``"sa"`` so it runs through the
+exact same engine executable path -- one compile per (bucket, backend,
+settings) -- as the population backends, and so the portfolio racer can
+race it against them.  ``SASettings`` stays the canonical settings class
+(engine construction, the service queue and old result-store keys all
+reference it).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.annealing import SASettings, anneal, make_chain_keys
+from repro.search.base import SearchBackend, register_backend
+
+__all__ = ["SimulatedAnnealingBackend", "SASettings"]
+
+
+class SimulatedAnnealingBackend(SearchBackend):
+    name = "sa"
+    settings_cls = SASettings
+
+    def budget(self, settings: SASettings) -> int:
+        return settings.n_chains * settings.n_steps
+
+    def with_budget(self, settings: SASettings, n_evals: int):
+        chains = min(settings.n_chains, max(4, int(n_evals) // 25))
+        return dataclasses.replace(
+            settings, n_chains=chains,
+            n_steps=max(1, int(n_evals) // chains))
+
+    def make_keys(self, settings: SASettings, key=None):
+        return make_chain_keys(settings, key)
+
+    def run(self, objective_fn, mat, lens, bw, settings: SASettings, keys):
+        best_idx, best_val, hists = anneal(
+            objective_fn, mat, lens, bw, settings, keys)
+        return best_idx, best_val, jnp.min(hists, axis=0)
+
+
+register_backend(SimulatedAnnealingBackend())

@@ -9,13 +9,16 @@
 :func:`repro.service.client.job_from_spec`)::
 
     [{"macro": "vanilla-dcim", "workload": "bert-large",
-      "area_budget_mm2": 5.0, "objective": "ee", "method": "exhaustive"},
+      "area_budget_mm2": 5.0, "objective": "ee", "search": "exhaustive"},
      {"macro": "tpdcim-macro", "workload": {"name": "yi-6b", "seq": 512},
-      "area_budget_mm2": 2.23, "objective": "th"}]
+      "area_budget_mm2": 2.23, "objective": "th", "search": "portfolio"}]
 
-With ``--stream`` each result line prints the moment its micro-batch
-bucket finishes (completion order); without it, results print in
-submission order once all are done.
+Each spec's ``"search"`` key picks the optimizer per job: any registered
+``repro.search`` backend ("sa", "genetic", "evolution", "sobol",
+"portfolio") or "exhaustive"; ``explore --search NAME`` overrides every
+spec in the file.  With ``--stream`` each result line prints the moment
+its micro-batch bucket finishes (completion order); without it, results
+print in submission order once all are done.
 """
 from __future__ import annotations
 
@@ -33,6 +36,18 @@ def _cmd_explore(args) -> int:
     if not isinstance(specs, list) or not specs:
         print("error: jobs file must be a non-empty JSON list",
               file=sys.stderr)
+        return 2
+    if args.search:
+        specs = [{**spec, "search": args.search} for spec in specs]
+    # validate every spec (including the --search override) up front, so
+    # a typo'd backend name fails fast with a clean error, not a traceback
+    # out of the running service
+    from repro.service import job_from_spec
+    try:
+        for spec in specs:
+            job_from_spec(spec)
+    except (KeyError, TypeError, ValueError) as exc:
+        print(f"error: bad job spec: {exc}", file=sys.stderr)
         return 2
 
     svc = ServiceClient(store=None if args.no_store else "auto")
@@ -99,6 +114,10 @@ def main(argv: list[str] | None = None) -> int:
                     help="machine-readable JSONL output")
     ex.add_argument("--no-store", action="store_true",
                     help="bypass the persistent result store")
+    ex.add_argument("--search", default=None, metavar="BACKEND",
+                    help="override every spec's search backend (sa, "
+                         "genetic, evolution, sobol, portfolio, "
+                         "exhaustive)")
     ex.set_defaults(fn=_cmd_explore)
 
     st = sub.add_parser("store", help="inspect / clear the result store")

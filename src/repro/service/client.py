@@ -18,7 +18,7 @@ import threading
 import typing
 
 from repro.core.annealing import SASettings
-from repro.core.engine import ExplorationEngine, ExploreJob
+from repro.core.engine import ExplorationEngine, ExploreJob, valid_methods
 from repro.core.ir import MatmulOp, Workload, bert_large_workload
 from repro.core.macro import get_macro
 from repro.core.pruning import DesignSpace
@@ -57,9 +57,12 @@ def job_from_spec(spec: dict) -> tuple[ExploreJob, str]:
          "area_budget_mm2": 5.0}
 
     Optional keys: ``objective`` ("ee"|"th"|"edp"), ``strategy_set``
-    ("st"|"so"), ``bw``, ``seq`` (inside workload dict), ``method``
-    ("sa"|"exhaustive"), ``space`` (axis-name -> value list), and inline
-    workloads via ``{"workload": {"name": ..., "ops": [[m,k,n,count], ...]}}``.
+    ("st"|"so"), ``bw``, ``seq`` (inside workload dict), ``search`` --
+    any registered ``repro.search`` backend ("sa", "genetic",
+    "evolution", "sobol", "portfolio", ...) or "exhaustive" (``method``
+    is the legacy spelling), ``space`` (axis-name -> value list), and
+    inline workloads via
+    ``{"workload": {"name": ..., "ops": [[m,k,n,count], ...]}}``.
     """
     space = None
     if "space" in spec:
@@ -68,6 +71,10 @@ def job_from_spec(spec: dict) -> tuple[ExploreJob, str]:
             if not v:
                 raise ValueError(f"space axis {k!r} must be non-empty")
         space = DesignSpace(**axes)
+    method = spec.get("search", spec.get("method", "sa"))
+    if method not in valid_methods():
+        raise ValueError(
+            f"unknown search {method!r}; valid: {sorted(valid_methods())}")
     job = ExploreJob(
         macro=get_macro(spec["macro"]),
         workload=_workload_from_spec(spec["workload"]),
@@ -76,8 +83,9 @@ def job_from_spec(spec: dict) -> tuple[ExploreJob, str]:
         strategy_set=spec.get("strategy_set", "st"),
         bw=int(spec.get("bw", 256)),
         space=space,
+        search_method=method,
     )
-    return job, spec.get("method", "sa")
+    return job, method
 
 
 # --------------------------------------------------------------------- #
@@ -97,15 +105,17 @@ class ServiceClient:
                                        config=config)
 
     # passthroughs --------------------------------------------------- #
-    def submit(self, job: ExploreJob, method: str = "sa",
+    def submit(self, job: ExploreJob, method: str | None = None,
                sa_settings: SASettings | None = None, priority: int = 0,
-               meta=None) -> ExploreFuture:
-        return self.queue.submit(job, method, sa_settings, priority, meta)
+               meta=None, settings=None) -> ExploreFuture:
+        return self.queue.submit(job, method, sa_settings, priority, meta,
+                                 settings=settings)
 
-    def submit_many(self, jobs, method="sa", sa_settings=None,
-                    priority=0, metas=None) -> list[ExploreFuture]:
+    def submit_many(self, jobs, method=None, sa_settings=None,
+                    priority=0, metas=None,
+                    settings=None) -> list[ExploreFuture]:
         return self.queue.submit_many(jobs, method, sa_settings, priority,
-                                      metas)
+                                      metas, settings=settings)
 
     def submit_values(self, job, candidates, priority=0, meta=None):
         return self.queue.submit_values(job, candidates, priority, meta)
@@ -122,22 +132,25 @@ class ServiceClient:
     def explore(
         self,
         jobs: typing.Sequence[ExploreJob],
-        method: str = "sa",
+        method: str | None = None,
         sa_settings: SASettings | None = None,
         stream: bool = False,
         metas: typing.Sequence | None = None,
         timeout: float | None = None,
+        settings=None,
     ):
         """Run a job list through the service.
 
         ``stream=False`` (default): blocking, returns results in
         submission order.  ``stream=True``: returns an iterator of
         ``(meta, result)`` in *completion* order -- metas default to the
-        submission index.
+        submission index.  ``method=None`` uses each job's own
+        ``search_method``.
         """
         if metas is None:
             metas = list(range(len(jobs)))
-        futures = self.submit_many(jobs, method, sa_settings, metas=metas)
+        futures = self.submit_many(jobs, method, sa_settings, metas=metas,
+                                   settings=settings)
         if stream:
             return stream_results(futures, timeout=timeout)
         return [f.result(timeout) for f in futures]

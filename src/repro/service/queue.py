@@ -34,6 +34,7 @@ from repro.core.engine import (
     default_engine,
     job_key,
 )
+from repro.search.base import get_backend
 from repro.service.store import ResultStore, default_store
 from repro.service.streams import ExploreFuture
 
@@ -122,25 +123,37 @@ class JobQueue:
     def submit(
         self,
         job: ExploreJob,
-        method: str = "sa",
+        method: str | None = None,
         sa_settings: SASettings | None = None,
         priority: int = 0,
         meta=None,
+        settings=None,
     ) -> ExploreFuture:
-        """Admit one exploration job; returns immediately with a future."""
-        if method not in ("sa", "exhaustive"):
-            raise ValueError(f"unknown method {method!r}")
-        if method != "sa":
+        """Admit one exploration job; returns immediately with a future.
+
+        ``method`` is any registered ``repro.search`` backend name or
+        ``"exhaustive"`` (``None`` uses ``job.search_method``);
+        ``settings`` carries the backend's settings object
+        (``sa_settings`` is the legacy SA spelling)."""
+        method = method or job.search_method
+        if settings is None:
+            settings = sa_settings
+        if method == "exhaustive":
             settings = None
-        else:
+        elif settings is None:
             # resolve the effective settings WITHOUT instantiating the
             # default engine (store-only submissions skip engine
             # construction and its persistent-cache setup); a
             # default-constructed engine uses SASettings() too, so the
             # canonical key matches either way
-            settings = sa_settings or (
-                self._engine.sa_settings if self._engine is not None
-                else SASettings())
+            if method == "sa":
+                settings = (
+                    self._engine.sa_settings if self._engine is not None
+                    else SASettings())
+            else:
+                settings = get_backend(method).default_settings()
+        else:
+            get_backend(method)          # raises on unknown backends
         key = job_key(job, method, settings)
         future = ExploreFuture(job, method, key, meta=meta)
         self.stats["submitted"] += 1
@@ -159,16 +172,18 @@ class JobQueue:
     def submit_many(
         self,
         jobs: typing.Sequence[ExploreJob],
-        method: str = "sa",
+        method: str | None = None,
         sa_settings: SASettings | None = None,
         priority: int = 0,
         metas: typing.Sequence | None = None,
+        settings=None,
     ) -> list[ExploreFuture]:
         metas = metas if metas is not None else [None] * len(jobs)
         if len(metas) != len(jobs):
             raise ValueError(
                 f"metas length {len(metas)} != jobs length {len(jobs)}")
-        return [self.submit(j, method, sa_settings, priority, meta=m)
+        return [self.submit(j, method, sa_settings, priority, meta=m,
+                            settings=settings)
                 for j, m in zip(jobs, metas)]
 
     def submit_values(
@@ -191,13 +206,15 @@ class JobQueue:
     def run_sync(
         self,
         jobs: typing.Sequence[ExploreJob],
-        method: str = "sa",
+        method: str | None = None,
         sa_settings: SASettings | None = None,
         timeout: float | None = None,
+        settings=None,
     ) -> list[ExploreResult]:
         """Blocking batch call with service semantics (store, dedup) --
         what the ``co_explore`` family uses under the hood."""
-        futures = self.submit_many(jobs, method, sa_settings)
+        futures = self.submit_many(jobs, method, sa_settings,
+                                   settings=settings)
         return [f.result(timeout) for f in futures]
 
     # ------------------------------------------------------------- #
@@ -297,7 +314,7 @@ class JobQueue:
                     # the engine's dedup pass skips re-hashing
                     outs = self.engine.run(
                         [e.job for e in group], method=group[0].method,
-                        sa_settings=group[0].settings,
+                        settings=group[0].settings,
                         keys=[e.key for e in group])
             except Exception as exc:              # noqa: BLE001 -- reject group
                 self._resolve_group(group, None, exc)

@@ -7,9 +7,16 @@ moved into place with ``os.replace`` so concurrent writers (parallel CI
 shards, several notebooks) can never expose a torn record.
 
 The key already folds in everything that determines the answer bit-for-bit
-(job ingredients, method, SA settings, x64 mode, and a schema version --
-see :func:`repro.core.engine.job_key`), so ``get`` is a pure content
-lookup.  Corrupt or schema-mismatched records read as misses.
+(job ingredients, search method, backend settings, x64 mode, and a schema
+version -- see :func:`repro.core.engine.job_key`), so ``get`` is a pure
+content lookup.  Corrupt or schema-mismatched records read as misses.
+
+Hygiene: records older than ``CIM_TUNER_RESULT_STORE_TTL`` seconds expire
+on read, and every ``put`` enforces ``CIM_TUNER_RESULT_STORE_MAX_MB`` by
+evicting the least-recently-*used* records first (``get`` touches a hit's
+mtime, so hot entries survive).  Both limits default to off.  Expired or
+evicted entries simply read as misses -- the caller falls back to the
+engine and the record is re-written.
 """
 from __future__ import annotations
 
@@ -79,30 +86,72 @@ def deserialize_result(rec: dict) -> ExploreResult:
     )
 
 
-class ResultStore:
-    """Content-addressed persistent cache of ExploreResults."""
+def _limit_from_env(var: str) -> float | None:
+    raw = os.environ.get(var)
+    if not raw:
+        return None
+    try:
+        val = float(raw)
+    except ValueError:
+        return None
+    return val if val > 0 else None
 
-    def __init__(self, root: str | None = None):
+
+class ResultStore:
+    """Content-addressed persistent cache of ExploreResults.
+
+    ``ttl_s`` / ``max_mb`` default to the ``CIM_TUNER_RESULT_STORE_TTL``
+    (seconds) and ``CIM_TUNER_RESULT_STORE_MAX_MB`` environment variables;
+    pass explicit numbers to override, or ``None``-producing env state to
+    run uncapped.
+    """
+
+    _ENV = object()                    # sentinel: read limits from env
+
+    def __init__(self, root: str | None = None, ttl_s=_ENV, max_mb=_ENV):
         self.root = root or os.environ.get("CIM_TUNER_RESULT_STORE") or \
             os.path.join(os.path.expanduser("~"), ".cache", "cim-tuner",
                          "result-store")
-        self.stats = {"hits": 0, "misses": 0, "puts": 0}
+        self.ttl_s = _limit_from_env("CIM_TUNER_RESULT_STORE_TTL") \
+            if ttl_s is self._ENV else ttl_s
+        max_mb = _limit_from_env("CIM_TUNER_RESULT_STORE_MAX_MB") \
+            if max_mb is self._ENV else max_mb
+        self.max_bytes = None if max_mb is None else max_mb * 1e6
+        #: running (over-)estimate of the store's byte total; a full
+        #: directory walk only happens when this crosses the cap, so puts
+        #: stay O(1) until eviction is actually needed
+        self._approx_bytes: float | None = None
+        self.stats = {"hits": 0, "misses": 0, "puts": 0,
+                      "expired": 0, "evicted": 0}
 
     # ------------------------------------------------------------- #
     def _path(self, key: str) -> str:
         return os.path.join(self.root, key[:2], f"{key}.jsonl")
 
     def get(self, key: str) -> ExploreResult | None:
+        path = self._path(key)
         try:
-            with open(self._path(key)) as f:
+            with open(path) as f:
                 rec = json.loads(f.readline())
             if rec.get("schema") != STORE_SCHEMA:
                 raise ValueError("schema mismatch")
+            if self.ttl_s is not None and \
+                    time.time() - rec.get("created_s", 0.0) > self.ttl_s:
+                self.stats["expired"] += 1
+                try:
+                    os.remove(path)
+                except OSError:                        # pragma: no cover
+                    pass
+                raise ValueError("expired")
             out = deserialize_result(rec["result"])
         except (OSError, ValueError, KeyError, TypeError):
             self.stats["misses"] += 1
             return None
         self.stats["hits"] += 1
+        try:
+            os.utime(path)             # LRU-ish: hits refresh the mtime
+        except OSError:                                # pragma: no cover
+            pass
         out.search["cache"] = "store"
         return out
 
@@ -121,9 +170,57 @@ class ResultStore:
         except OSError:                                # pragma: no cover
             return                                     # read-only FS etc.
         self.stats["puts"] += 1
+        if self.max_bytes is not None:
+            if self._approx_bytes is not None:
+                # overwrites double-count the record; the estimate only
+                # ever errs high, forcing at worst an early rescan
+                try:
+                    self._approx_bytes += os.path.getsize(path)
+                except OSError:                        # pragma: no cover
+                    self._approx_bytes = None
+            if self._approx_bytes is None or \
+                    self._approx_bytes > self.max_bytes:
+                self._enforce_cap(keep=key)
+
+    def _enforce_cap(self, keep: str | None = None) -> None:
+        """Evict least-recently-used records until under ``max_bytes``
+        (the just-written ``keep`` key is never evicted).  Re-establishes
+        the exact byte total as a side effect."""
+        entries = []                    # (mtime, size, key, path)
+        total = 0
+        for k in self.keys():
+            p = self._path(k)
+            try:
+                st = os.stat(p)
+            except OSError:                            # pragma: no cover
+                continue
+            total += st.st_size
+            entries.append((st.st_mtime, st.st_size, k, p))
+        for mtime, size, k, p in sorted(entries):
+            if total <= self.max_bytes:
+                break
+            if k == keep:
+                continue
+            try:
+                os.remove(p)
+            except OSError:                            # pragma: no cover
+                continue
+            self.stats["evicted"] += 1
+            total -= size
+        self._approx_bytes = total
 
     def __contains__(self, key: str) -> bool:
-        return os.path.exists(self._path(key))
+        """get-parity membership: a record ``get`` would reject (expired,
+        schema-mismatched, unparseable) is absent."""
+        try:
+            with open(self._path(key)) as f:
+                rec = json.loads(f.readline())
+        except (OSError, ValueError):
+            return False
+        if rec.get("schema") != STORE_SCHEMA:
+            return False
+        return self.ttl_s is None or \
+            time.time() - rec.get("created_s", 0.0) <= self.ttl_s
 
     def keys(self) -> list[str]:
         out = []
@@ -145,6 +242,7 @@ class ResultStore:
                 n += 1
             except OSError:                            # pragma: no cover
                 pass
+        self._approx_bytes = None
         return n
 
 

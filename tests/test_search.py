@@ -1,0 +1,253 @@
+"""Pluggable search-backend portfolio: parity vs exhaustive ground truth,
+registry semantics, portfolio racing guarantees, and the job-key
+regression (a warm-store SA result must never answer a GA query)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DesignSpace,
+    ExplorationEngine,
+    ExploreJob,
+    bert_large_workload,
+    co_explore,
+    job_key,
+    valid_methods,
+)
+from repro.core.macro import TPDCIM_MACRO
+from repro.search import (
+    DESettings,
+    GASettings,
+    PortfolioSettings,
+    SASettings,
+    SobolSettings,
+    available_backends,
+    get_backend,
+    race_plan,
+    register_backend,
+)
+from repro.search.sobol import SobolBackend
+
+SMALL = DesignSpace(mr=(1, 2, 3), mc=(1, 2), scr=(1, 4, 16),
+                    is_kb=(2, 16, 128), os_kb=(2, 16, 64))
+
+#: per-backend settings sized for the 162-point SMALL space (each well
+#: under a second of search once compiled)
+PARITY_SETTINGS = {
+    "sa": SASettings(n_chains=24, n_steps=120, seed=1),
+    "genetic": GASettings(pop=24, generations=40, seed=1),
+    "evolution": DESettings(pop=16, generations=50, seed=1),
+    "sobol": SobolSettings(n_points=1024, seed=1),
+    "portfolio": PortfolioSettings(total_evals=3000, seed=1),
+}
+
+
+def _job(objective="ee", method="sa"):
+    return ExploreJob(TPDCIM_MACRO, bert_large_workload(), 2.23,
+                      objective=objective, space=SMALL,
+                      search_method=method)
+
+
+# ------------------------------------------------------------------ #
+# registry
+# ------------------------------------------------------------------ #
+def test_registry_lists_all_backends():
+    names = available_backends()
+    for expected in ("sa", "genetic", "evolution", "sobol", "portfolio"):
+        assert expected in names
+    assert valid_methods() == names + ("exhaustive",)
+    with pytest.raises(ValueError, match="unknown search backend"):
+        get_backend("nope")
+    with pytest.raises(ValueError, match="unknown search backend"):
+        ExplorationEngine().run([_job()], method="nope")
+
+
+def test_custom_backend_registers_and_runs():
+    """The documented extension path: subclass, register, use as method=."""
+    class HalfSobol(SobolBackend):
+        name = "half-sobol"
+
+    register_backend(HalfSobol(), overwrite=True)
+    assert "half-sobol" in available_backends()
+    res = ExplorationEngine().run(
+        [_job()], method="half-sobol",
+        settings=SobolSettings(n_points=64))[0]
+    assert res.search["method"] == "half-sobol"
+    assert res.metrics["area_mm2"] <= 2.23 * 1.001
+
+
+# ------------------------------------------------------------------ #
+# parity: every backend reaches (near-)exhaustive quality on the small
+# space, mirroring the historical SA-vs-exhaustive test
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("method", ["genetic", "evolution", "sobol",
+                                    "portfolio"])
+def test_backend_matches_exhaustive_on_small_space(method):
+    kw = dict(macro=TPDCIM_MACRO, workload=bert_large_workload(),
+              area_budget_mm2=2.23, objective="ee", space=SMALL)
+    ex = co_explore(method="exhaustive", **kw)
+    got = co_explore(method=method, settings=PARITY_SETTINGS[method], **kw)
+    # adaptive backends must reach within 1% of the exhaustive optimum;
+    # the non-adaptive Sobol baseline gets a looser 10%
+    tol = 1.10 if method == "sobol" else 1.01
+    assert got.metrics["energy_pj"] <= ex.metrics["energy_pj"] * tol, method
+    assert got.metrics["area_mm2"] <= kw["area_budget_mm2"] * 1.001
+    assert got.search["method"] == method
+
+
+def test_backends_share_engine_executable_cache():
+    """Resubmission of any backend must hit the in-process executable
+    cache (one compile per (bucket, backend, settings))."""
+    engine = ExplorationEngine()
+    jobs = [_job("ee"), _job("th")]
+    for method in ("genetic", "evolution", "sobol"):
+        settings = PARITY_SETTINGS[method]
+        first = engine.run(jobs, method=method, settings=settings)
+        misses = engine.stats["executable_cache_misses"]
+        again = engine.run(jobs, method=method, settings=settings)
+        assert engine.stats["executable_cache_misses"] == misses, method
+        for a, b in zip(first, again):                 # deterministic replay
+            assert a.config.as_tuple() == b.config.as_tuple()
+
+
+def test_mixed_methods_in_one_batch():
+    """method=None dispatches each job by its own search_method."""
+    engine = ExplorationEngine()
+    jobs = [_job(method="sobol"), _job(method="exhaustive")]
+    outs = engine.run(jobs)
+    assert outs[0].search["method"] == "sobol"
+    assert outs[1].search["method"] == "exhaustive"
+
+
+# ------------------------------------------------------------------ #
+# portfolio racing guarantees
+# ------------------------------------------------------------------ #
+def test_portfolio_not_worse_than_any_constituent_same_seed():
+    """The racer's reported best is the min across every phase, and each
+    race run is bit-reproducible standalone (same derived seed), so the
+    portfolio can never return worse than any constituent's race run."""
+    settings = PortfolioSettings(total_evals=2000, seed=3)
+    engine = ExplorationEngine()
+    job = _job()
+    pf = engine.run([job], method="portfolio", settings=settings)[0]
+    race = pf.search["portfolio"]["race"]
+    assert set(race) == set(settings.backends)
+    assert float(pf.sa.best_value) <= min(race.values()) + 1e-9
+    assert float(pf.sa.best_value) <= pf.search["portfolio"]["final"] + 1e-9
+    # diagnostics come from the phase that produced the reported best
+    assert float(np.min(np.asarray(pf.sa.best_per_chain))) == \
+        pytest.approx(float(pf.sa.best_value), rel=1e-12)
+
+    rung0 = race_plan(settings)[0]
+    for name in settings.backends:
+        solo = engine.run([job], method=name, settings=rung0[name])[0]
+        assert float(pf.sa.best_value) <= float(solo.sa.best_value) + 1e-9, \
+            name
+        # the recorded race value IS the standalone run's best (exact
+        # replay through the same executable + derived seed)
+        assert race[name] <= float(solo.sa.best_value) + 1e-9, name
+
+
+def test_portfolio_through_service_spec():
+    """JSON spec path: {"search": "portfolio"} runs end-to-end."""
+    from repro.service import ServiceClient, job_from_spec
+
+    spec = {"macro": "tpdcim-macro", "workload": "bert-large",
+            "area_budget_mm2": 2.23, "search": "portfolio",
+            "space": {"mr": [1, 2, 3], "mc": [1, 2], "scr": [1, 4, 16],
+                      "is_kb": [2, 16, 128], "os_kb": [2, 16, 64]}}
+    job, method = job_from_spec(spec)
+    assert method == "portfolio" and job.search_method == "portfolio"
+    svc = ServiceClient(engine=ExplorationEngine(), store=None)
+    try:
+        res = svc.submit(job, method,
+                         settings=PortfolioSettings(total_evals=1500)) \
+            .result(timeout=600)
+        assert res.search["method"] == "portfolio"
+        assert res.search["portfolio"]["winner"] in \
+            PortfolioSettings().backends
+    finally:
+        svc.close()
+
+
+# ------------------------------------------------------------------ #
+# job-key regression: method + settings are part of the canonical key
+# ------------------------------------------------------------------ #
+def test_job_key_distinguishes_methods_and_settings():
+    job = _job()
+    keys = {
+        job_key(job, m, s) for m, s in [
+            ("sa", SASettings()),
+            ("sa", SASettings(seed=1)),
+            ("genetic", GASettings()),
+            ("genetic", GASettings(pop=32)),
+            ("evolution", DESettings()),
+            ("sobol", SobolSettings()),
+            ("portfolio", PortfolioSettings()),
+            ("exhaustive", None),
+        ]
+    }
+    assert len(keys) == 8, "every (method, settings) must key differently"
+    # method=None defers to the job's own search_method
+    assert job_key(job, None, SASettings()) == \
+        job_key(job, "sa", SASettings())
+    # the override spelling and the job-field spelling share a key
+    assert job_key(_job(method="genetic"), None, GASettings()) == \
+        job_key(_job(method="sa"), "genetic", GASettings())
+
+
+def test_warm_store_sa_result_never_answers_ga_query(tmp_path):
+    """Regression: an SA result persisted in the store must NOT satisfy a
+    genetic query for the same job (and vice versa)."""
+    from repro.service import JobQueue, QueueConfig, ResultStore
+
+    class CountingEngine(ExplorationEngine):
+        def __init__(self):
+            super().__init__(persistent_compile_cache=False)
+            self.run_methods: list[str] = []
+
+        def run(self, jobs, method=None, settings=None, sa_settings=None,
+                keys=None):
+            self.run_methods.append(method)
+            return super().run(jobs, method, settings, sa_settings, keys)
+
+    sa_settings = SASettings(n_chains=8, n_steps=30, seed=0)
+    ga_settings = GASettings(pop=8, generations=10, seed=0)
+    store = ResultStore(str(tmp_path))
+    eng = CountingEngine()
+    with JobQueue(engine=eng, store=store,
+                  config=QueueConfig(batch_window_s=0.0)) as q:
+        q.submit(_job(), "sa", sa_settings).result(timeout=600)
+        assert store.stats["puts"] == 1
+        res = q.submit(_job(), "genetic",
+                       settings=ga_settings).result(timeout=600)
+        assert q.stats["store_hits"] == 0, \
+            "GA query must not be served from the SA record"
+        assert res.search["method"] == "genetic"
+        assert eng.run_methods == ["sa", "genetic"]
+
+    # identical resubmission DOES hit the store, per method
+    with JobQueue(engine=CountingEngine(), store=ResultStore(str(tmp_path)),
+                  config=QueueConfig(batch_window_s=0.0)) as q2:
+        warm = q2.submit(_job(), "genetic",
+                         settings=ga_settings).result(timeout=600)
+        assert q2.stats["store_hits"] == 1
+        assert warm.search["method"] == "genetic"
+
+
+def test_sobol_population_is_stratified():
+    """The shared init-population provider must cover a small grid almost
+    completely (quasi-random, not i.i.d. uniform)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.search import sobol_index_population
+
+    lens = jnp.asarray([3, 2, 3, 3, 3], jnp.int32)
+    idx = np.asarray(sobol_index_population(
+        1024, lens, jax.random.PRNGKey(0)))
+    assert idx.min() >= 0
+    assert (idx.max(axis=0) <= np.array([2, 1, 2, 2, 2])).all()
+    cells = {tuple(row) for row in idx}
+    assert len(cells) >= 0.95 * 162          # near-complete grid coverage

@@ -1,0 +1,56 @@
+"""Hypothesis property: the portfolio racer never returns worse than its
+best constituent's result on the same seed.
+
+Every race run is bit-reproducible standalone (constituent settings +
+derived seeds come deterministically from the portfolio settings via
+``race_plan``), and the racer reports the min across all phases -- so for
+any seed/budget the portfolio's best raw objective must be <= every
+constituent's rung-0 best.  Seeds are normalized out of the engine's
+executable cache key, so the sweep re-uses one compile per (backend,
+budget) and only the RNG inputs vary.
+"""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install .[test])")
+from hypothesis import given, settings as hyp_settings, strategies as st  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    DesignSpace,
+    ExplorationEngine,
+    ExploreJob,
+    bert_large_workload,
+    get_macro,
+)
+from repro.search import PortfolioSettings, race_plan  # noqa: E402
+
+pytestmark = pytest.mark.slow      # hypothesis sweep (nightly tier)
+
+MACRO = get_macro("vanilla-dcim")
+SMALL = DesignSpace(mr=(1, 2, 3), mc=(1, 2), scr=(1, 4, 16),
+                    is_kb=(2, 16, 128), os_kb=(2, 16, 64))
+
+# module-level engine: the executable cache amortizes compiles across
+# hypothesis examples (seeds vary, shapes/budgets mostly don't)
+ENGINE = ExplorationEngine()
+
+
+@hyp_settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1_000_000),
+       total_evals=st.sampled_from([800, 1600]),
+       objective=st.sampled_from(["ee", "th"]))
+def test_portfolio_never_worse_than_best_constituent(
+        seed, total_evals, objective):
+    job = ExploreJob(MACRO, bert_large_workload(), 3.0,
+                     objective=objective, space=SMALL)
+    pf_settings = PortfolioSettings(total_evals=total_evals, seed=seed)
+    pf = ENGINE.run([job], method="portfolio", settings=pf_settings)[0]
+    pf_best = float(pf.sa.best_value)
+
+    race = pf.search["portfolio"]["race"]
+    assert pf_best <= min(race.values()) + 1e-9
+
+    rung0 = race_plan(pf_settings)[0]
+    for name in pf_settings.backends:
+        solo = ENGINE.run([job], method=name, settings=rung0[name])[0]
+        assert pf_best <= float(solo.sa.best_value) + 1e-9, (name, seed)

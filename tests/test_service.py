@@ -75,7 +75,8 @@ class CountingStubEngine:
     def bucket_key(self, job, method="sa"):
         return self._bucket_of(job, method)
 
-    def run(self, jobs, method="sa", sa_settings=None, keys=None):
+    def run(self, jobs, method="sa", settings=None, sa_settings=None,
+            keys=None):
         if self.bucket_key(jobs[0], method) in self.block_buckets:
             assert self.release.wait(30), "blocked bucket never released"
         self.runs += 1
@@ -198,7 +199,8 @@ def test_serialize_roundtrip_standalone():
 
 def test_failed_group_rejects_futures(tmp_path):
     class ExplodingEngine(CountingStubEngine):
-        def run(self, jobs, method="sa", sa_settings=None, keys=None):
+        def run(self, jobs, method="sa", settings=None, sa_settings=None,
+                keys=None):
             raise ValueError("no feasible hardware point under budget")
 
     with JobQueue(engine=ExplodingEngine(), store=None,

@@ -1,0 +1,87 @@
+"""Result-store hygiene: TTL expiry, size cap with LRU-ish eviction, and
+the env-var wiring (CIM_TUNER_RESULT_STORE_TTL / _MAX_MB).  Pure file-level
+tests -- no engine, no JAX work."""
+from __future__ import annotations
+
+import os
+import time
+
+from repro.core.engine import ExploreResult
+from repro.core.macro import TPDCIM_MACRO
+from repro.core.template import AcceleratorConfig
+from repro.service import ResultStore
+
+
+def _result(tag: str = "x") -> ExploreResult:
+    return ExploreResult(
+        config=AcceleratorConfig(1, 1, 1, 2, 2),
+        macro=TPDCIM_MACRO, workload="wl", objective="ee",
+        strategy_set="st", per_op_strategy={"op0": "IS-W-F"},
+        metrics={"tops_w": 1.0}, search={"method": "stub", "tag": tag},
+    )
+
+
+def _key(i: int) -> str:
+    return f"{i:02d}" + "ab" * 31          # 64 hex-ish chars, distinct shards
+
+
+def test_ttl_expires_records(tmp_path):
+    store = ResultStore(str(tmp_path), ttl_s=0.05, max_mb=None)
+    store.put(_key(1), _result())
+    assert _key(1) in store
+    assert store.get(_key(1)) is not None
+    time.sleep(0.08)
+    assert _key(1) not in store, "membership must be TTL-aware"
+    assert store.get(_key(1)) is None, "expired record must read as a miss"
+    assert store.stats["expired"] == 1
+    assert not os.path.exists(store._path(_key(1))), \
+        "expired record must be deleted"
+    # the caller re-computes and re-puts; the fresh record serves again
+    store.put(_key(1), _result("fresh"))
+    assert store.get(_key(1)).search["tag"] == "fresh"
+
+
+def test_size_cap_evicts_least_recently_used(tmp_path):
+    probe = ResultStore(str(tmp_path), ttl_s=None, max_mb=None)
+    probe.put(_key(0), _result())
+    rec_bytes = os.path.getsize(probe._path(_key(0)))
+    probe.clear()
+
+    # capacity for ~3 records
+    store = ResultStore(str(tmp_path), ttl_s=None,
+                        max_mb=3.5 * rec_bytes / 1e6)
+    for i in range(3):
+        store.put(_key(i), _result(str(i)))
+        time.sleep(0.02)                 # distinct mtimes
+    # touch key 0 (a hit refreshes its mtime), making key 1 the LRU
+    assert store.get(_key(0)) is not None
+    time.sleep(0.02)
+    store.put(_key(3), _result("3"))     # overflows the cap -> evict LRU
+    assert store.stats["evicted"] >= 1
+    assert store.get(_key(1)) is None, "LRU record must be evicted"
+    assert store.get(_key(0)) is not None, "recently-used record survives"
+    assert store.get(_key(3)) is not None, "just-written record survives"
+
+
+def test_limits_read_from_env(tmp_path, monkeypatch):
+    monkeypatch.setenv("CIM_TUNER_RESULT_STORE_TTL", "123.5")
+    monkeypatch.setenv("CIM_TUNER_RESULT_STORE_MAX_MB", "2")
+    store = ResultStore(str(tmp_path))
+    assert store.ttl_s == 123.5
+    assert store.max_bytes == 2e6
+    monkeypatch.setenv("CIM_TUNER_RESULT_STORE_TTL", "not-a-number")
+    monkeypatch.delenv("CIM_TUNER_RESULT_STORE_MAX_MB")
+    store = ResultStore(str(tmp_path))
+    assert store.ttl_s is None and store.max_bytes is None
+    # explicit arguments beat the environment
+    monkeypatch.setenv("CIM_TUNER_RESULT_STORE_TTL", "1")
+    store = ResultStore(str(tmp_path), ttl_s=None, max_mb=0.5)
+    assert store.ttl_s is None and store.max_bytes == 0.5e6
+
+
+def test_uncapped_store_never_evicts(tmp_path):
+    store = ResultStore(str(tmp_path), ttl_s=None, max_mb=None)
+    for i in range(5):
+        store.put(_key(i), _result(str(i)))
+    assert store.stats["evicted"] == 0
+    assert len(store.keys()) == 5
