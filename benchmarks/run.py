@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 import traceback
@@ -46,8 +47,16 @@ def main() -> None:
     ap.add_argument("--jsonl", default="results.jsonl",
                     help="machine-readable per-module results file "
                          "(trend artifact); '' disables")
+    ap.add_argument("--service-url", default=None, metavar="URL",
+                    help="route every service submission at a running "
+                         "`repro-service serve` front door (sets "
+                         "CIM_TUNER_SERVICE_URL), so benchmark shards "
+                         "share one warm engine and result store")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else None
+    if args.service_url:
+        # must land before any bench module builds the default service
+        os.environ["CIM_TUNER_SERVICE_URL"] = args.service_url
 
     records = []
     failures = 0

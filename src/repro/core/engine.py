@@ -329,6 +329,16 @@ class ExplorationEngine:
         if persistent_compile_cache:
             enable_persistent_compilation_cache()
 
+    def stats_snapshot(self) -> dict:
+        """JSON-able counter view for service introspection (``/v1/stats``):
+        the run counters plus the live executable-cache size and the active
+        persistent compile-cache directory."""
+        return {
+            **self.stats,
+            "executable_cache_size": len(self._executables),
+            "persistent_compile_cache": _persistent_cache_dir,
+        }
+
     # ------------------------------------------------------------- #
     # executable cache
     # ------------------------------------------------------------- #

@@ -14,7 +14,13 @@ Turns ``ExplorationEngine`` into an always-on exploration service:
 * ``client.py``  -- programmatic client + process-wide
   :func:`default_service`, which ``co_explore`` / ``co_explore_macros`` /
   ``pareto_explore`` use as their synchronous front door;
-* ``python -m repro.service`` -- CLI: stream result batches as they arrive.
+  ``ServiceClient(base_url=...)`` (or ``CIM_TUNER_SERVICE_URL``) switches
+  to remote mode against a running HTTP front door;
+* ``server.py``  -- ``repro-service serve``: stdlib HTTP front door (job
+  POSTs, SSE streaming, shared-store GETs, /healthz + /v1/stats) so many
+  OS processes and hosts share ONE warm engine and result store;
+* ``python -m repro.service`` -- CLI: stream result batches as they
+  arrive, serve the front door, inspect stats/store.
 
 Quickstart::
 
@@ -24,19 +30,24 @@ Quickstart::
     for fut in as_completed(futures):
         print(fut.result().summary())
 """
-from repro.service.client import (ServiceClient, default_service,
-                                  job_from_spec, reset_default_service)
-from repro.service.queue import JobQueue, QueueConfig
-from repro.service.store import (ResultStore, default_store,
-                                 deserialize_result, serialize_result)
+from repro.service.client import (RemoteQueue, ServiceClient,
+                                  default_service, job_from_spec,
+                                  job_to_spec, reset_default_service,
+                                  settings_from_spec, settings_to_spec)
+from repro.service.queue import JobQueue, QueueConfig, values_key
+from repro.service.store import (RemoteStoreTier, ResultStore,
+                                 default_store, deserialize_result,
+                                 serialize_result)
 from repro.service.streams import (ExploreFuture, as_completed,
                                    stream_pareto, stream_results)
 
 __all__ = [
-    "ServiceClient", "default_service", "reset_default_service",
-    "job_from_spec",
-    "JobQueue", "QueueConfig",
-    "ResultStore", "default_store", "serialize_result",
+    "ServiceClient", "RemoteQueue", "default_service",
+    "reset_default_service",
+    "job_from_spec", "job_to_spec", "settings_from_spec",
+    "settings_to_spec",
+    "JobQueue", "QueueConfig", "values_key",
+    "ResultStore", "RemoteStoreTier", "default_store", "serialize_result",
     "deserialize_result",
     "ExploreFuture", "as_completed", "stream_results", "stream_pareto",
 ]

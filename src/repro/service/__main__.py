@@ -2,6 +2,9 @@
 
     python -m repro.service explore jobs.json --stream
     python -m repro.service explore jobs.json --json
+    python -m repro.service explore jobs.json --url http://host:8731
+    python -m repro.service serve --host 0.0.0.0 --port 8731
+    python -m repro.service stats --url http://host:8731
     python -m repro.service store --info
     python -m repro.service store --clear
 
@@ -15,17 +18,30 @@
 
 Each spec's ``"search"`` key picks the optimizer per job: any registered
 ``repro.search`` backend ("sa", "genetic", "evolution", "sobol",
-"portfolio") or "exhaustive"; ``explore --search NAME`` overrides every
-spec in the file.  With ``--stream`` each result line prints the moment
-its micro-batch bucket finishes (completion order); without it, results
-print in submission order once all are done.
+"portfolio") or "exhaustive"; an optional ``"settings"`` dict carries the
+backend's knobs; ``explore --search NAME`` overrides every spec in the
+file.  With ``--stream`` each result line prints the moment its
+micro-batch bucket finishes (completion order); without it, results print
+in submission order once all are done.
+
+``explore``/``stats`` run against a remote ``serve`` instance when
+``--url`` (or the ``CIM_TUNER_SERVICE_URL`` environment variable) points
+at one -- CI fleets and multi-host sweeps share that server's warm engine
+executables and result store instead of each paying their own warm-up.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import signal
 import sys
+import threading
 import time
+
+
+def _resolved_url(args) -> str | None:
+    return args.url or os.environ.get("CIM_TUNER_SERVICE_URL") or None
 
 
 def _cmd_explore(args) -> int:
@@ -50,19 +66,20 @@ def _cmd_explore(args) -> int:
         print(f"error: bad job spec: {exc}", file=sys.stderr)
         return 2
 
-    svc = ServiceClient(store=None if args.no_store else "auto")
+    svc = ServiceClient(store=None if args.no_store else "auto",
+                        base_url=_resolved_url(args))
     t0 = time.perf_counter()
 
     def emit(i, result):
         dt = time.perf_counter() - t0
+        cache = result.search.get("cache")
         if args.json:
             rec = {"index": i, "elapsed_s": round(dt, 3),
-                   "source": "store" if result.search.get("cache") == "store"
-                   else "engine",
+                   "source": cache or "engine",
                    "result": serialize_result(result)}
             print(json.dumps(rec), flush=True)
         else:
-            src = " [cached]" if result.search.get("cache") == "store" else ""
+            src = f" [{cache}]" if cache else ""
             print(f"[{dt:7.2f}s] #{i} {result.summary()}{src}", flush=True)
 
     try:
@@ -77,6 +94,40 @@ def _cmd_explore(args) -> int:
     if not args.json:
         print(f"# {len(specs)} jobs in {time.perf_counter()-t0:.2f}s "
               f"(stats: {svc.stats})", flush=True)
+    return 0
+
+
+def _cmd_serve(args) -> int:
+    from repro.service.server import DSEServer, ServerConfig
+
+    cfg = ServerConfig(host=args.host, port=args.port, quiet=not args.verbose)
+    server = DSEServer(store=None if args.no_store else "auto", config=cfg)
+    server.start()
+    print(f"serving on {server.url}", flush=True)
+    if args.port_file:
+        with open(args.port_file, "w") as f:
+            f.write(str(server.port))
+    stop = threading.Event()
+    for sig in (signal.SIGINT, signal.SIGTERM):
+        signal.signal(sig, lambda *_: stop.set())
+    try:
+        while not stop.is_set():       # short waits keep signals prompt
+            stop.wait(1.0)
+    finally:
+        print("draining in-flight buckets ...", flush=True)
+        server.shutdown(drain=True)
+        print(f"stopped ({server.http_stats['requests']} requests served)",
+              flush=True)
+    return 0
+
+
+def _cmd_stats(args) -> int:
+    from repro.service import ServiceClient, default_service
+
+    url = _resolved_url(args)
+    svc = ServiceClient(base_url=url, store=None) if url \
+        else default_service()
+    print(json.dumps(svc.stats_snapshot(), indent=2))
     return 0
 
 
@@ -118,12 +169,35 @@ def main(argv: list[str] | None = None) -> int:
                     help="override every spec's search backend (sa, "
                          "genetic, evolution, sobol, portfolio, "
                          "exhaustive)")
+    ex.add_argument("--url", default=None, metavar="URL",
+                    help="submit to a running `repro-service serve` "
+                         "instance (default: $CIM_TUNER_SERVICE_URL, "
+                         "else in-process)")
     ex.set_defaults(fn=_cmd_explore)
 
-    st = sub.add_parser("store", help="inspect / clear the result store")
-    st.add_argument("--info", action="store_true", default=True)
-    st.add_argument("--clear", action="store_true")
-    st.set_defaults(fn=_cmd_store)
+    sv = sub.add_parser("serve",
+                        help="run the multi-process HTTP front door")
+    sv.add_argument("--host", default="127.0.0.1")
+    sv.add_argument("--port", type=int, default=8731,
+                    help="0 binds an ephemeral port (printed on startup)")
+    sv.add_argument("--port-file", default=None, metavar="PATH",
+                    help="write the bound port here (CI scripting)")
+    sv.add_argument("--no-store", action="store_true",
+                    help="serve without a persistent result store")
+    sv.add_argument("--verbose", action="store_true",
+                    help="per-request access logging on stderr")
+    sv.set_defaults(fn=_cmd_serve)
+
+    st = sub.add_parser("stats", help="print service counters as JSON")
+    st.add_argument("--url", default=None, metavar="URL",
+                    help="query a remote serve instance "
+                         "(default: $CIM_TUNER_SERVICE_URL)")
+    st.set_defaults(fn=_cmd_stats)
+
+    so = sub.add_parser("store", help="inspect / clear the result store")
+    so.add_argument("--info", action="store_true", default=True)
+    so.add_argument("--clear", action="store_true")
+    so.set_defaults(fn=_cmd_store)
 
     args = ap.parse_args(argv)
     return args.fn(args)

@@ -6,39 +6,96 @@ call shapes consumers actually want: blocking ``explore`` (what the
 (yields ``(meta, result)`` the moment each micro-batch bucket finishes), and
 dict-based job specs so the CLI / JSON job files share one parser.
 
+``ServiceClient(base_url=...)`` switches to **remote mode**: submissions go
+over HTTP to a ``repro-service serve`` front door (``repro.service.server``)
+instead of an in-process queue.  Jobs are shipped as the same JSON specs the
+CLI reads (:func:`job_to_spec` inlines macros/tech/ops so arbitrary
+in-memory jobs survive the wire bit-for-bit), results stream back over SSE
+in completion order, and a read-through store tier
+(:class:`~repro.service.store.RemoteStoreTier`) answers repeats from the
+local disk cache first, then the server's shared store, before ever
+submitting.
+
 :func:`default_service` is the process-wide instance the blocking wrappers
 in ``core/explorer.py`` use -- interleaved callers (tests, notebooks,
 benchmark sweeps) therefore share one queue, one engine executable cache,
-and one persistent result store.
+and one persistent result store.  When ``CIM_TUNER_SERVICE_URL`` is set it
+transparently becomes a remote client of that server, so every
+``co_explore`` / ``pareto_explore`` call in the process rides the shared
+front door with zero code changes.
 """
 from __future__ import annotations
 
 import atexit
+import dataclasses
+import json
+import os
 import threading
 import typing
+import urllib.error
+import urllib.parse
+import urllib.request
+
+import numpy as np
 
 from repro.core.annealing import SASettings
-from repro.core.engine import ExplorationEngine, ExploreJob, valid_methods
+from repro.core.calibration import DEFAULT_TECH, TechConstants
+from repro.core.engine import (
+    ExplorationEngine,
+    ExploreJob,
+    clone_result,
+    job_key,
+    valid_methods,
+)
 from repro.core.ir import MatmulOp, Workload, bert_large_workload
-from repro.core.macro import get_macro
+from repro.core.macro import MacroSpec, get_macro
 from repro.core.pruning import DesignSpace
-from repro.service.queue import JobQueue, QueueConfig
+from repro.search.base import get_backend
+from repro.service.queue import (
+    JobQueue,
+    QueueConfig,
+    _tag_job_exc,
+    resolve_settings,
+    values_key,
+)
+from repro.service.store import (
+    RemoteStoreTier,
+    ResultStore,
+    default_store,
+    deserialize_result,
+)
 from repro.service.streams import ExploreFuture, stream_results
 
-__all__ = ["ServiceClient", "default_service", "reset_default_service",
-           "job_from_spec"]
+__all__ = ["ServiceClient", "RemoteQueue", "default_service",
+           "reset_default_service", "job_from_spec", "job_to_spec",
+           "settings_from_spec", "settings_to_spec"]
+
+#: environment variable that points every default-service consumer
+#: (``co_explore`` & friends, benchmarks, the CLI) at a running
+#: ``repro-service serve`` front door
+SERVICE_URL_ENV = "CIM_TUNER_SERVICE_URL"
+
+_SPACE_AXES = ("mr", "mc", "scr", "is_kb", "os_kb")
 
 
 # --------------------------------------------------------------------- #
-# JSON job specs (CLI + programmatic)
+# JSON job specs (CLI + programmatic + the remote wire format)
 # --------------------------------------------------------------------- #
+def _op_from_spec(i: int, o) -> MatmulOp:
+    if isinstance(o, dict):
+        return MatmulOp(
+            m=int(o["m"]), k=int(o["k"]), n=int(o["n"]),
+            count=int(o.get("count", 1)),
+            weights_static=bool(o.get("weights_static", True)),
+            name=str(o.get("name", f"op{i}")))
+    return MatmulOp(m=o[0], k=o[1], n=o[2],
+                    count=o[3] if len(o) > 3 else 1,
+                    name=str(o[4]) if len(o) > 4 else f"op{i}")
+
+
 def _workload_from_spec(spec) -> Workload:
     if isinstance(spec, dict) and "ops" in spec:
-        ops = tuple(
-            MatmulOp(m=o[0], k=o[1], n=o[2],
-                     count=o[3] if len(o) > 3 else 1,
-                     name=f"op{i}")
-            for i, o in enumerate(spec["ops"]))
+        ops = tuple(_op_from_spec(i, o) for i, o in enumerate(spec["ops"]))
         return Workload(spec.get("name", "custom"), ops)
     name = spec["name"] if isinstance(spec, dict) else str(spec)
     seq = spec.get("seq", 512) if isinstance(spec, dict) else 512
@@ -60,9 +117,13 @@ def job_from_spec(spec: dict) -> tuple[ExploreJob, str]:
     ("st"|"so"), ``bw``, ``seq`` (inside workload dict), ``search`` --
     any registered ``repro.search`` backend ("sa", "genetic",
     "evolution", "sobol", "portfolio", ...) or "exhaustive" (``method``
-    is the legacy spelling), ``space`` (axis-name -> value list), and
-    inline workloads via
-    ``{"workload": {"name": ..., "ops": [[m,k,n,count], ...]}}``.
+    is the legacy spelling), ``settings`` (backend settings fields as a
+    dict), ``space`` (axis-name -> value list), ``merge_ops``, inline
+    workloads via ``{"workload": {"name": ..., "ops": [[m,k,n,count],
+    ...]}}`` (ops may also be field dicts), inline macros via
+    ``{"macro": {<MacroSpec fields>}}``, and ``tech`` (TechConstants
+    fields) -- the inline forms are what the remote client emits so any
+    in-memory job round-trips the wire with its canonical key intact.
     """
     space = None
     if "space" in spec:
@@ -75,34 +136,405 @@ def job_from_spec(spec: dict) -> tuple[ExploreJob, str]:
     if method not in valid_methods():
         raise ValueError(
             f"unknown search {method!r}; valid: {sorted(valid_methods())}")
+    settings_from_spec(method, spec.get("settings"))   # raises on bad fields
+    macro = spec["macro"]
+    macro = MacroSpec(**macro) if isinstance(macro, dict) else \
+        get_macro(macro)
+    tech = TechConstants(**spec["tech"]) if "tech" in spec else DEFAULT_TECH
     job = ExploreJob(
-        macro=get_macro(spec["macro"]),
+        macro=macro,
         workload=_workload_from_spec(spec["workload"]),
         area_budget_mm2=float(spec["area_budget_mm2"]),
         objective=spec.get("objective", "ee"),
         strategy_set=spec.get("strategy_set", "st"),
         bw=int(spec.get("bw", 256)),
+        tech=tech,
         space=space,
+        merge_ops=bool(spec.get("merge_ops", True)),
         search_method=method,
     )
     return job, method
+
+
+def job_to_spec(job: ExploreJob, method: str | None = None) -> dict:
+    """Inverse of :func:`job_from_spec` for arbitrary in-memory jobs (the
+    remote client's wire format).  Macro and tech constants are inlined as
+    full dataclass dicts and every op keeps its name, so
+    :func:`repro.core.engine.job_key` of the round-tripped job matches the
+    original bit-for-bit -- cross-host store sharing depends on it."""
+    space = job.design_space()
+    return {
+        "macro": dataclasses.asdict(job.macro),
+        "workload": {
+            "name": job.workload.name,
+            "ops": [dataclasses.asdict(op) for op in job.workload.ops],
+        },
+        "area_budget_mm2": job.area_budget_mm2,
+        "objective": job.objective,
+        "strategy_set": job.strategy_set,
+        "bw": job.bw,
+        "tech": dataclasses.asdict(job.tech),
+        "space": {k: list(v) for k, v in zip(_SPACE_AXES, space.axes())},
+        "merge_ops": job.merge_ops,
+        "search": method or job.search_method,
+    }
+
+
+def settings_to_spec(settings) -> dict | None:
+    """Backend settings dataclass -> JSON-able field dict (``None`` stays
+    ``None`` -- exhaustive / server-side defaults)."""
+    return None if settings is None else dataclasses.asdict(settings)
+
+
+def settings_from_spec(method: str, d: dict | None):
+    """Field dict -> the backend's settings dataclass (lists become tuples
+    so the reconstructed object is hashable for the executable cache).
+    ``None`` means "use the backend's defaults server-side"."""
+    if d is None or method == "exhaustive":
+        return None
+    cls = get_backend(method).settings_cls
+    names = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(d) - names
+    if unknown:
+        raise ValueError(
+            f"unknown {cls.__name__} fields {sorted(unknown)}; "
+            f"valid: {sorted(names)}")
+    return cls(**{k: tuple(v) if isinstance(v, list) else v
+                  for k, v in d.items()})
+
+
+# --------------------------------------------------------------------- #
+# remote mode: HTTP client of repro.service.server
+# --------------------------------------------------------------------- #
+def _read_sse(resp) -> typing.Iterator[tuple[str | None, dict]]:
+    """Minimal SSE reader: yields ``(event, parsed-json-data)`` records."""
+    event: str | None = None
+    data: list[str] = []
+    for raw in resp:
+        line = raw.decode("utf-8").rstrip("\r\n")
+        if not line:
+            if data:
+                yield event, json.loads("".join(data))
+            event, data = None, []
+        elif line.startswith(":"):
+            continue                                   # keep-alive ping
+        elif line.startswith("event:"):
+            event = line[len("event:"):].strip()
+        elif line.startswith("data:"):
+            data.append(line[len("data:"):].strip())
+
+
+class RemoteQueue:
+    """Drop-in ``JobQueue`` replacement that talks to a ``repro-service
+    serve`` front door over HTTP.
+
+    Admission tiers mirror the local queue: **local store -> remote store
+    (read-through GET) -> POST /v1/jobs**.  Posted jobs resolve through one
+    ``GET /v1/stream`` SSE connection per submission batch, so futures
+    complete in the server's per-bucket completion order exactly like
+    in-process callers.  Engine results arriving over the wire are written
+    into the local store tier, so the next identical query on this host is
+    answered without any network traffic at all.
+
+    Batches larger than :attr:`REMOTE_PROBE_MAX_JOBS` skip the per-job
+    remote GET (each cold probe is a full round-trip) and go local-tier ->
+    POST directly; the server still answers warm keys inline from the
+    shared store at admission, so nothing is recomputed either way.
+    """
+
+    #: largest submission batch that still probes the remote store tier
+    #: per job before POSTing
+    REMOTE_PROBE_MAX_JOBS = 4
+
+    def __init__(
+        self,
+        base_url: str,
+        store: ResultStore | None | str = "auto",
+        timeout_s: float = 600.0,
+    ):
+        if "://" not in base_url:
+            base_url = "http://" + base_url
+        self.base_url = base_url.rstrip("/")
+        local = default_store() if store == "auto" else store
+        self.store = RemoteStoreTier(self.base_url, local=local)
+        self.timeout_s = float(timeout_s)
+        self.stats = {"submitted": 0, "store_hits": 0, "remote_store_hits": 0,
+                      "posted": 0, "completed": 0, "failed": 0}
+        self._lock = threading.Lock()
+        self._streamers: list[threading.Thread] = []
+        self._closed = False
+
+    def _bump(self, counter: str) -> None:
+        """Locked counter increment (submissions and streamer threads
+        mutate the same stats dict concurrently)."""
+        with self._lock:
+            self.stats[counter] += 1
+
+    # ------------------------------------------------------------- #
+    # submission API (JobQueue-compatible surface)
+    # ------------------------------------------------------------- #
+    def submit(self, job: ExploreJob, method: str | None = None,
+               sa_settings: SASettings | None = None, priority: int = 0,
+               meta=None, settings=None) -> ExploreFuture:
+        return self.submit_many([job], method, sa_settings, priority,
+                                metas=[meta], settings=settings)[0]
+
+    def submit_many(
+        self,
+        jobs: typing.Sequence[ExploreJob],
+        method: str | None = None,
+        sa_settings: SASettings | None = None,
+        priority: int = 0,
+        metas: typing.Sequence | None = None,
+        settings=None,
+    ) -> list[ExploreFuture]:
+        metas = metas if metas is not None else [None] * len(jobs)
+        if len(metas) != len(jobs):
+            raise ValueError(
+                f"metas length {len(metas)} != jobs length {len(jobs)}")
+        if self._closed:
+            raise RuntimeError("remote service client is closed")
+        futures: list[ExploreFuture] = []
+        post_specs: list[dict] = []
+        post_futs: list[ExploreFuture] = []
+        # the read-through chain (local -> remote GET -> submit) costs one
+        # synchronous round-trip per COLD job; past a few jobs the batched
+        # POST is strictly cheaper, because the server answers warm keys
+        # inline from the same store at admission anyway
+        probe_remote = len(jobs) <= self.REMOTE_PROBE_MAX_JOBS
+        for job, meta in zip(jobs, metas):
+            m = method or job.search_method
+            eff = settings if settings is not None else sa_settings
+            eff = resolve_settings(m, eff)
+            key = job_key(job, m, eff)
+            fut = ExploreFuture(job, m, key, meta=meta)
+            futures.append(fut)
+            self._bump("submitted")
+            cached = self.store.get(key) if probe_remote else (
+                self.store.local.get(key)
+                if self.store.local is not None else None)
+            if cached is not None:
+                tier = cached.search.get("cache")
+                self._bump("remote_store_hits" if tier == "remote-store"
+                           else "store_hits")
+                fut._finish(cached, source="store")
+                continue
+            spec = job_to_spec(job, m)
+            if eff is not None:
+                spec["settings"] = settings_to_spec(eff)
+            if priority:
+                spec["priority"] = int(priority)
+            post_specs.append(spec)
+            post_futs.append(fut)
+        if post_specs:
+            self._post_jobs(post_specs, post_futs)
+        return futures
+
+    def submit_values(self, job: ExploreJob, candidates, priority: int = 0,
+                      meta=None) -> ExploreFuture:
+        """Remote candidate sweep (the Pareto path); resolves to the ``[C]``
+        objective-value array computed server-side."""
+        if self._closed:
+            raise RuntimeError("remote service client is closed")
+        rows = np.asarray(candidates, dtype=np.float64)
+        fut = ExploreFuture(job, "values", values_key(job, rows), meta=meta)
+        self._bump("submitted")
+        spec = job_to_spec(job, "exhaustive")
+        spec["candidates"] = rows.tolist()
+        if priority:
+            spec["priority"] = int(priority)
+        self._post_jobs([spec], [fut])
+        return fut
+
+    def run_sync(self, jobs, method=None, sa_settings=None,
+                 timeout: float | None = None, settings=None):
+        futures = self.submit_many(jobs, method, sa_settings,
+                                   settings=settings)
+        return [f.result(timeout) for f in futures]
+
+    # ------------------------------------------------------------- #
+    # introspection / lifecycle
+    # ------------------------------------------------------------- #
+    def depth(self) -> dict:
+        with self._lock:
+            live = sum(t.is_alive() for t in self._streamers)
+        return {"pending": 0, "inflight": live}
+
+    def stats_snapshot(self) -> dict:
+        """Server-side ``/v1/stats`` merged with this client's counters."""
+        snap = self._get_json("/v1/stats")
+        snap["client"] = {**self.stats, "store": dict(self.store.stats)}
+        return snap
+
+    def close(self, timeout: float | None = 10.0) -> None:
+        self._closed = True
+        with self._lock:
+            streamers = list(self._streamers)
+        for t in streamers:
+            t.join(timeout)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ------------------------------------------------------------- #
+    # wire internals
+    # ------------------------------------------------------------- #
+    def _get_json(self, path: str) -> dict:
+        with urllib.request.urlopen(self.base_url + path,
+                                    timeout=30.0) as resp:
+            return json.loads(resp.read().decode("utf-8"))
+
+    def _post_jobs(self, specs: list[dict],
+                   futures: list[ExploreFuture]) -> None:
+        req = urllib.request.Request(
+            self.base_url + "/v1/jobs",
+            data=json.dumps(specs).encode("utf-8"),
+            headers={"Content-Type": "application/json"},
+            method="POST")
+        try:
+            with urllib.request.urlopen(req, timeout=60.0) as resp:
+                out = json.loads(resp.read().decode("utf-8"))
+            states = out["jobs"]
+            if len(states) != len(futures):
+                raise ValueError(
+                    f"server answered {len(states)} states for "
+                    f"{len(futures)} jobs")
+        except Exception as exc:                       # noqa: BLE001
+            err = self._wire_error(exc)
+            for fut in futures:
+                self._fail(fut, err)
+            return
+        with self._lock:
+            self.stats["posted"] += len(specs)
+        pending: dict[str, list[ExploreFuture]] = {}
+        for state, fut in zip(states, futures):
+            if state.get("status") in ("done", "failed"):
+                self._resolve_safe(fut, state)
+            else:
+                pending.setdefault(state["key"], []).append(fut)
+        if pending:
+            t = threading.Thread(target=self._stream_worker, args=(pending,),
+                                 name="cim-tuner-remote-stream", daemon=True)
+            with self._lock:
+                # prune finished streamers so a long-lived client doesn't
+                # accumulate one dead Thread per submission batch
+                self._streamers = [x for x in self._streamers
+                                   if x.is_alive()]
+                self._streamers.append(t)
+            t.start()
+
+    def _stream_worker(self, pending: dict[str, list[ExploreFuture]]) -> None:
+        query = urllib.parse.urlencode(
+            {"keys": ",".join(pending), "timeout": f"{self.timeout_s:g}"})
+        url = f"{self.base_url}/v1/stream?{query}"
+        err: BaseException | None = None
+        try:
+            with urllib.request.urlopen(url, timeout=120.0) as resp:
+                for event, obj in _read_sse(resp):
+                    if event == "result":
+                        for i, fut in enumerate(pending.pop(obj["key"], ())):
+                            self._resolve_safe(fut, obj, fan_out=i > 0)
+                    elif event == "end":
+                        break
+                    if not pending:
+                        break
+        except Exception as exc:                       # noqa: BLE001
+            err = self._wire_error(exc)
+        if pending:
+            # the stream ended (server timeout event, clean EOF, or wire
+            # error) with futures unresolved -- fail them rather than
+            # leaving callers blocked forever
+            if err is None:
+                err = TimeoutError(
+                    f"DSE server {self.base_url} stream ended with "
+                    f"{len(pending)} job(s) unresolved")
+            for futs in pending.values():
+                for fut in futs:
+                    self._fail(fut, err)
+
+    def _resolve_safe(self, fut: ExploreFuture, state: dict,
+                      fan_out: bool = False) -> None:
+        """A malformed/incompatible server payload must FAIL the future,
+        never abandon it (the caller may be blocked with timeout=None)."""
+        try:
+            self._resolve(fut, state, fan_out=fan_out)
+        except Exception as exc:                       # noqa: BLE001
+            self._fail(fut, ValueError(
+                f"undecodable server response for job: {exc!r}"))
+
+    def _resolve(self, fut: ExploreFuture, state: dict,
+                 fan_out: bool = False) -> None:
+        status = state.get("status")
+        if status == "failed":
+            exc: BaseException = RuntimeError(
+                f"remote job failed ({state.get('error_type', 'Error')}): "
+                f"{state.get('error', 'unknown error')}")
+            self._fail(fut, exc)
+            return
+        source = state.get("source") or "engine"
+        if "values" in state:
+            fut._finish(np.asarray(state["values"], dtype=np.float64),
+                        source=source)
+        else:
+            result = deserialize_result(state["result"])
+            result.search["remote"] = True
+            if fan_out:
+                result = clone_result(result)
+            # read-through: engine answers computed server-side become
+            # local-tier records, so this host's next identical query
+            # never touches the network
+            self.store.put(fut.key, result)
+            fut._finish(result, source=source)
+        self._bump("completed")
+
+    def _fail(self, fut: ExploreFuture, exc: BaseException) -> None:
+        # per-future copy tagged with ITS key (one wire error can fail a
+        # whole batch; sharing the object would stamp every future with
+        # the first one's job_key)
+        self._bump("failed")
+        fut._finish(exc=_tag_job_exc(exc, fut.key), source="remote")
+
+    def _wire_error(self, exc: Exception) -> BaseException:
+        if isinstance(exc, urllib.error.HTTPError):
+            try:
+                detail = exc.read().decode("utf-8", "replace")[:500]
+            except Exception:                          # noqa: BLE001
+                detail = ""
+            return ConnectionError(
+                f"DSE server {self.base_url} answered HTTP {exc.code}: "
+                f"{detail}")
+        return ConnectionError(
+            f"DSE server {self.base_url} unreachable: {exc!r}")
 
 
 # --------------------------------------------------------------------- #
 # the client
 # --------------------------------------------------------------------- #
 class ServiceClient:
-    """Convenience facade over one :class:`JobQueue`."""
+    """Convenience facade over one :class:`JobQueue` (in-process) or one
+    :class:`RemoteQueue` (``base_url=`` / ``CIM_TUNER_SERVICE_URL``)."""
 
     def __init__(
         self,
-        queue: JobQueue | None = None,
+        queue: JobQueue | RemoteQueue | None = None,
         engine: ExplorationEngine | None = None,
         store="auto",
         config: QueueConfig = QueueConfig(),
+        base_url: str | None = None,
     ):
-        self.queue = queue or JobQueue(engine=engine, store=store,
-                                       config=config)
+        if queue is not None:
+            self.queue: JobQueue | RemoteQueue = queue
+        elif base_url:
+            self.queue = RemoteQueue(base_url, store=store)
+        else:
+            self.queue = JobQueue(engine=engine, store=store, config=config)
+
+    @property
+    def remote(self) -> bool:
+        return isinstance(self.queue, RemoteQueue)
 
     # passthroughs --------------------------------------------------- #
     def submit(self, job: ExploreJob, method: str | None = None,
@@ -127,6 +559,11 @@ class ServiceClient:
     @property
     def store(self):
         return self.queue.store
+
+    def stats_snapshot(self) -> dict:
+        """Full counter view: the server's ``/v1/stats`` in remote mode,
+        the local queue/store/engine snapshot otherwise."""
+        return self.queue.stats_snapshot()
 
     # blocking / streaming ------------------------------------------- #
     def explore(
@@ -157,11 +594,31 @@ class ServiceClient:
 
     def explore_specs(self, specs: typing.Sequence[dict],
                       stream: bool = False, timeout: float | None = None):
-        """Dict-spec variant (the CLI path); method comes from each spec."""
-        futures = []
-        for i, spec in enumerate(specs):
-            job, method = job_from_spec(spec)
-            futures.append(self.submit(job, method, meta=i))
+        """Dict-spec variant (the CLI path); method and optional backend
+        settings come from each spec.  Specs are grouped into as few
+        ``submit_many`` batches as their settings allow, so a remote
+        client ships one POST + one SSE stream per group (not per spec)
+        and the server stacks the whole group into shared micro-batch
+        buckets."""
+        parsed = [job_from_spec(spec) for spec in specs]
+        settings = [settings_from_spec(m, spec.get("settings"))
+                    for (_, m), spec in zip(parsed, specs)]
+        futures: list = [None] * len(specs)
+        # jobs without explicit settings share one batch (each runs its
+        # own search_method); explicit settings batch per (method, value)
+        groups: dict = {}
+        for i, ((job, method), s) in enumerate(zip(parsed, settings)):
+            gk = None if s is None else \
+                (method, json.dumps(settings_to_spec(s), sort_keys=True))
+            groups.setdefault(gk, []).append(i)
+        for gk, idxs in groups.items():
+            batch = self.submit_many(
+                [parsed[i][0] for i in idxs],
+                method=None if gk is None else gk[0],
+                metas=list(idxs),
+                settings=None if gk is None else settings[idxs[0]])
+            for i, fut in zip(idxs, batch):
+                futures[i] = fut
         if stream:
             return stream_results(futures, timeout=timeout)
         return [f.result(timeout) for f in futures]
@@ -179,11 +636,16 @@ _default_lock = threading.Lock()
 
 def default_service() -> ServiceClient:
     """The shared always-on service (lazy; worker thread starts on first
-    submission, drained at interpreter exit)."""
+    submission, drained at interpreter exit).  With ``CIM_TUNER_SERVICE_URL``
+    set this is a remote client of that front door instead of an in-process
+    queue -- every blocking wrapper in the process transparently shares the
+    fleet-wide engine and store."""
     global _default_service
     with _default_lock:
         if _default_service is None:
-            _default_service = ServiceClient()
+            url = os.environ.get(SERVICE_URL_ENV)
+            _default_service = ServiceClient(base_url=url) if url \
+                else ServiceClient()
             atexit.register(_shutdown_default)
         return _default_service
 
@@ -197,5 +659,5 @@ def _shutdown_default() -> None:
 
 
 def reset_default_service() -> None:
-    """Tear down the shared service (tests / store re-pointing)."""
+    """Tear down the shared service (tests / store or URL re-pointing)."""
     _shutdown_default()

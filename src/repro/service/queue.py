@@ -38,7 +38,7 @@ from repro.search.base import get_backend
 from repro.service.store import ResultStore, default_store
 from repro.service.streams import ExploreFuture
 
-__all__ = ["QueueConfig", "JobQueue"]
+__all__ = ["QueueConfig", "JobQueue", "values_key", "resolve_settings"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,12 +70,50 @@ class _Entry:
         return (-self.priority, self.seq)
 
 
-def _values_key(job: ExploreJob, rows: np.ndarray) -> str:
+def values_key(job: ExploreJob, rows: np.ndarray) -> str:
+    """Canonical key of a candidate-sweep submission (job identity plus the
+    exact candidate rows); shared by the local queue and the remote client
+    so both sides address the same in-flight future."""
     base = job_key(job, "exhaustive", None)
     h = hashlib.sha256()
     h.update(base.encode())
     h.update(np.ascontiguousarray(rows, dtype=np.float64).tobytes())
     return "values-" + h.hexdigest()
+
+
+_values_key = values_key                       # pre-PR-4 private spelling
+
+
+def resolve_settings(method: str, settings=None, engine=None):
+    """The effective backend settings a submission runs with when the
+    caller supplies none -- mirrored by the remote client so client-side
+    ``job_key`` computation matches what the server's queue will use.
+    Raises on unknown backend names."""
+    if method == "exhaustive":
+        return None
+    if settings is not None:
+        get_backend(method)              # raises on unknown backends
+        return settings
+    if method == "sa":
+        return engine.sa_settings if engine is not None else SASettings()
+    return get_backend(method).default_settings()
+
+
+def _tag_job_exc(exc: BaseException, key: str) -> BaseException:
+    """Per-future copy of a dispatch failure, carrying the originating
+    ``job_key`` both in the message and as a ``.job_key`` attribute (one
+    engine error fails a whole bucket; every caller must still be able to
+    tell WHICH of its submissions died)."""
+    note = f"[job {key[:16]}] "
+    if str(exc).startswith(note):
+        return exc
+    try:
+        tagged = type(exc)(f"{note}{exc}")
+    except Exception:                    # noqa: BLE001 -- exotic signatures
+        tagged = RuntimeError(f"{note}{exc!r}")
+    tagged.job_key = key
+    tagged.__cause__ = exc
+    return tagged
 
 
 class JobQueue:
@@ -138,30 +176,23 @@ class JobQueue:
         method = method or job.search_method
         if settings is None:
             settings = sa_settings
-        if method == "exhaustive":
-            settings = None
-        elif settings is None:
-            # resolve the effective settings WITHOUT instantiating the
-            # default engine (store-only submissions skip engine
-            # construction and its persistent-cache setup); a
-            # default-constructed engine uses SASettings() too, so the
-            # canonical key matches either way
-            if method == "sa":
-                settings = (
-                    self._engine.sa_settings if self._engine is not None
-                    else SASettings())
-            else:
-                settings = get_backend(method).default_settings()
-        else:
-            get_backend(method)          # raises on unknown backends
+        # resolve the effective settings WITHOUT instantiating the default
+        # engine (store-only submissions skip engine construction and its
+        # persistent-cache setup); a default-constructed engine uses
+        # SASettings() too, so the canonical key matches either way
+        settings = resolve_settings(method, settings, engine=self._engine)
         key = job_key(job, method, settings)
         future = ExploreFuture(job, method, key, meta=meta)
-        self.stats["submitted"] += 1
+        # submissions arrive from concurrent threads (the HTTP front
+        # door); counter updates must be locked or increments get lost
+        with self._lock:
+            self.stats["submitted"] += 1
 
         if self.store is not None:
             cached = self.store.get(key)
             if cached is not None:
-                self.stats["store_hits"] += 1
+                with self._lock:
+                    self.stats["store_hits"] += 1
                 future._finish(cached, source="store")
                 return future
 
@@ -196,9 +227,10 @@ class JobQueue:
         """Admit an explicit candidate sweep (the Pareto path); the future
         resolves to the ``[C]`` objective-value array."""
         rows = np.asarray(candidates, dtype=np.float64)
-        key = _values_key(job, rows)
+        key = values_key(job, rows)
         future = ExploreFuture(job, "values", key, meta=meta)
-        self.stats["submitted"] += 1
+        with self._lock:
+            self.stats["submitted"] += 1
         self._enqueue("values", key, job, "values", None, rows,
                       priority, future)
         return future
@@ -216,6 +248,27 @@ class JobQueue:
         futures = self.submit_many(jobs, method, sa_settings,
                                    settings=settings)
         return [f.result(timeout) for f in futures]
+
+    # ------------------------------------------------------------- #
+    # introspection (the HTTP front door's /v1/stats)
+    # ------------------------------------------------------------- #
+    def depth(self) -> dict:
+        """Instantaneous queue depth: submissions still waiting for a
+        micro-batch plus keys currently being evaluated."""
+        with self._lock:
+            return {"pending": len(self._pending),
+                    "inflight": len(self._inflight)}
+
+    def stats_snapshot(self) -> dict:
+        """One JSON-able view of queue + store + engine counters (engine
+        stats appear only once an engine was actually instantiated)."""
+        out: dict = {"queue": {**self.stats, **self.depth()}}
+        out["store"] = dict(self.store.stats) \
+            if self.store is not None else None
+        eng = self._engine
+        snap = getattr(eng, "stats_snapshot", None)
+        out["engine"] = snap() if callable(snap) else None
+        return out
 
     # ------------------------------------------------------------- #
     # lifecycle
@@ -335,8 +388,12 @@ class JobQueue:
                 futures = list(e.futures)
             if exc is not None:
                 self.stats["failed"] += 1
+                # surface the failure into every affected future, tagged
+                # with ITS canonical key -- a bucket-wide engine error must
+                # stay attributable per submission, not merely logged
+                err = _tag_job_exc(exc, e.key)
                 for f in futures:
-                    f._finish(exc=exc, source="engine")
+                    f._finish(exc=err, source="engine")
                 continue
             self.stats["completed"] += 1
             for j, f in enumerate(futures):

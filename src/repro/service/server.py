@@ -1,0 +1,546 @@
+"""Multi-process HTTP front door of the async DSE service.
+
+One ``repro-service serve`` process owns the batched exploration engine,
+the micro-batching job queue and the persistent result store; any number of
+client processes -- CI shards, benchmark sweeps, notebooks on other hosts --
+submit over plain HTTP and share its warm executables and results.  Stdlib
+only (``http.server.ThreadingHTTPServer``): no new dependencies.
+
+Endpoints
+---------
+
+``POST /v1/jobs``
+    Body: one JSON job spec or a list (the exact schema the CLI reads --
+    see :func:`repro.service.client.job_from_spec`, including ``"search"``
+    and optional ``"settings"``; a spec with ``"candidates": [[...], ...]``
+    runs the Pareto candidate-sweep path).  Specs are validated up front:
+    any bad record fails the whole request with 400 before anything is
+    admitted.  Returns one state record per spec (canonical ``key``,
+    ``status``, and the inline result for store/dedup answers);
+    ``?wait=SECONDS`` long-polls until done.
+``GET /v1/jobs/<key>``
+    Status/result of one submission (``?wait=SECONDS`` long-polls).
+    Falls back to the persistent store for keys from previous runs.
+``GET /v1/stream?keys=k1,k2,...``
+    Server-sent events: one ``result`` event per key the moment its
+    micro-batch bucket finishes -- completion order, mirroring
+    :func:`repro.service.streams.as_completed` -- then one ``end`` event.
+    Comment pings keep idle connections alive.
+``GET /v1/pareto?macro=...&workloads=a,b&area_budget_mm2=...``
+    Streams per-workload EE/Th Pareto frontiers as SSE events
+    (server-side :func:`repro.service.streams.stream_pareto`).
+``GET /v1/store/<key>``
+    Raw serialized record from the server's result store -- the remote
+    tier of :class:`repro.service.store.RemoteStoreTier` reads this; the
+    server is the only writer of the shared store.
+``GET /healthz`` / ``GET /v1/stats``
+    Liveness; queue depth, dedup/store hit counters, engine executable
+    -cache size, HTTP counters.
+
+Graceful shutdown (``DSEServer.shutdown`` / SIGTERM in the CLI) stops
+accepting connections, then drains in-flight micro-batch buckets through
+``JobQueue.close`` so accepted work still lands in the store.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import queue as _queue
+import threading
+import time
+import typing
+import urllib.parse
+from collections import OrderedDict
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+import numpy as np
+
+from repro.core.engine import ExplorationEngine, ExploreResult
+from repro.service.client import (
+    ServiceClient,
+    job_from_spec,
+    settings_from_spec,
+)
+from repro.service.store import serialize_result
+from repro.service.streams import ExploreFuture, stream_pareto
+
+__all__ = ["ServerConfig", "DSEServer", "serve"]
+
+_SPEC_ERRORS = (KeyError, TypeError, ValueError)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    """Front-door knobs (all orthogonal to the queue's own config)."""
+
+    host: str = "127.0.0.1"
+    #: 0 binds an ephemeral port (read it back from ``DSEServer.port``)
+    port: int = 0
+    #: reject request bodies larger than this (one giant candidate sweep
+    #: is ~a few MB; 64 MB is far beyond any legitimate submission)
+    max_body_bytes: int = 64 * 1024 * 1024
+    #: completed futures kept addressable for /v1/jobs + /v1/stream;
+    #: evicted explore results remain reachable through the store
+    registry_cap: int = 4096
+    #: SSE keep-alive comment interval
+    stream_ping_s: float = 15.0
+    #: cap on ?wait= long-polling
+    max_wait_s: float = 600.0
+    #: silence per-request stderr logging
+    quiet: bool = True
+
+
+class DSEServer:
+    """The always-on multi-process front door over one ServiceClient."""
+
+    def __init__(
+        self,
+        client: ServiceClient | None = None,
+        engine: ExplorationEngine | None = None,
+        store: typing.Any = "auto",
+        config: ServerConfig = ServerConfig(),
+    ):
+        self.client = client or ServiceClient(engine=engine, store=store)
+        if self.client.remote:
+            raise ValueError("DSEServer needs an in-process ServiceClient")
+        self.config = config
+        self.http_stats = {
+            "requests": 0, "bad_requests": 0, "errors": 0,
+            "jobs_posted": 0, "values_posted": 0, "store_get_hits": 0,
+            "store_get_misses": 0, "streams": 0,
+        }
+        self._registry: OrderedDict[str, ExploreFuture] = OrderedDict()
+        self._reg_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self._started_s = time.time()
+        self._httpd = ThreadingHTTPServer(
+            (config.host, config.port), _Handler)
+        self._httpd.dse = self                         # type: ignore[attr-defined]
+        self._thread: threading.Thread | None = None
+        self._shut = False
+
+    # ------------------------------------------------------------- #
+    # lifecycle
+    # ------------------------------------------------------------- #
+    @property
+    def host(self) -> str:
+        return self._httpd.server_address[0]
+
+    @property
+    def port(self) -> int:
+        return self._httpd.server_address[1]
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def start(self) -> "DSEServer":
+        """Serve in a daemon thread; returns self (context-manager style:
+        ``with DSEServer(...).start() as srv: ...``)."""
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, kwargs={"poll_interval": 0.1},
+            name="cim-tuner-dse-http", daemon=True)
+        self._thread.start()
+        return self
+
+    def shutdown(self, drain: bool = True,
+                 timeout: float | None = 30.0) -> None:
+        """Stop accepting requests, then (by default) drain every accepted
+        micro-batch bucket through the queue so in-flight submissions still
+        resolve and persist before the process exits."""
+        if self._shut:
+            return
+        self._shut = True
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout)
+        if drain:
+            self.client.close()
+
+    def __enter__(self) -> "DSEServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    def bump(self, counter: str) -> None:
+        """Locked counter increment -- handler threads are concurrent and
+        ``/v1/stats`` readings gate CI assertions, so lost updates from
+        racing read-modify-writes are not acceptable."""
+        with self._stats_lock:
+            self.http_stats[counter] += 1
+
+    # ------------------------------------------------------------- #
+    # registry
+    # ------------------------------------------------------------- #
+    def register(self, fut: ExploreFuture) -> None:
+        store = self.client.store
+        with self._reg_lock:
+            self._registry[fut.key] = fut
+            self._registry.move_to_end(fut.key)
+            while len(self._registry) > self.config.registry_cap:
+                # eviction preference: completed entries whose result is
+                # recoverable through the store, then any completed entry
+                # (values sweeps / --no-store results become 404s), and
+                # NEVER a pending future -- /v1/stream must not lose
+                # running work, so the cap may temporarily overrun
+                victim = next(
+                    (k for k, f in self._registry.items()
+                     if f.done() and store is not None and k in store),
+                    None)
+                if victim is None:
+                    victim = next((k for k, f in self._registry.items()
+                                   if f.done()), None)
+                if victim is None:
+                    break
+                del self._registry[victim]
+
+    def lookup(self, key: str) -> ExploreFuture | None:
+        """Future for a key: live registry first, then the persistent
+        store (as an already-completed future)."""
+        with self._reg_lock:
+            fut = self._registry.get(key)
+        if fut is not None:
+            return fut
+        store = self.client.store
+        if store is None:
+            return None
+        result = store.get(key)
+        if result is None:
+            return None
+        return ExploreFuture.completed(None, "store", key, result,
+                                       source="store")
+
+    # ------------------------------------------------------------- #
+    # state serialization
+    # ------------------------------------------------------------- #
+    @staticmethod
+    def job_state(fut: ExploreFuture) -> dict:
+        """JSON-able status/result record of one future."""
+        rec: dict = {"key": fut.key, "method": fut.method}
+        if not fut.done():
+            rec["status"] = "pending"
+            return rec
+        exc = fut.exception(timeout=0)
+        if exc is not None:
+            rec.update(status="failed", error=str(exc),
+                       error_type=type(exc).__name__,
+                       job_key=getattr(exc, "job_key", None))
+            return rec
+        rec["status"] = "done"
+        rec["source"] = fut.source
+        result = fut._result
+        if isinstance(result, ExploreResult):
+            rec["result"] = serialize_result(result)
+        else:
+            rec["values"] = np.asarray(result).tolist()
+        return rec
+
+    def stats(self) -> dict:
+        snap = self.client.stats_snapshot()
+        with self._reg_lock:
+            registry = len(self._registry)
+        with self._stats_lock:
+            http = dict(self.http_stats)
+        snap["server"] = {
+            **http,
+            "registry": registry,
+            "uptime_s": round(time.time() - self._started_s, 3),
+            "url": self.url,
+        }
+        return snap
+
+
+def serve(
+    host: str = "127.0.0.1",
+    port: int = 0,
+    store: typing.Any = "auto",
+    engine: ExplorationEngine | None = None,
+    config: ServerConfig | None = None,
+) -> DSEServer:
+    """Build and start a front door in one call; returns the running
+    server (``.url`` carries the bound ephemeral port)."""
+    cfg = config or ServerConfig(host=host, port=port)
+    return DSEServer(engine=engine, store=store, config=cfg).start()
+
+
+# ------------------------------------------------------------------ #
+# the request handler
+# ------------------------------------------------------------------ #
+class _Handler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"
+    server_version = "cim-tuner-dse/1.0"
+
+    # -- plumbing --------------------------------------------------- #
+    @property
+    def dse(self) -> DSEServer:
+        return self.server.dse                         # type: ignore[attr-defined]
+
+    def log_message(self, fmt: str, *args) -> None:    # noqa: A003
+        if not self.dse.config.quiet:                  # pragma: no cover
+            BaseHTTPRequestHandler.log_message(self, fmt, *args)
+
+    def _send_json(self, code: int, obj: dict) -> None:
+        body = json.dumps(obj).encode("utf-8")
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _bad(self, message: str, code: int = 400) -> None:
+        self.dse.bump("bad_requests")
+        self._send_json(code, {"error": message})
+
+    def _query(self) -> tuple[str, dict[str, str]]:
+        parts = urllib.parse.urlsplit(self.path)
+        q = {k: v[-1] for k, v in
+             urllib.parse.parse_qs(parts.query).items()}
+        return parts.path, q
+
+    def _wait_s(self, q: dict[str, str]) -> float:
+        try:
+            wait = float(q.get("wait", "0"))
+        except ValueError:
+            wait = 0.0
+        return max(0.0, min(wait, self.dse.config.max_wait_s))
+
+    # -- SSE -------------------------------------------------------- #
+    def _sse_begin(self) -> None:
+        self.send_response(200)
+        self.send_header("Content-Type", "text/event-stream")
+        self.send_header("Cache-Control", "no-cache")
+        self.send_header("Connection", "close")
+        self.end_headers()
+        self.close_connection = True
+
+    def _sse_event(self, obj: dict, event: str | None = None) -> None:
+        buf = b""
+        if event:
+            buf += f"event: {event}\n".encode()
+        buf += b"data: " + json.dumps(obj).encode("utf-8") + b"\n\n"
+        self.wfile.write(buf)
+        self.wfile.flush()
+
+    def _sse_ping(self) -> None:
+        self.wfile.write(b": ping\n\n")
+        self.wfile.flush()
+
+    # -- routing ---------------------------------------------------- #
+    def do_GET(self) -> None:                          # noqa: N802
+        self.dse.bump("requests")
+        path, q = self._query()
+        try:
+            if path == "/healthz":
+                self._send_json(200, {
+                    "ok": True, "service": "cim-tuner-dse",
+                    "pid": os.getpid(),
+                    "uptime_s": round(
+                        time.time() - self.dse._started_s, 3)})
+            elif path == "/v1/stats":
+                self._send_json(200, self.dse.stats())
+            elif path.startswith("/v1/jobs/"):
+                self._get_job(path.rsplit("/", 1)[1], q)
+            elif path == "/v1/stream":
+                self._get_stream(q)
+            elif path == "/v1/pareto":
+                self._get_pareto(q)
+            elif path.startswith("/v1/store/"):
+                self._get_store(path.rsplit("/", 1)[1])
+            else:
+                self._bad(f"unknown path {path!r}", code=404)
+        except (BrokenPipeError, ConnectionResetError):
+            pass                                       # client went away
+        except Exception as exc:                       # noqa: BLE001
+            self.dse.bump("errors")
+            try:
+                self._send_json(500, {"error": repr(exc)})
+            except OSError:                            # pragma: no cover
+                pass
+
+    def do_POST(self) -> None:                         # noqa: N802
+        self.dse.bump("requests")
+        path, q = self._query()
+        try:
+            if path == "/v1/jobs":
+                self._post_jobs(q)
+            else:
+                self._bad(f"unknown path {path!r}", code=404)
+        except (BrokenPipeError, ConnectionResetError):
+            pass
+        except Exception as exc:                       # noqa: BLE001
+            self.dse.bump("errors")
+            try:
+                self._send_json(500, {"error": repr(exc)})
+            except OSError:                            # pragma: no cover
+                pass
+
+    # -- endpoints -------------------------------------------------- #
+    def _read_body(self) -> typing.Any:
+        length = int(self.headers.get("Content-Length") or 0)
+        if length <= 0:
+            raise ValueError("missing request body")
+        if length > self.dse.config.max_body_bytes:
+            raise ValueError(
+                f"body of {length} bytes exceeds the "
+                f"{self.dse.config.max_body_bytes}-byte cap")
+        return json.loads(self.rfile.read(length).decode("utf-8"))
+
+    def _post_jobs(self, q: dict[str, str]) -> None:
+        try:
+            payload = self._read_body()
+        except (ValueError, UnicodeDecodeError) as exc:
+            self._bad(f"bad request body: {exc}")
+            return
+        specs = payload if isinstance(payload, list) else [payload]
+        if not specs or not all(isinstance(s, dict) for s in specs):
+            self._bad("body must be a job-spec object or a non-empty "
+                      "list of them")
+            return
+        # validate every spec before admitting ANY of them -- a typo'd
+        # backend name must not leave half a batch running
+        parsed = []
+        for i, spec in enumerate(specs):
+            try:
+                job, method = job_from_spec(spec)
+                settings = settings_from_spec(method, spec.get("settings"))
+                cands = spec.get("candidates")
+                if cands is not None:
+                    cands = np.asarray(cands, dtype=np.float64)
+                    if cands.ndim != 2 or cands.shape[1] != 6:
+                        raise ValueError(
+                            f"candidates must be [C, 6] rows, got shape "
+                            f"{cands.shape}")
+                parsed.append((job, method, settings, cands,
+                               int(spec.get("priority", 0))))
+            except _SPEC_ERRORS as exc:
+                self._bad(f"bad job spec #{i}: {exc}")
+                return
+        svc = self.dse.client
+        futs: list[ExploreFuture] = []
+        for job, method, settings, cands, priority in parsed:
+            if cands is not None:
+                fut = svc.submit_values(job, cands, priority=priority)
+                self.dse.bump("values_posted")
+            else:
+                fut = svc.submit(job, method, settings=settings,
+                                 priority=priority)
+                self.dse.bump("jobs_posted")
+            self.dse.register(fut)
+            futs.append(fut)
+        wait = self._wait_s(q)
+        if wait:
+            deadline = time.monotonic() + wait
+            for fut in futs:
+                fut.wait(max(0.0, deadline - time.monotonic()))
+        states = [self.dse.job_state(f) for f in futs]
+        self._send_json(200, {
+            "jobs": states,
+            "pending": sum(s["status"] == "pending" for s in states)})
+
+    def _get_job(self, key: str, q: dict[str, str]) -> None:
+        fut = self.dse.lookup(key)
+        if fut is None:
+            self._bad(f"unknown job key {key!r}", code=404)
+            return
+        wait = self._wait_s(q)
+        if wait:
+            fut.wait(wait)
+        self._send_json(200, self.dse.job_state(fut))
+
+    def _get_store(self, key: str) -> None:
+        store = self.dse.client.store
+        payload = store.get_raw(key) if store is not None else None
+        if payload is None:
+            # a read-through miss is normal fleet behaviour, not a bad
+            # request -- don't pollute that counter
+            self.dse.bump("store_get_misses")
+            self._send_json(404, {"error": f"no stored result for {key!r}"})
+            return
+        self.dse.bump("store_get_hits")
+        self._send_json(200, {"key": key, "result": payload})
+
+    def _get_stream(self, q: dict[str, str]) -> None:
+        keys = [k for k in q.get("keys", "").split(",") if k]
+        if not keys:
+            self._bad("stream needs ?keys=k1,k2,...")
+            return
+        try:
+            timeout = float(q.get("timeout", "0")) or None
+        except ValueError:
+            timeout = None
+        futs: list[ExploreFuture] = []
+        unknown: list[str] = []
+        for key in dict.fromkeys(keys):                # dedup, keep order
+            fut = self.dse.lookup(key)
+            if fut is None:
+                unknown.append(key)
+            else:
+                futs.append(fut)
+        if unknown:
+            self._bad(f"unknown job keys {unknown}", code=404)
+            return
+        self.dse.bump("streams")
+        self._sse_begin()
+        done_q: _queue.SimpleQueue = _queue.SimpleQueue()
+        for fut in futs:
+            fut.add_done_callback(done_q.put)
+        deadline = None if timeout is None else time.monotonic() + timeout
+        remaining = len(futs)
+        while remaining:
+            budget = self.dse.config.stream_ping_s
+            if deadline is not None:
+                budget = min(budget, deadline - time.monotonic())
+                if budget <= 0:
+                    self._sse_event({"remaining": remaining,
+                                     "reason": "timeout"}, event="end")
+                    return
+            try:
+                fut = done_q.get(timeout=budget)
+            except _queue.Empty:
+                self._sse_ping()
+                continue
+            self._sse_event(self.dse.job_state(fut), event="result")
+            remaining -= 1
+        self._sse_event({"remaining": 0}, event="end")
+
+    def _get_pareto(self, q: dict[str, str]) -> None:
+        from repro.core.macro import get_macro
+        from repro.service.client import _workload_from_spec
+        try:
+            macro = get_macro(q["macro"])
+            budget = float(q["area_budget_mm2"])
+            names = [w for w in q.get("workloads", "").split(",") if w]
+            if not names:
+                raise KeyError("workloads")
+            seq = int(q.get("seq", "512"))
+            workloads = [_workload_from_spec({"name": n, "seq": seq})
+                         for n in names]
+            bw = int(q.get("bw", "256"))
+            strategy_set = q.get("strategy_set", "st")
+        except _SPEC_ERRORS as exc:
+            self._bad(f"bad pareto query: {exc}")
+            return
+        try:
+            timeout = float(q.get("timeout", "0")) or None
+        except ValueError:
+            timeout = None
+        self._sse_begin()
+        count = 0
+        try:
+            for name, frontier in stream_pareto(
+                    macro, workloads, budget, service=self.dse.client,
+                    strategy_set=strategy_set, bw=bw, timeout=timeout):
+                self._sse_event({
+                    "workload": name,
+                    "frontier": [{
+                        "config": dataclasses.asdict(pt["config"]),
+                        "gops": pt["gops"], "tops_w": pt["tops_w"],
+                    } for pt in frontier],
+                }, event="frontier")
+                count += 1
+        except Exception as exc:                       # noqa: BLE001
+            self._sse_event({"error": repr(exc)}, event="error")
+        self._sse_event({"remaining": len(workloads) - count}, event="end")

@@ -24,6 +24,7 @@ import dataclasses
 import json
 import os
 import tempfile
+import threading
 import time
 
 import numpy as np
@@ -32,8 +33,8 @@ from repro.core.engine import ExploreResult
 from repro.core.macro import MacroSpec
 from repro.core.template import AcceleratorConfig
 
-__all__ = ["ResultStore", "default_store", "serialize_result",
-           "deserialize_result", "STORE_SCHEMA"]
+__all__ = ["ResultStore", "RemoteStoreTier", "default_store",
+           "serialize_result", "deserialize_result", "STORE_SCHEMA"]
 
 #: bump together with ``engine.JOB_KEY_SCHEMA`` when the serialized result
 #: layout changes shape
@@ -123,12 +124,22 @@ class ResultStore:
         self._approx_bytes: float | None = None
         self.stats = {"hits": 0, "misses": 0, "puts": 0,
                       "expired": 0, "evicted": 0}
+        # handler threads of the HTTP front door and the queue worker hit
+        # one store concurrently; counter updates must not lose increments
+        self._stats_lock = threading.Lock()
+
+    def _bump(self, counter: str, n: int = 1) -> None:
+        with self._stats_lock:
+            self.stats[counter] += n
 
     # ------------------------------------------------------------- #
     def _path(self, key: str) -> str:
         return os.path.join(self.root, key[:2], f"{key}.jsonl")
 
-    def get(self, key: str) -> ExploreResult | None:
+    def get_raw(self, key: str) -> dict | None:
+        """The serialized-result payload of a live record (TTL and schema
+        enforced exactly like :meth:`get`); what the HTTP front door's
+        ``GET /v1/store/<key>`` ships to remote readers."""
         path = self._path(key)
         try:
             with open(path) as f:
@@ -137,21 +148,35 @@ class ResultStore:
                 raise ValueError("schema mismatch")
             if self.ttl_s is not None and \
                     time.time() - rec.get("created_s", 0.0) > self.ttl_s:
-                self.stats["expired"] += 1
+                self._bump("expired")
                 try:
                     os.remove(path)
                 except OSError:                        # pragma: no cover
                     pass
                 raise ValueError("expired")
-            out = deserialize_result(rec["result"])
+            payload = rec["result"]
+            if not isinstance(payload, dict):
+                raise ValueError("malformed record")
         except (OSError, ValueError, KeyError, TypeError):
-            self.stats["misses"] += 1
+            self._bump("misses")
             return None
-        self.stats["hits"] += 1
+        self._bump("hits")
         try:
             os.utime(path)             # LRU-ish: hits refresh the mtime
         except OSError:                                # pragma: no cover
             pass
+        return payload
+
+    def get(self, key: str) -> ExploreResult | None:
+        payload = self.get_raw(key)
+        if payload is None:
+            return None
+        try:
+            out = deserialize_result(payload)
+        except (ValueError, KeyError, TypeError):
+            self._bump("hits", -1)
+            self._bump("misses")
+            return None
         out.search["cache"] = "store"
         return out
 
@@ -169,7 +194,7 @@ class ResultStore:
             os.replace(tmp, path)                      # atomic publish
         except OSError:                                # pragma: no cover
             return                                     # read-only FS etc.
-        self.stats["puts"] += 1
+        self._bump("puts")
         if self.max_bytes is not None:
             if self._approx_bytes is not None:
                 # overwrites double-count the record; the estimate only
@@ -205,7 +230,7 @@ class ResultStore:
                 os.remove(p)
             except OSError:                            # pragma: no cover
                 continue
-            self.stats["evicted"] += 1
+            self._bump("evicted")
             total -= size
         self._approx_bytes = total
 
@@ -244,6 +269,76 @@ class ResultStore:
                 pass
         self._approx_bytes = None
         return n
+
+
+class RemoteStoreTier:
+    """Read-through tiering over a ``repro-service serve`` instance.
+
+    ``get`` falls through **local store -> remote GET /v1/store/<key>**;
+    remote hits are written back into the local tier so the next identical
+    query on this host never leaves the machine.  ``put`` writes the local
+    tier only -- the *server* is the sole writer of the shared store (every
+    engine result it computes lands there via its own queue), so client
+    fleets cannot race each other's writes across hosts.  Remote errors
+    (server down, timeouts) degrade to misses: the caller simply submits.
+    """
+
+    def __init__(self, base_url: str,
+                 local: "ResultStore | None" = None,
+                 timeout_s: float = 10.0):
+        self.base_url = base_url.rstrip("/")
+        self.local = local
+        self.timeout_s = float(timeout_s)
+        self.stats = {"local_hits": 0, "remote_hits": 0, "misses": 0,
+                      "puts": 0, "remote_errors": 0}
+        self._stats_lock = threading.Lock()
+
+    def _bump(self, counter: str) -> None:
+        with self._stats_lock:
+            self.stats[counter] += 1
+
+    def get(self, key: str) -> ExploreResult | None:
+        if self.local is not None:
+            out = self.local.get(key)
+            if out is not None:
+                self._bump("local_hits")
+                return out
+        payload = self._remote_get(key)
+        if payload is None:
+            self._bump("misses")
+            return None
+        try:
+            out = deserialize_result(payload)
+        except (ValueError, KeyError, TypeError):
+            self._bump("misses")
+            return None
+        self._bump("remote_hits")
+        out.search["cache"] = "remote-store"
+        if self.local is not None:
+            self.local.put(key, out)       # read-through: warm the local tier
+        return out
+
+    def put(self, key: str, result: ExploreResult) -> None:
+        if self.local is not None:
+            self.local.put(key, result)
+        self._bump("puts")
+
+    def _remote_get(self, key: str) -> dict | None:
+        import urllib.error
+        import urllib.request
+        url = f"{self.base_url}/v1/store/{key}"
+        try:
+            with urllib.request.urlopen(url, timeout=self.timeout_s) as resp:
+                rec = json.loads(resp.read().decode("utf-8"))
+        except urllib.error.HTTPError as exc:
+            if exc.code != 404:                        # pragma: no cover
+                self._bump("remote_errors")
+            return None
+        except (OSError, ValueError):
+            self._bump("remote_errors")
+            return None
+        payload = rec.get("result") if isinstance(rec, dict) else None
+        return payload if isinstance(payload, dict) else None
 
 
 def default_store() -> ResultStore | None:

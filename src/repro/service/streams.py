@@ -47,6 +47,12 @@ class ExploreFuture:
     def done(self) -> bool:
         return self._event.is_set()
 
+    def wait(self, timeout: float | None = None) -> bool:
+        """Block until resolved (or ``timeout``); returns ``done()``.
+        Unlike :meth:`result` this never raises -- the HTTP front door's
+        long-poll path uses it to report failed jobs as data."""
+        return self._event.wait(timeout)
+
     def result(self, timeout: float | None = None):
         if not self._event.wait(timeout):
             raise TimeoutError(f"job {self.key[:12]} not done "
@@ -72,6 +78,24 @@ class ExploreFuture:
             fn(self)
         except Exception:
             pass
+
+    @classmethod
+    def completed(
+        cls,
+        job,
+        method: str,
+        key: str,
+        result=None,
+        exc: BaseException | None = None,
+        source: str = "store",
+        meta=None,
+    ) -> "ExploreFuture":
+        """An already-resolved future -- how the HTTP server represents
+        store-backed results and how the remote client materializes
+        local-tier cache hits without touching a queue."""
+        fut = cls(job, method, key, meta=meta)
+        fut._finish(result, exc=exc, source=source)
+        return fut
 
     # ------------------------------------------------------------- #
     # producer side (the queue worker)

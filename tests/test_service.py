@@ -211,6 +211,32 @@ def test_failed_group_rejects_futures(tmp_path):
         assert fut.exception(timeout=1) is not None
 
 
+def test_engine_failure_surfaces_job_key_into_every_future():
+    """A poisoned engine fails a whole micro-batch bucket; every affected
+    future must surface the error tagged with ITS originating job_key
+    (message + ``.job_key`` attribute), not a bare shared exception."""
+    class PoisonedEngine(CountingStubEngine):
+        def run(self, jobs, method="sa", settings=None, sa_settings=None,
+                keys=None):
+            raise RuntimeError("engine poisoned")
+
+    with JobQueue(engine=PoisonedEngine(), store=None,
+                  config=QueueConfig(batch_window_s=0.2)) as q:
+        # same canonical job -> in-flight dedup fans the failure out too
+        f1 = q.submit(_job("ee"), method="exhaustive")
+        f2 = q.submit(_job("ee"), method="exhaustive")
+        f3 = q.submit(_job("th"), method="exhaustive")
+        excs = [f.exception(timeout=30) for f in (f1, f2, f3)]
+    for f, exc in zip((f1, f2, f3), excs):
+        assert isinstance(exc, RuntimeError)
+        assert "engine poisoned" in str(exc)
+        assert f.key[:16] in str(exc), "message must carry the job key"
+        assert exc.job_key == f.key
+        assert exc.__cause__ is not None
+    assert excs[0].job_key != excs[2].job_key
+    assert q.stats["failed"] >= 1
+
+
 def test_worker_survives_unbucketable_entry():
     """An entry whose job can't even be bucketed (malformed design space)
     is rejected individually; the worker thread keeps serving."""
