@@ -13,10 +13,14 @@ against the sequential retrace-per-job path to report the engine's
 end-to-end speedup.
 
 ``--search`` instead races the pluggable ``repro.search`` backends (SA /
-GA / DE / Sobol / portfolio, each at its default evaluation budget) on the
-same co-exploration jobs: per network it prints each backend's best-found
-objective, its gap to the exhaustive ground truth, and the measured
-wall-clock.
+GA / DE / Sobol, plus the portfolio under BOTH budget allocators --
+fixed-rung successive halving and the UCB bandit -- each at its default
+evaluation budget) on the same co-exploration jobs: per network it prints
+each backend's best-found objective, its gap to the exhaustive ground
+truth, its allocator column (``alloc=-`` for non-composite backends), and
+the measured wall-clock.  The bandit row is the acceptance check for the
+allocator upgrade: it must match exhaustive on bert-large at wall-clock
+less than or equal to the fixed-rung portfolio's.
 """
 from __future__ import annotations
 
@@ -31,7 +35,10 @@ BUDGET = 5.0
 STREAM_TIMEOUT_S = 1800.0
 #: networks used for the --search backend race (first two of Fig. 7)
 SEARCH_NETWORKS = ("bert-large", "yi-6b")
-SEARCH_BACKENDS = ("sa", "genetic", "evolution", "sobol", "portfolio")
+SEARCH_BACKENDS = ("sa", "genetic", "evolution", "sobol")
+#: the portfolio races once per budget allocator (the bandit is the
+#: default; "halving" is the fixed-rung baseline it must not lose to)
+PORTFOLIO_ALLOCATORS = ("halving", "bandit")
 
 
 def _jobs(macro):
@@ -134,8 +141,11 @@ def run_search(
     networks: typing.Sequence[str] = SEARCH_NETWORKS,
 ) -> typing.Iterator[str]:
     """Backend race: best-found objective + wall-clock per ``repro.search``
-    backend, against the exhaustive ground truth, one engine per race so
-    every backend pays its own compile exactly once."""
+    backend (portfolio rows once per budget allocator), against the
+    exhaustive ground truth, one engine per race so every backend pays its
+    own compile exactly once.  Every row carries an ``alloc=`` column."""
+    from repro.search import PortfolioSettings
+
     macro = get_macro("vanilla-dcim")
     engine = ExplorationEngine()
     for name in networks:
@@ -144,27 +154,47 @@ def run_search(
         (ex,), t_ex = timed(engine.run, [job], method="exhaustive")
         yield csv_line(
             f"fig7_search_{name}_exhaustive", t_ex * 1e6,
-            f"energy={ex.metrics['energy_pj']:.6g} pJ "
+            f"alloc=- energy={ex.metrics['energy_pj']:.6g} pJ "
             f"EE={ex.metrics['tops_w']:.2f} TOPS/W "
             f"(ground truth, wall {t_ex:.2f}s)")
+        races: list[tuple[str, str | None]] = \
+            [(b, None) for b in SEARCH_BACKENDS] + \
+            [("portfolio", alloc) for alloc in PORTFOLIO_ALLOCATORS]
         best_name, best_energy = None, float("inf")
-        for backend in SEARCH_BACKENDS:
-            (res,), t_b = timed(engine.run, [job], method=backend)
+        wall: dict[str, float] = {}
+        for backend, alloc in races:
+            settings = None if alloc is None else \
+                PortfolioSettings(allocator=alloc)
+            (res,), t_b = timed(engine.run, [job], method=backend,
+                                settings=settings)
+            row = backend if alloc is None else f"{backend}_{alloc}"
+            wall[row] = t_b
             energy = res.metrics["energy_pj"]
             if energy < best_energy:
-                best_name, best_energy = backend, energy
+                best_name, best_energy = row, energy
             gap = energy / ex.metrics["energy_pj"] - 1.0
             extra = ""
             if backend == "portfolio":
-                extra = f" winner={res.search['portfolio']['winner']}"
+                pf = res.search["portfolio"]
+                extra = f" winner={pf['winner']} devices={pf['devices']}"
             yield csv_line(
-                f"fig7_search_{name}_{backend}", t_b * 1e6,
-                f"energy={energy:.6g} pJ (gap {gap * 100:+.3f}% vs "
-                f"exhaustive) EE={res.metrics['tops_w']:.2f} TOPS/W "
+                f"fig7_search_{name}_{row}", t_b * 1e6,
+                f"alloc={alloc or '-'} energy={energy:.6g} pJ "
+                f"(gap {gap * 100:+.3f}% vs exhaustive) "
+                f"EE={res.metrics['tops_w']:.2f} TOPS/W "
                 f"wall={t_b:.2f}s{extra}")
+        if {"portfolio_bandit", "portfolio_halving"} <= wall.keys():
+            speed = wall["portfolio_halving"] / wall["portfolio_bandit"]
+            yield csv_line(
+                f"fig7_search_{name}_allocators",
+                wall["portfolio_bandit"] * 1e6,
+                f"alloc=bandit-vs-halving bandit {wall['portfolio_bandit']:.2f}s "
+                f"vs halving {wall['portfolio_halving']:.2f}s "
+                f"(x{speed:.2f})")
         yield csv_line(
             f"fig7_search_{name}_best", 0.0,
-            f"best backend={best_name} energy={best_energy:.6g} pJ")
+            f"alloc=- best backend={best_name} "
+            f"energy={best_energy:.6g} pJ")
 
 
 if __name__ == "__main__":

@@ -2,13 +2,18 @@
 
     PYTHONPATH=src python examples/async_service.py
 
-Demonstrates the three service tiers over the batched exploration engine:
+Demonstrates the service tiers over the batched exploration engine
+(``ServiceClient`` wraps the micro-batching queue; set
+``CIM_TUNER_SERVICE_URL`` or pass ``ServiceClient(base_url=...)`` and the
+identical code runs against a remote ``repro-service serve`` front door):
 
 1. submit a heterogeneous job list and consume results in COMPLETION order
    (each executable bucket resolves the moment it finishes);
 2. resubmit an identical job -> deduped in flight / served from the
    persistent result store with zero engine work;
-3. stream per-workload Pareto frontiers.
+3. run a pluggable search backend per job (``method=`` /
+   ``ExploreJob.search_method``, with per-job ``search_settings``);
+4. stream per-workload Pareto frontiers.
 """
 import sys
 import time
@@ -17,6 +22,7 @@ sys.path.insert(0, "src")
 
 from repro.configs import get_arch
 from repro.core import ExploreJob, bert_large_workload, get_macro
+from repro.search import PortfolioSettings
 from repro.service import ServiceClient, as_completed, stream_pareto
 
 macro = get_macro("vanilla-dcim")
@@ -47,7 +53,22 @@ print(f"  [{time.perf_counter()-t0:5.3f}s] source={again.source}  "
       f"{r.summary()}")
 print(f"  service stats: {svc.stats}")
 
-# -- 3. streaming Pareto frontiers -------------------------------------- #
+# -- 3. pluggable search backend with per-job settings ------------------ #
+# a small bandit-allocated portfolio race (SA vs GA vs DE vs Sobol, UCB
+# budget allocation) on a pinned space; settings ride the job itself
+print("\n== portfolio search (bandit allocator) ==")
+from repro.core import DesignSpace
+small = DesignSpace(mr=(1, 2, 3), mc=(1, 2), scr=(1, 4, 16),
+                    is_kb=(2, 16, 128), os_kb=(2, 16, 64))
+pf_job = ExploreJob(
+    macro, workloads["bert-large"], 5.0, objective="ee", space=small,
+    search_method="portfolio",
+    search_settings=PortfolioSettings(total_evals=4000, allocator="bandit"))
+pf = svc.submit(pf_job).result(timeout=600)
+print(f"  {pf.summary()}")
+print(f"  portfolio: {pf.search['portfolio']}")
+
+# -- 4. streaming Pareto frontiers -------------------------------------- #
 print("\n== streaming EE/Th Pareto frontiers ==")
 for name, frontier in stream_pareto(
         macro, list(workloads.values())[:2], 5.0, service=svc, timeout=600):

@@ -2,10 +2,20 @@
 best-candidate exchange, checkpointed and elastic.
 
     PYTHONPATH=src python examples/distributed_dse.py
+    # force N CPU devices to see the sharding (and the engine's
+    # portfolio device-racing) on a laptop:
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/distributed_dse.py
 
-On this CPU host the mesh is 1 device; on a pod the same code shards the
-population over all chips (see core/distributed.py).  The checkpoint makes
-the search preemption-safe: re-run the script and it resumes.
+On this CPU host the mesh defaults to 1 device; on a pod the same code
+shards the job x chain population over all chips (see
+``core/distributed.py::distributed_co_explore_jobs`` for whole-batch
+sharding -- ``distributed_co_explore(settings=SASettings(...))`` below is
+its single-job wrapper).  The checkpoint makes the search preemption-safe:
+re-run the script and it resumes.  Multi-device processes also get the
+portfolio racer's device racing for free: ``co_explore(...,
+method="portfolio")`` dispatches constituent backends round-robin across
+the same devices (``repro.core.distributed.race_devices``).
 """
 import sys
 

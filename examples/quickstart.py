@@ -25,10 +25,14 @@ workload = Workload("demo-block", (
     MatmulOp(512, 3072, 768, name="ffn_down"),
 ))
 
-# 3. co-explore under a 3 mm^2 budget, optimizing energy efficiency
+# 3. co-explore under a 3 mm^2 budget, optimizing energy efficiency.
+#    method= accepts any registered repro.search backend ("sa", "genetic",
+#    "evolution", "sobol", "portfolio") or "exhaustive"; settings= carries
+#    that backend's settings dataclass (e.g. PortfolioSettings with
+#    allocator="bandit" for the UCB-raced portfolio)
 result = co_explore(
     macro, workload, area_budget_mm2=3.0, objective="ee",
-    method="sa", sa_settings=SASettings(n_chains=32, n_steps=200),
+    method="sa", settings=SASettings(n_chains=32, n_steps=200),
 )
 
 print(result.summary())

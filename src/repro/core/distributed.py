@@ -20,6 +20,11 @@ Production concerns handled here:
     device count the new mesh has (chains are embarrassingly parallel);
   * stragglers -- rounds are fixed-work (``sync_every`` steps), so a slow
     host delays at most one collective; there is no long-tail barrier.
+
+:func:`race_devices` additionally serves the engine's portfolio racer:
+when several devices are visible, portfolio race waves dispatch their
+constituent backends round-robin across them (async dispatch, per-rung
+best exchange) and fall back transparently to the single-device path.
 """
 from __future__ import annotations
 
@@ -50,6 +55,19 @@ class DistributedResult:
     rounds: int
     n_chains: int
     trace: list[float]
+
+
+def race_devices() -> list:
+    """Visible JAX devices the engine's portfolio racer round-robins
+    constituent backends across (``ExplorationEngine._run_portfolio_batch``
+    dispatches each race wave's runs asynchronously, one backend per
+    device, and folds the wave's results into per-job incumbents -- the
+    host-side analogue of this module's per-round ``pmin`` best exchange).
+    Multi-CPU-device processes (``XLA_FLAGS=
+    --xla_force_host_platform_device_count=N``) race exactly like real
+    multi-chip hosts; a 1-device list makes the engine fall back to the
+    default-placement path."""
+    return list(jax.devices())
 
 
 def _round_body(

@@ -26,12 +26,18 @@ lists through shared compiled executables:
 The search method is pluggable (``repro.search``): any registered backend
 name is a valid ``method=`` -- ``"sa"``, ``"genetic"``, ``"evolution"``,
 ``"sobol"`` run as one vmapped executable per shape bucket, the composite
-``"portfolio"`` races them with successive halving per job
+``"portfolio"`` races them per job with a bandit (UCB) or
+successive-halving budget allocator
 (:meth:`ExplorationEngine._run_portfolio_batch`), re-using the constituent
-backends' executables, and ``"exhaustive"`` sweeps the pruned space.
-``ExploreJob.search_method`` carries the method when no explicit
-``method=`` is given, and :func:`job_key` folds (method, settings) into the
-canonical identity so cached results never cross backends.
+backends' executables -- and, when several JAX devices are visible,
+dispatching the constituents round-robin *across devices* with a per-rung
+best exchange (single-device processes take the same code path with no
+placement).  ``"exhaustive"`` sweeps the pruned space.
+``ExploreJob.search_method`` / ``ExploreJob.search_settings`` carry the
+per-job method and backend settings when no explicit ``method=`` /
+``settings=`` is given (so one batch may mix methods AND settings), and
+:func:`job_key` folds (method, settings) into the canonical identity so
+cached results never cross backends or settings.
 
 Identical jobs inside one ``run()`` (same canonical :func:`job_key`)
 evaluate once and fan the result out.  ``co_explore`` / ``co_explore_macros``
@@ -72,6 +78,7 @@ __all__ = [
     "default_engine",
     "enable_persistent_compilation_cache",
     "job_key",
+    "preferred_settings",
     "valid_methods",
 ]
 
@@ -141,16 +148,28 @@ class ExploreJob:
     #: search backend used when ``run(method=None)`` -- any registered
     #: ``repro.search`` backend name, or "exhaustive"
     search_method: str = "sa"
+    #: optional per-job backend settings (the backend's settings
+    #: dataclass, e.g. ``GASettings``); ``None`` means the backend's
+    #: defaults.  Used when ``run(settings=None)`` and the type matches
+    #: the effective method's settings class, so one batch may mix
+    #: settings (each (bucket, method, settings) group is one jitted
+    #: call).  Folds into :func:`job_key` exactly like an explicit
+    #: ``settings=`` would.
+    search_settings: typing.Any = None
 
     def merged_workload(self) -> Workload:
+        """The operator list actually evaluated (merged unless opted out)."""
         return self.workload.merged() if self.merge_ops else self.workload
 
     def design_space(self) -> DesignSpace:
+        """This job's axis space (the default space when none was given)."""
         return self.space or DesignSpace()
 
 
 @dataclasses.dataclass
 class ExploreResult:
+    """One job's answer: the winning config, metrics, and search record."""
+
     config: AcceleratorConfig
     macro: MacroSpec
     workload: str
@@ -164,6 +183,7 @@ class ExploreResult:
     sa: SearchResult | None = None
 
     def summary(self) -> str:
+        """One-line human-readable row (what the CLI/benchmarks print)."""
         c = self.config
         return (
             f"[{self.workload} | {self.macro.name} | {self.objective}/"
@@ -179,11 +199,15 @@ class ExploreResult:
 # canonical job identity (dedup + the service result store)
 # --------------------------------------------------------------------- #
 #: bump when the cost model / result schema changes meaning, so persisted
-#: results keyed under the old schema stop matching.  Schema 2: the key
-#: folds in (search method, backend settings) for EVERY backend, so a
+#: results keyed under the old schema stop matching.  Schema 2 folded
+#: (search method, backend settings) into the key for EVERY backend, so a
 #: warm-store SA result can never be returned for a GA/DE/Sobol/portfolio
-#: query (or vice versa).
-JOB_KEY_SCHEMA = 2
+#: query (or vice versa).  Schema 3: ``ExploreJob.search_settings`` joined
+#: the job dataclass; it is normalized OUT of the job's canonical form and
+#: hashed through the key's single ``settings`` slot instead, so the
+#: "settings on the job" and "settings as an argument" spellings of one
+#: exploration share a key.
+JOB_KEY_SCHEMA = 3
 
 
 def valid_methods() -> tuple[str, ...]:
@@ -195,6 +219,25 @@ def valid_methods() -> tuple[str, ...]:
 def _check_method(method: str) -> None:
     if method != "exhaustive":
         get_backend(method)              # raises ValueError with the list
+
+
+def preferred_settings(job: "ExploreJob | None", method: str,
+                       settings=None):
+    """THE settings-precedence rule, in one place: explicit ``settings``
+    wins, then a type-matching ``job.search_settings``, else ``None``
+    (the caller applies its own default resolution).  Shared by
+    :func:`job_key`, :meth:`ExplorationEngine._effective_settings` and
+    ``repro.service.queue.resolve_settings`` so the canonical key
+    computed at submit time can never diverge from the settings a job
+    actually runs with."""
+    if method == "exhaustive":
+        return None
+    if settings is not None:
+        return settings
+    s = job.search_settings if job is not None else None
+    if s is not None and isinstance(s, get_backend(method).settings_cls):
+        return s
+    return None
 
 
 def _canonical(obj):
@@ -232,17 +275,25 @@ def job_key(
     objective, strategy set, bandwidth, tech constants, design space,
     merge flag), same search method (``None`` defers to
     ``job.search_method``), same backend settings when the method is a
-    search backend, and the same x64 mode.  Used for in-batch dedup
-    (:meth:`ExplorationEngine.run`), in-flight dedup in the service queue,
-    and as the content address of the persistent result store.
+    search backend (``None`` defers to a type-matching
+    ``job.search_settings``), and the same x64 mode.  Callers that resolve
+    backend *defaults* (the queue, the engine) must pass the resolved
+    settings so defaulted and explicit spellings share a key.  Used for
+    in-batch dedup (:meth:`ExplorationEngine.run`), in-flight dedup in the
+    service queue, and as the content address of the persistent result
+    store.
     """
     method = method or job.search_method
+    settings = preferred_settings(job, method, settings)
     payload = {
         "schema": JOB_KEY_SCHEMA,
-        # normalize search_method into the job so "method override" and
-        # "job field" spellings of the same exploration share a key
+        # normalize search_method into the job (so "method override" and
+        # "job field" spellings of the same exploration share a key) and
+        # search_settings OUT of it (hashed via the "settings" slot below,
+        # so the job-field and argument spellings share a key too)
         "job": _canonical(dataclasses.replace(
-            job, space=job.design_space(), search_method=method)),
+            job, space=job.design_space(), search_method=method,
+            search_settings=None)),
         "method": method,
         "settings": _canonical(settings) if method != "exhaustive" else None,
         "x64": bool(jax.config.jax_enable_x64),
@@ -317,14 +368,25 @@ class ExplorationEngine:
         executable_cache: bool = True,
         persistent_compile_cache: bool = True,
         penalty_scale: float = 1e3,
+        device_race: bool = True,
     ):
+        """Build an engine (one executable cache, optional device racing).
+
+        ``sa_settings`` are the defaults the ``"sa"`` method runs with;
+        ``executable_cache=False`` disables the in-process executable
+        cache (the benchmark's retrace-per-job "sequential" leg);
+        ``device_race=False`` pins portfolio races to the default device
+        even when more are visible.
+        """
         self.sa_settings = sa_settings
         self.penalty_scale = float(penalty_scale)
         self._use_cache = bool(executable_cache)
+        self._device_race = bool(device_race)
         self._executables: dict = {}
         self.stats = {
             "jobs": 0, "batches": 0, "dedup_hits": 0,
             "executable_cache_hits": 0, "executable_cache_misses": 0,
+            "device_race_dispatches": 0,
         }
         if persistent_compile_cache:
             enable_persistent_compilation_cache()
@@ -423,6 +485,18 @@ class ExplorationEngine:
                 f" settings, got {type(settings).__name__}")
         return settings
 
+    def _effective_settings(self, job: ExploreJob, method: str, settings):
+        """The settings one job actually runs with: the shared
+        :func:`preferred_settings` precedence (explicit > type-matching
+        ``job.search_settings``), then this engine's defaults.  A type
+        MISmatch -- job settings left over from a different
+        ``search_method`` under a ``method=`` override -- silently falls
+        back to defaults."""
+        if settings is not None:
+            return self._resolve_settings(method, settings)  # type-check
+        s = preferred_settings(job, method)
+        return s if s is not None else self.default_settings(method)
+
     def run(
         self,
         jobs: typing.Sequence[ExploreJob],
@@ -437,10 +511,14 @@ class ExplorationEngine:
         (``"sa"``, ``"genetic"``, ``"evolution"``, ``"sobol"``,
         ``"portfolio"``, ...) or ``"exhaustive"``; ``None`` uses each
         job's own ``search_method``, so one batch may mix methods (each
-        (method, shape bucket) group runs as one jitted call).
-        ``settings`` must match the backend's settings class and requires
-        a homogeneous method across the batch; ``sa_settings`` is the
-        legacy alias.  ``keys`` lets callers that already computed
+        (method, shape bucket, settings) group runs as one jitted call).
+        ``settings`` must match the backend's settings class, requires a
+        homogeneous method across the batch, and overrides every job's
+        own ``search_settings``; with ``settings=None`` each job runs
+        with its ``search_settings`` (backend defaults when unset), so
+        one batch may also mix settings -- e.g. bandit- and
+        halving-allocator portfolios side by side.  ``sa_settings`` is
+        the legacy alias.  ``keys`` lets callers that already computed
         :func:`job_key` for each job (the service queue) skip re-hashing;
         when given it must align 1:1 with ``jobs``.
         """
@@ -454,14 +532,14 @@ class ExplorationEngine:
             raise ValueError(
                 "explicit settings require a single method across the "
                 f"batch, got {sorted(set(methods))}")
-        resolved = {m: self._resolve_settings(m, settings)
-                    for m in set(methods)}
+        eff = [self._effective_settings(j, m, settings)
+               for j, m in zip(jobs, methods)]
 
         # identical submissions (same canonical key) evaluate ONCE; the
         # result fans out to every duplicate slot below
         if keys is None:
-            keys = [job_key(j, m, resolved[m])
-                    for j, m in zip(jobs, methods)]
+            keys = [job_key(j, m, s)
+                    for j, m, s in zip(jobs, methods, eff)]
         elif len(keys) != len(jobs):
             raise ValueError(
                 f"keys length {len(keys)} != jobs length {len(jobs)}")
@@ -478,8 +556,8 @@ class ExplorationEngine:
         self.stats["jobs"] += len(jobs)
 
         results: list[ExploreResult | None] = [None] * len(jobs)
-        for bucket, members in self._buckets(
-                [(i, prepared[i]) for i in unique], methods).items():
+        for (bucket, group_settings), members in self._buckets(
+                [(i, prepared[i]) for i in unique], methods, eff).items():
             m = bucket[0]
             idxs = [i for i, _ in members]
             batch = [p for _, p in members]
@@ -489,10 +567,10 @@ class ExplorationEngine:
             else:
                 backend = get_backend(m)
                 if backend.composite:
-                    outs = self._run_portfolio_batch(batch, resolved[m])
+                    outs = self._run_portfolio_batch(batch, group_settings)
                 else:
                     outs = self._run_search_batch(batch, backend,
-                                                  resolved[m])
+                                                  group_settings)
             for i, out in zip(idxs, outs):
                 results[i] = out
         for i, k in enumerate(keys):
@@ -554,22 +632,35 @@ class ExplorationEngine:
     def _buckets(
         self, prepared: list[tuple[int, _PreparedJob]],
         methods: typing.Sequence[str],
+        eff: typing.Sequence,
     ) -> dict:
-        """Group (index, prepared) pairs by executable signature (whose
-        first element is the method), preserving order."""
+        """Group (index, prepared) pairs by (executable signature,
+        effective settings), preserving order -- jobs only share a batched
+        call when both their compiled signature AND their resolved
+        settings agree (settings dataclasses are frozen, hence hashable).
+        """
         groups: dict = {}
         for i, p in prepared:
-            groups.setdefault(
-                self._bucket_key(p, methods[i]), []).append((i, p))
+            key = (self._bucket_key(p, methods[i]), eff[i])
+            groups.setdefault(key, []).append((i, p))
         return groups
 
     # ---- pluggable search-backend path ---------------------------- #
-    def _dispatch_backend(
+    def _dispatch_backend_async(
         self, batch: list[_PreparedJob], backend, settings,
-    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """One batched backend call over a shape bucket.  Returns numpy
-        ``(best_idx [J, members, 5], best_val [J, members],
-        trace [J, steps])``."""
+        device=None, seed_rows: typing.Sequence[int] | None = None,
+    ):
+        """One batched backend call over a shape bucket, dispatched
+        asynchronously (the returned triple holds live JAX arrays; JAX's
+        async dispatch lets the portfolio launch several backends --
+        possibly on several devices -- before blocking on any of them).
+
+        ``device`` commits every operand to that device before the call,
+        so the jitted executable runs there (``None`` = default
+        placement); ``seed_rows`` supplies one RNG seed per job (the
+        bandit allocator's per-job pull counters diverge, so one settings
+        object can carry several jobs' seeds).
+        """
         axes_pad = _pow2_at_least(max(p.mat.shape[1] for p in batch))
         stacked = _stack_jobs([_job_arrays(p) for p in batch])
         mats = np.stack([
@@ -578,13 +669,32 @@ class ExplorationEngine:
                                   axis=1)], axis=1)
             for p in batch])                                 # [J, 5, L]
         lens = np.stack([p.lens for p in batch])             # [J, 5]
-        keys = np.stack([
-            np.asarray(backend.make_keys(settings)) for _ in batch])
+        if seed_rows is None:
+            keys = np.stack([
+                np.asarray(backend.make_keys(settings)) for _ in batch])
+        else:
+            keys = np.stack([
+                np.asarray(backend.make_keys(
+                    settings, key=jax.random.PRNGKey(int(s))))
+                for s in seed_rows])
 
         fn = self._search_executable(
             backend, batch[0].ops_pad, axes_pad, settings)
-        best_idx, best_val, trace = fn(
-            stacked, jnp.asarray(mats), jnp.asarray(lens), jnp.asarray(keys))
+        operands = (stacked, jnp.asarray(mats), jnp.asarray(lens),
+                    jnp.asarray(keys))
+        if device is not None:
+            operands = jax.device_put(operands, device)
+            self.stats["device_race_dispatches"] += 1
+        return fn(*operands)
+
+    def _dispatch_backend(
+        self, batch: list[_PreparedJob], backend, settings,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """One batched backend call over a shape bucket.  Returns numpy
+        ``(best_idx [J, members, 5], best_val [J, members],
+        trace [J, steps])``."""
+        best_idx, best_val, trace = self._dispatch_backend_async(
+            batch, backend, settings)
         return (np.asarray(best_idx), np.asarray(best_val),
                 np.asarray(trace))
 
@@ -631,69 +741,165 @@ class ExplorationEngine:
             for jx, p in enumerate(batch)
         ]
 
-    # ---- portfolio (successive-halving racer) --------------------- #
+    # ---- portfolio (bandit / successive-halving racer) ------------ #
+    def _race_devices(self) -> list:
+        """Devices portfolio race waves round-robin across.  ``[None]``
+        (default placement, no transfer) when only one device is visible
+        or ``device_race=False`` -- the single-device fallback is the same
+        code path with no placement step."""
+        if not self._device_race:
+            return [None]
+        from repro.core.distributed import race_devices
+
+        devs = race_devices()
+        return list(devs) if len(devs) > 1 else [None]
+
     def _run_portfolio_batch(
         self, batch: list[_PreparedJob], settings,
     ) -> list[ExploreResult]:
-        """Race the constituent backends per job: every rung runs each
-        job's surviving backends (batched across jobs, re-using the
-        backends' regular executables), culls to the best ``ceil(k/2)``,
-        then spends the remaining budget on each job's winner.  The
-        reported best is the min across every phase."""
-        from repro.search.portfolio import final_plan, race_plan
+        """Race the constituent backends per job under the settings'
+        budget allocator, then spend the remaining budget on each job's
+        winner.  The reported best is the min across every phase.
+
+        ``allocator="bandit"``: after one initialization pull per backend
+        (identical to halving's rung 0), each adaptive pull goes to the
+        per-job UCB argmax over observed improvement rates -- rewards come
+        from the best-so-far traces the runs already return, so the
+        schedule is bit-deterministic given the seed.
+        ``allocator="halving"``: fixed rungs, per-job culling to the best
+        ``ceil(k/2)`` each rung.
+
+        Every wave's constituent runs are dispatched asynchronously and
+        round-robined across the visible JAX devices
+        (:meth:`_race_devices`); the fold of each wave's results into the
+        per-job incumbents is the per-rung best exchange (the host-side
+        analogue of ``core/distributed.py``'s ``pmin`` collective).
+        """
+        from repro.search.portfolio import (
+            bandit_pull_plan,
+            bandit_rounds,
+            derived_seed,
+            final_plan,
+            pull_reward,
+            race_plan,
+            ucb_scores,
+        )
 
         names = settings.backends
         n_jobs, n_back = len(batch), len(names)
+        devices = self._race_devices()
         best_val = np.full(n_jobs, np.inf)
         best_idx = np.zeros((n_jobs, 5), dtype=np.int64)
         per_backend = np.full((n_jobs, n_back), np.inf)
-        alive = np.ones((n_jobs, n_back), dtype=bool)
         # diagnostics track the run that PRODUCED each job's current best,
         # so min(best_per_chain) == min(trace_best) == the reported value
         member_vals: list[np.ndarray | None] = [None] * n_jobs
         traces: list[np.ndarray | None] = [None] * n_jobs
 
-        def _race(name: str, scaled, sel: list[int]) -> dict[int, float]:
-            """One backend run over ``sel``; folds global bests, returns
-            each job's best value of THIS run."""
+        def _launch(b_idx: int, scaled, sel: list[int],
+                    seed_rows=None):
+            """Dispatch one backend's run over ``sel`` (async, possibly on
+            a non-default device); returns a handle for :func:`_collect`.
+            """
             if not sel:
-                return {}
-            sub = [batch[j] for j in sel]
-            idx_a, val_a, tr_a = self._dispatch_backend(
-                sub, get_backend(name), scaled)
-            run_best: dict[int, float] = {}
+                return None
+            arrays = self._dispatch_backend_async(
+                [batch[j] for j in sel], get_backend(names[b_idx]), scaled,
+                device=devices[b_idx % len(devices)], seed_rows=seed_rows)
+            return (b_idx, sel, arrays)
+
+        def _collect(handle, prev=None,
+                     fold_race=True) -> dict[int, tuple[float, float]]:
+            """Block on one launched run and fold it into the per-job
+            incumbents (the best exchange); returns ``{job: (run best,
+            pull reward vs the pre-wave incumbents ``prev``)}``.  Only
+            the bandit race passes ``prev`` -- the halving and final
+            phases don't consume rewards, so none are computed."""
+            b_idx, sel, (idx_a, val_a, tr_a) = handle
+            idx_a, val_a, tr_a = (np.asarray(idx_a), np.asarray(val_a),
+                                  np.asarray(tr_a))
+            out: dict[int, tuple[float, float]] = {}
             for pos, j in enumerate(sel):
                 w = int(np.argmin(val_a[pos]))
                 v = float(val_a[pos, w])
-                run_best[j] = v
+                out[j] = (v, pull_reward(prev[j], tr_a[pos])
+                          if prev is not None else 0.0)
+                if fold_race:
+                    per_backend[j, b_idx] = min(per_backend[j, b_idx], v)
                 if v < best_val[j]:
                     best_val[j] = v
                     best_idx[j] = idx_a[pos, w]
                     member_vals[j] = val_a[pos]
                     traces[j] = tr_a[pos]
-            return run_best
+            return out
 
-        for rung in race_plan(settings):
-            for b_idx, name in enumerate(names):
-                sel = [j for j in range(n_jobs) if alive[j, b_idx]]
-                for j, v in _race(name, rung[name], sel).items():
-                    per_backend[j, b_idx] = min(per_backend[j, b_idx], v)
-            # cull: each job keeps its best ceil(k/2) surviving backends
-            for j in range(n_jobs):
-                live = np.flatnonzero(alive[j])
-                keep = -(-len(live) // 2)
-                order = live[np.argsort(per_backend[j, live],
-                                        kind="stable")]
-                alive[j, order[keep:]] = False
+        pulls = np.zeros((n_jobs, n_back), dtype=np.int64)
+        if settings.allocator == "halving":
+            alive = np.ones((n_jobs, n_back), dtype=bool)
+            for rung in race_plan(settings):
+                handles = [
+                    _launch(b_idx, rung[name],
+                            [j for j in range(n_jobs) if alive[j, b_idx]])
+                    for b_idx, name in enumerate(names)]
+                for h in handles:
+                    if h is not None:
+                        for j in _collect(h):
+                            pulls[j, h[0]] += 1      # bookkeeping only
+                # cull: each job keeps its best ceil(k/2) survivors
+                for j in range(n_jobs):
+                    live = np.flatnonzero(alive[j])
+                    keep = -(-len(live) // 2)
+                    order = live[np.argsort(per_backend[j, live],
+                                            kind="stable")]
+                    alive[j, order[keep:]] = False
+        else:                                          # "bandit"
+            sum_reward = np.zeros((n_jobs, n_back))
+            # init wave: one pull per backend for every job (== rung 0)
+            prev = best_val.copy()
+            handles = [
+                _launch(b_idx, bandit_pull_plan(settings, b_idx, 0),
+                        list(range(n_jobs)))
+                for b_idx in range(n_back)]
+            for h in handles:
+                for j, (_v, r) in _collect(h, prev).items():
+                    sum_reward[j, h[0]] += r
+                    pulls[j, h[0]] += 1
+            # adaptive pulls: per-job UCB argmax (stable: ties resolve to
+            # the lower backend index, so the schedule is deterministic)
+            for _ in range(bandit_rounds(settings) - n_back):
+                scores = ucb_scores(
+                    sum_reward / np.maximum(pulls, 1), pulls,
+                    settings.ucb_c)
+                choice = np.argmax(scores, axis=1)
+                prev = best_val.copy()
+                handles = []
+                for b_idx in range(n_back):
+                    sel = [j for j in range(n_jobs) if choice[j] == b_idx]
+                    if not sel:
+                        continue
+                    handles.append(_launch(
+                        b_idx, bandit_pull_plan(settings, b_idx, 0), sel,
+                        seed_rows=[derived_seed(settings.seed, b_idx,
+                                                int(pulls[j, b_idx]))
+                                   for j in sel]))
+                for h in handles:
+                    for j, (_v, r) in _collect(h, prev).items():
+                        sum_reward[j, h[0]] += r
+                        pulls[j, h[0]] += 1
 
         # exploitation: the per-job winner gets the remaining budget
         # (kept out of per_backend so `race` stays race-phase-only)
         winners = per_backend.argmin(axis=1)
         final = final_plan(settings)
         final_best = np.full(n_jobs, np.inf)
-        for b_idx, name in enumerate(names):
-            sel = [j for j in range(n_jobs) if winners[j] == b_idx]
-            for j, v in _race(name, final[name], sel).items():
+        handles = [
+            _launch(b_idx, final[name],
+                    [j for j in range(n_jobs) if winners[j] == b_idx])
+            for b_idx, name in enumerate(names)]
+        for h in handles:
+            if h is None:
+                continue
+            for j, (v, _r) in _collect(h, fold_race=False).items():
                 final_best[j] = v
 
         results = []
@@ -703,11 +909,15 @@ class ExplorationEngine:
                 np.asarray([best_val[j]]), traces[j])
             out.search["portfolio"] = {
                 "winner": names[int(winners[j])],
+                "allocator": settings.allocator,
                 "race": {name: float(per_backend[j, b])
                          for b, name in enumerate(names)},
+                "pulls": {name: int(pulls[j, b])
+                          for b, name in enumerate(names)},
                 "final": float(final_best[j]),
                 "rungs": settings.rungs,
                 "total_evals": settings.total_evals,
+                "devices": sum(d is not None for d in devices) or 1,
             }
             out.sa = out.sa._replace(
                 best_per_chain=jnp.asarray(member_vals[j]))
@@ -815,6 +1025,9 @@ _default_engine: ExplorationEngine | None = None
 
 
 def default_engine() -> ExplorationEngine:
+    """The process-wide engine (one shared executable cache); created
+    lazily on first use and shared by the ``co_explore`` family and the
+    service queue so interleaved callers amortize compiles."""
     global _default_engine
     if _default_engine is None:
         _default_engine = ExplorationEngine()

@@ -15,8 +15,12 @@ batched engine's vmapped one-executable-per-bucket path:
   index space);
 * ``"sobol"``      -- scrambled quasi-random baseline (and the init-
   population provider for GA / DE);
-* ``"portfolio"``  -- successive-halving racer over the other backends
-  (composite; the engine orchestrates it, per job).
+* ``"portfolio"``  -- budget-allocated racer over the other backends
+  (composite; the engine orchestrates it per job, racing constituents
+  across the visible JAX devices).  ``PortfolioSettings.allocator``
+  selects the race-budget allocator: ``"bandit"`` (deterministic UCB over
+  per-backend improvement rates, the default) or ``"halving"`` (fixed
+  successive-halving rungs).
 
 Every registered name is a valid ``method=`` for ``ExplorationEngine.run``,
 the ``co_explore`` family, service submissions, JSON job specs
@@ -28,8 +32,10 @@ from repro.search.base import (SearchBackend, SearchResult,
                                get_backend, register_backend)
 from repro.search.evolution import DESettings, DifferentialEvolutionBackend
 from repro.search.genetic import GASettings, GeneticBackend
-from repro.search.portfolio import (PortfolioBackend, PortfolioSettings,
-                                    final_plan, race_plan)
+from repro.search.portfolio import (ALLOCATORS, PortfolioBackend,
+                                    PortfolioSettings, bandit_pull_plan,
+                                    bandit_rounds, bandit_slice,
+                                    final_plan, race_plan, ucb_scores)
 from repro.search.sa import SASettings, SimulatedAnnealingBackend
 from repro.search.sobol import (SobolBackend, SobolSettings,
                                 sobol_index_population)
@@ -42,4 +48,6 @@ __all__ = [
     "DESettings", "DifferentialEvolutionBackend",
     "SobolSettings", "SobolBackend", "sobol_index_population",
     "PortfolioSettings", "PortfolioBackend", "race_plan", "final_plan",
+    "ALLOCATORS", "bandit_pull_plan", "bandit_rounds", "bandit_slice",
+    "ucb_scores",
 ]

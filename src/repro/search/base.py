@@ -93,9 +93,12 @@ class SearchBackend:
     # settings algebra (used by the portfolio's budget split)
     # ------------------------------------------------------------- #
     def default_settings(self):
+        """A fresh default-constructed settings object for this backend."""
         return self.settings_cls()
 
     def reseed(self, settings, seed: int):
+        """``settings`` with its RNG seed replaced (the portfolio hands
+        every scaled constituent a deterministic derived seed)."""
         return dataclasses.replace(settings, seed=int(seed))
 
     def budget(self, settings) -> int:
@@ -144,6 +147,9 @@ def register_backend(backend: SearchBackend, overwrite: bool = False) -> SearchB
 
 
 def get_backend(name: str) -> SearchBackend:
+    """The registered backend for ``name`` (raises ``ValueError`` with
+    the registered-name list on a miss; ``"exhaustive"`` is not a backend
+    -- the engine special-cases the pruned sweep)."""
     try:
         return _REGISTRY[name]
     except KeyError:

@@ -32,7 +32,8 @@ Quickstart::
 """
 from repro.service.client import (RemoteQueue, ServiceClient,
                                   default_service, job_from_spec,
-                                  job_to_spec, reset_default_service,
+                                  job_to_spec, merge_spec_settings,
+                                  reset_default_service,
                                   settings_from_spec, settings_to_spec)
 from repro.service.queue import JobQueue, QueueConfig, values_key
 from repro.service.store import (RemoteStoreTier, ResultStore,
@@ -45,7 +46,7 @@ __all__ = [
     "ServiceClient", "RemoteQueue", "default_service",
     "reset_default_service",
     "job_from_spec", "job_to_spec", "settings_from_spec",
-    "settings_to_spec",
+    "settings_to_spec", "merge_spec_settings",
     "JobQueue", "QueueConfig", "values_key",
     "ResultStore", "RemoteStoreTier", "default_store", "serialize_result",
     "deserialize_result",

@@ -18,11 +18,14 @@
 
 Each spec's ``"search"`` key picks the optimizer per job: any registered
 ``repro.search`` backend ("sa", "genetic", "evolution", "sobol",
-"portfolio") or "exhaustive"; an optional ``"settings"`` dict carries the
-backend's knobs; ``explore --search NAME`` overrides every spec in the
-file.  With ``--stream`` each result line prints the moment its
-micro-batch bucket finishes (completion order); without it, results print
-in submission order once all are done.
+"portfolio") or "exhaustive" as a plain name, or the structured per-job
+form ``{"method": "portfolio", "settings": {"total_evals": 8000},
+"allocator": "bandit"}`` (a top-level ``"settings"`` dict is the legacy
+spelling).  ``explore --search NAME`` overrides every spec's backend;
+``--search-settings '{"total_evals": 8000}'`` merges a JSON dict over
+every spec's backend settings.  With ``--stream`` each result line
+prints the moment its micro-batch bucket finishes (completion order);
+without it, results print in submission order once all are done.
 
 ``explore``/``stats`` run against a remote ``serve`` instance when
 ``--url`` (or the ``CIM_TUNER_SERVICE_URL`` environment variable) points
@@ -54,10 +57,26 @@ def _cmd_explore(args) -> int:
               file=sys.stderr)
         return 2
     if args.search:
+        # override drops any structured search dict (its settings belong
+        # to the replaced backend); --search-settings can re-supply knobs
         specs = [{**spec, "search": args.search} for spec in specs]
-    # validate every spec (including the --search override) up front, so
-    # a typo'd backend name fails fast with a clean error, not a traceback
-    # out of the running service
+        for spec in specs:
+            spec.pop("settings", None)
+    if args.search_settings:
+        from repro.service import merge_spec_settings
+        try:
+            override = json.loads(args.search_settings)
+            if not isinstance(override, dict):
+                raise ValueError("must be a JSON object")
+            # raises on ambiguous specs (settings in both spellings)
+            specs = [merge_spec_settings(spec, override) for spec in specs]
+        except ValueError as exc:
+            print(f"error: bad --search-settings: {exc}", file=sys.stderr)
+            return 2
+    # validate every spec (including the --search/--search-settings
+    # overrides) up front, so a typo'd backend name or settings field
+    # fails fast with a clean error, not a traceback out of the running
+    # service
     from repro.service import job_from_spec
     try:
         for spec in specs:
@@ -169,6 +188,11 @@ def main(argv: list[str] | None = None) -> int:
                     help="override every spec's search backend (sa, "
                          "genetic, evolution, sobol, portfolio, "
                          "exhaustive)")
+    ex.add_argument("--search-settings", default=None, metavar="JSON",
+                    help="JSON dict merged over every spec's backend "
+                         "settings, e.g. "
+                         "'{\"total_evals\": 8000, \"allocator\": "
+                         "\"bandit\"}'")
     ex.add_argument("--url", default=None, metavar="URL",
                     help="submit to a running `repro-service serve` "
                          "instance (default: $CIM_TUNER_SERVICE_URL, "

@@ -68,7 +68,8 @@ from repro.service.streams import ExploreFuture, stream_results
 
 __all__ = ["ServiceClient", "RemoteQueue", "default_service",
            "reset_default_service", "job_from_spec", "job_to_spec",
-           "settings_from_spec", "settings_to_spec"]
+           "settings_from_spec", "settings_to_spec",
+           "merge_spec_settings"]
 
 #: environment variable that points every default-service consumer
 #: (``co_explore`` & friends, benchmarks, the CLI) at a running
@@ -105,6 +106,40 @@ def _workload_from_spec(spec) -> Workload:
     return get_arch(name).workload(seq=seq)
 
 
+def _parse_search_spec(spec: dict) -> tuple[str, dict | None]:
+    """``(method, settings-field-dict-or-None)`` from a job record's
+    search keys.  ``"search"`` is either a backend-name string (legacy)
+    or the structured form ``{"method": ..., "settings": {...},
+    "allocator": "bandit"|"halving"}`` -- ``allocator`` is sugar for the
+    portfolio's settings field of the same name.  A top-level
+    ``"settings"`` dict (the original spelling) is still honoured, but
+    giving settings in both places is ambiguous and rejected."""
+    search = spec.get("search", spec.get("method", "sa"))
+    top_settings = spec.get("settings")
+    if isinstance(search, dict):
+        unknown = set(search) - {"method", "settings", "allocator"}
+        if unknown:
+            raise ValueError(
+                f"unknown 'search' keys {sorted(unknown)}; valid: "
+                f"['method', 'settings', 'allocator']")
+        method = search.get("method", "sa")
+        settings_d = search.get("settings")
+        if settings_d is not None and top_settings is not None:
+            raise ValueError(
+                "settings given both top-level and inside 'search' -- "
+                "pick one spelling")
+        settings_d = settings_d if settings_d is not None else top_settings
+        allocator = search.get("allocator")
+        if allocator is not None:
+            settings_d = {**(settings_d or {}), "allocator": allocator}
+    else:
+        method, settings_d = search, top_settings
+    if not isinstance(method, str) or method not in valid_methods():
+        raise ValueError(
+            f"unknown search {method!r}; valid: {sorted(valid_methods())}")
+    return method, settings_d
+
+
 def job_from_spec(spec: dict) -> tuple[ExploreJob, str]:
     """``(ExploreJob, method)`` from one JSON job record.
 
@@ -116,14 +151,19 @@ def job_from_spec(spec: dict) -> tuple[ExploreJob, str]:
     Optional keys: ``objective`` ("ee"|"th"|"edp"), ``strategy_set``
     ("st"|"so"), ``bw``, ``seq`` (inside workload dict), ``search`` --
     any registered ``repro.search`` backend ("sa", "genetic",
-    "evolution", "sobol", "portfolio", ...) or "exhaustive" (``method``
-    is the legacy spelling), ``settings`` (backend settings fields as a
-    dict), ``space`` (axis-name -> value list), ``merge_ops``, inline
+    "evolution", "sobol", "portfolio", ...) or "exhaustive" as a plain
+    string (``method`` is the legacy spelling), or the structured form
+    ``{"method": "portfolio", "settings": {...}, "allocator": "bandit"}``
+    carrying per-job backend settings (see :func:`_parse_search_spec`);
+    ``settings`` (top-level backend settings fields, the original
+    spelling), ``space`` (axis-name -> value list), ``merge_ops``, inline
     workloads via ``{"workload": {"name": ..., "ops": [[m,k,n,count],
     ...]}}`` (ops may also be field dicts), inline macros via
     ``{"macro": {<MacroSpec fields>}}``, and ``tech`` (TechConstants
     fields) -- the inline forms are what the remote client emits so any
     in-memory job round-trips the wire with its canonical key intact.
+    Parsed settings land on ``ExploreJob.search_settings``, so they ride
+    the job through every queue/engine layer and fold into ``job_key``.
     """
     space = None
     if "space" in spec:
@@ -132,11 +172,8 @@ def job_from_spec(spec: dict) -> tuple[ExploreJob, str]:
             if not v:
                 raise ValueError(f"space axis {k!r} must be non-empty")
         space = DesignSpace(**axes)
-    method = spec.get("search", spec.get("method", "sa"))
-    if method not in valid_methods():
-        raise ValueError(
-            f"unknown search {method!r}; valid: {sorted(valid_methods())}")
-    settings_from_spec(method, spec.get("settings"))   # raises on bad fields
+    method, settings_d = _parse_search_spec(spec)
+    settings = settings_from_spec(method, settings_d)  # raises on bad fields
     macro = spec["macro"]
     macro = MacroSpec(**macro) if isinstance(macro, dict) else \
         get_macro(macro)
@@ -152,17 +189,28 @@ def job_from_spec(spec: dict) -> tuple[ExploreJob, str]:
         space=space,
         merge_ops=bool(spec.get("merge_ops", True)),
         search_method=method,
+        search_settings=settings,
     )
     return job, method
 
 
-def job_to_spec(job: ExploreJob, method: str | None = None) -> dict:
+def job_to_spec(job: ExploreJob, method: str | None = None,
+                settings=None) -> dict:
     """Inverse of :func:`job_from_spec` for arbitrary in-memory jobs (the
     remote client's wire format).  Macro and tech constants are inlined as
     full dataclass dicts and every op keeps its name, so
     :func:`repro.core.engine.job_key` of the round-tripped job matches the
-    original bit-for-bit -- cross-host store sharing depends on it."""
+    original bit-for-bit -- cross-host store sharing depends on it.
+    ``settings`` (default: the job's own ``search_settings``) emits the
+    structured ``"search": {"method": ..., "settings": {...}}`` form so
+    per-job backend settings survive the wire too."""
     space = job.design_space()
+    method = method or job.search_method
+    if settings is None:
+        settings = job.search_settings
+    search: dict | str = method
+    if settings is not None:
+        search = {"method": method, "settings": settings_to_spec(settings)}
     return {
         "macro": dataclasses.asdict(job.macro),
         "workload": {
@@ -176,8 +224,34 @@ def job_to_spec(job: ExploreJob, method: str | None = None) -> dict:
         "tech": dataclasses.asdict(job.tech),
         "space": {k: list(v) for k, v in zip(_SPACE_AXES, space.axes())},
         "merge_ops": job.merge_ops,
-        "search": method or job.search_method,
+        "search": search,
     }
+
+
+def merge_spec_settings(spec: dict, override: dict) -> dict:
+    """A copy of ``spec`` with ``override`` merged over its backend
+    settings (whichever spelling the spec used) -- what the CLI's
+    ``--search-settings`` flag applies to every record of a jobs file.
+    A spec carrying settings in BOTH spellings is as ambiguous here as it
+    is to :func:`job_from_spec`, and rejected the same way."""
+    out = dict(spec)
+    search = out.get("search")
+    if isinstance(search, dict):
+        search = dict(search)
+        if search.get("settings") is not None and \
+                out.get("settings") is not None:
+            raise ValueError(
+                "settings given both top-level and inside 'search' -- "
+                "pick one spelling")
+        if "allocator" in override:      # the override wins over the sugar
+            search.pop("allocator", None)
+        search["settings"] = {**(search.get("settings") or {}),
+                              **(out.pop("settings", None) or {}),
+                              **override}
+        out["search"] = search
+    else:
+        out["settings"] = {**(out.get("settings") or {}), **override}
+    return out
 
 
 def settings_to_spec(settings) -> dict | None:
@@ -252,6 +326,14 @@ class RemoteQueue:
         store: ResultStore | None | str = "auto",
         timeout_s: float = 600.0,
     ):
+        """Connect to the front door at ``base_url`` (scheme optional).
+
+        ``store`` is the local read-through tier (``"auto"`` resolves via
+        :func:`repro.service.store.default_store`, honouring
+        ``CIM_TUNER_RESULT_STORE`` / ``CIM_TUNER_DISABLE_RESULT_STORE``;
+        ``None`` disables local caching); ``timeout_s`` bounds how long a
+        posted batch's SSE stream may stay open.
+        """
         if "://" not in base_url:
             base_url = "http://" + base_url
         self.base_url = base_url.rstrip("/")
@@ -276,6 +358,7 @@ class RemoteQueue:
     def submit(self, job: ExploreJob, method: str | None = None,
                sa_settings: SASettings | None = None, priority: int = 0,
                meta=None, settings=None) -> ExploreFuture:
+        """Admit one job (a batch of one through :meth:`submit_many`)."""
         return self.submit_many([job], method, sa_settings, priority,
                                 metas=[meta], settings=settings)[0]
 
@@ -288,6 +371,14 @@ class RemoteQueue:
         metas: typing.Sequence | None = None,
         settings=None,
     ) -> list[ExploreFuture]:
+        """Admit a job batch; returns one future per job immediately.
+
+        Same surface as :meth:`JobQueue.submit_many`: ``method=None``
+        uses each job's own ``search_method``; ``settings=None`` resolves
+        per job (``job.search_settings``, then backend defaults) and the
+        RESOLVED settings ship over the wire, so the server keys every
+        job exactly as this client just did.
+        """
         metas = metas if metas is not None else [None] * len(jobs)
         if len(metas) != len(jobs):
             raise ValueError(
@@ -305,7 +396,7 @@ class RemoteQueue:
         for job, meta in zip(jobs, metas):
             m = method or job.search_method
             eff = settings if settings is not None else sa_settings
-            eff = resolve_settings(m, eff)
+            eff = resolve_settings(m, eff, job=job)
             key = job_key(job, m, eff)
             fut = ExploreFuture(job, m, key, meta=meta)
             futures.append(fut)
@@ -319,9 +410,9 @@ class RemoteQueue:
                            else "store_hits")
                 fut._finish(cached, source="store")
                 continue
-            spec = job_to_spec(job, m)
-            if eff is not None:
-                spec["settings"] = settings_to_spec(eff)
+            # ship the RESOLVED settings (structured "search" form), so
+            # the server's queue keys the job exactly like we just did
+            spec = job_to_spec(job, m, settings=eff)
             if priority:
                 spec["priority"] = int(priority)
             post_specs.append(spec)
@@ -348,6 +439,9 @@ class RemoteQueue:
 
     def run_sync(self, jobs, method=None, sa_settings=None,
                  timeout: float | None = None, settings=None):
+        """Blocking batch call: submit, then wait for every result in
+        submission order (the remote analogue of ``JobQueue.run_sync``).
+        """
         futures = self.submit_many(jobs, method, sa_settings,
                                    settings=settings)
         return [f.result(timeout) for f in futures]
@@ -356,6 +450,8 @@ class RemoteQueue:
     # introspection / lifecycle
     # ------------------------------------------------------------- #
     def depth(self) -> dict:
+        """Client-side depth view: live SSE streamer threads (the server
+        owns the real queue depth -- see :meth:`stats_snapshot`)."""
         with self._lock:
             live = sum(t.is_alive() for t in self._streamers)
         return {"pending": 0, "inflight": live}
@@ -367,6 +463,8 @@ class RemoteQueue:
         return snap
 
     def close(self, timeout: float | None = 10.0) -> None:
+        """Refuse new submissions and join the live SSE streamers (the
+        server keeps running; only this client's connections drain)."""
         self._closed = True
         with self._lock:
             streamers = list(self._streamers)
@@ -374,9 +472,11 @@ class RemoteQueue:
             t.join(timeout)
 
     def __enter__(self):
+        """Context-manager support: ``with RemoteQueue(url) as q:``."""
         return self
 
     def __exit__(self, *exc):
+        """Close on context exit (see :meth:`close`)."""
         self.close()
 
     # ------------------------------------------------------------- #
@@ -525,6 +625,10 @@ class ServiceClient:
         config: QueueConfig = QueueConfig(),
         base_url: str | None = None,
     ):
+        """Wrap an explicit ``queue``, or build one: ``base_url=`` makes
+        a :class:`RemoteQueue` (remote mode), otherwise an in-process
+        :class:`JobQueue` over ``engine`` (``None`` = the process-wide
+        default engine) with the given ``store``/``config``."""
         if queue is not None:
             self.queue: JobQueue | RemoteQueue = queue
         elif base_url:
@@ -534,30 +638,38 @@ class ServiceClient:
 
     @property
     def remote(self) -> bool:
+        """True when submissions go over HTTP to a serve front door."""
         return isinstance(self.queue, RemoteQueue)
 
     # passthroughs --------------------------------------------------- #
     def submit(self, job: ExploreJob, method: str | None = None,
                sa_settings: SASettings | None = None, priority: int = 0,
                meta=None, settings=None) -> ExploreFuture:
+        """Admit one job (see :meth:`JobQueue.submit`); per-job
+        ``job.search_settings`` apply when ``settings`` is ``None``."""
         return self.queue.submit(job, method, sa_settings, priority, meta,
                                  settings=settings)
 
     def submit_many(self, jobs, method=None, sa_settings=None,
                     priority=0, metas=None,
                     settings=None) -> list[ExploreFuture]:
+        """Admit a job batch (see :meth:`JobQueue.submit_many`)."""
         return self.queue.submit_many(jobs, method, sa_settings, priority,
                                       metas, settings=settings)
 
     def submit_values(self, job, candidates, priority=0, meta=None):
+        """Admit a ``[C, 6]`` candidate sweep; the future resolves to the
+        ``[C]`` objective-value array (the Pareto path)."""
         return self.queue.submit_values(job, candidates, priority, meta)
 
     @property
     def stats(self) -> dict:
+        """The underlying queue's counter dict (live, not a snapshot)."""
         return self.queue.stats
 
     @property
     def store(self):
+        """The queue's result-store tier (``None`` when caching is off)."""
         return self.queue.store
 
     def stats_snapshot(self) -> dict:
@@ -594,36 +706,22 @@ class ServiceClient:
 
     def explore_specs(self, specs: typing.Sequence[dict],
                       stream: bool = False, timeout: float | None = None):
-        """Dict-spec variant (the CLI path); method and optional backend
-        settings come from each spec.  Specs are grouped into as few
-        ``submit_many`` batches as their settings allow, so a remote
-        client ships one POST + one SSE stream per group (not per spec)
-        and the server stacks the whole group into shared micro-batch
-        buckets."""
-        parsed = [job_from_spec(spec) for spec in specs]
-        settings = [settings_from_spec(m, spec.get("settings"))
-                    for (_, m), spec in zip(parsed, specs)]
-        futures: list = [None] * len(specs)
-        # jobs without explicit settings share one batch (each runs its
-        # own search_method); explicit settings batch per (method, value)
-        groups: dict = {}
-        for i, ((job, method), s) in enumerate(zip(parsed, settings)):
-            gk = None if s is None else \
-                (method, json.dumps(settings_to_spec(s), sort_keys=True))
-            groups.setdefault(gk, []).append(i)
-        for gk, idxs in groups.items():
-            batch = self.submit_many(
-                [parsed[i][0] for i in idxs],
-                method=None if gk is None else gk[0],
-                metas=list(idxs),
-                settings=None if gk is None else settings[idxs[0]])
-            for i, fut in zip(idxs, batch):
-                futures[i] = fut
+        """Dict-spec variant (the CLI path).  Each spec's method AND
+        backend settings ride the parsed job itself
+        (``ExploreJob.search_method`` / ``.search_settings``), so the
+        whole file is ONE ``submit_many`` batch regardless of how
+        heterogeneous it is -- a remote client ships one POST + one SSE
+        stream, and the server stacks every (bucket, method, settings)
+        group into shared micro-batch dispatches."""
+        jobs = [job_from_spec(spec)[0] for spec in specs]
+        futures = self.submit_many(jobs, metas=list(range(len(specs))))
         if stream:
             return stream_results(futures, timeout=timeout)
         return [f.result(timeout) for f in futures]
 
     def close(self) -> None:
+        """Drain and stop the underlying queue (in-process: waits for
+        pending micro-batches; remote: joins live streams)."""
         self.queue.close()
 
 

@@ -33,6 +33,7 @@ from repro.core.engine import (
     clone_result,
     default_engine,
     job_key,
+    preferred_settings,
 )
 from repro.search.base import get_backend
 from repro.service.store import ResultStore, default_store
@@ -84,19 +85,22 @@ def values_key(job: ExploreJob, rows: np.ndarray) -> str:
 _values_key = values_key                       # pre-PR-4 private spelling
 
 
-def resolve_settings(method: str, settings=None, engine=None):
-    """The effective backend settings a submission runs with when the
-    caller supplies none -- mirrored by the remote client so client-side
-    ``job_key`` computation matches what the server's queue will use.
-    Raises on unknown backend names."""
+def resolve_settings(method: str, settings=None, engine=None, job=None):
+    """The effective backend settings a submission runs with -- mirrored
+    by the remote client so client-side ``job_key`` computation matches
+    what the server's queue will use.  Precedence is the shared
+    :func:`repro.core.engine.preferred_settings` rule (explicit
+    ``settings`` > a type-matching ``job.search_settings``), then the
+    backend's defaults.  Raises on unknown backend names."""
     if method == "exhaustive":
         return None
+    backend = get_backend(method)        # raises on unknown backends
+    settings = preferred_settings(job, method, settings)
     if settings is not None:
-        get_backend(method)              # raises on unknown backends
         return settings
     if method == "sa":
         return engine.sa_settings if engine is not None else SASettings()
-    return get_backend(method).default_settings()
+    return backend.default_settings()
 
 
 def _tag_job_exc(exc: BaseException, key: str) -> BaseException:
@@ -172,7 +176,8 @@ class JobQueue:
         ``method`` is any registered ``repro.search`` backend name or
         ``"exhaustive"`` (``None`` uses ``job.search_method``);
         ``settings`` carries the backend's settings object
-        (``sa_settings`` is the legacy SA spelling)."""
+        (``sa_settings`` is the legacy SA spelling; ``None`` falls back
+        to the job's own ``search_settings``, then backend defaults)."""
         method = method or job.search_method
         if settings is None:
             settings = sa_settings
@@ -180,7 +185,8 @@ class JobQueue:
         # engine (store-only submissions skip engine construction and its
         # persistent-cache setup); a default-constructed engine uses
         # SASettings() too, so the canonical key matches either way
-        settings = resolve_settings(method, settings, engine=self._engine)
+        settings = resolve_settings(method, settings, engine=self._engine,
+                                    job=job)
         key = job_key(job, method, settings)
         future = ExploreFuture(job, method, key, meta=meta)
         # submissions arrive from concurrent threads (the HTTP front

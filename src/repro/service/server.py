@@ -12,8 +12,10 @@ Endpoints
 ``POST /v1/jobs``
     Body: one JSON job spec or a list (the exact schema the CLI reads --
     see :func:`repro.service.client.job_from_spec`, including ``"search"``
-    and optional ``"settings"``; a spec with ``"candidates": [[...], ...]``
-    runs the Pareto candidate-sweep path).  Specs are validated up front:
+    as a backend name or the structured per-job form ``{"method": ...,
+    "settings": {...}, "allocator": "bandit"|"halving"}``, plus the
+    legacy top-level ``"settings"``; a spec with ``"candidates": [[...],
+    ...]`` runs the Pareto candidate-sweep path).  Specs are validated up front:
     any bad record fails the whole request with 400 before anything is
     admitted.  Returns one state record per spec (canonical ``key``,
     ``status``, and the inline result for store/dedup answers);
@@ -57,11 +59,7 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 import numpy as np
 
 from repro.core.engine import ExplorationEngine, ExploreResult
-from repro.service.client import (
-    ServiceClient,
-    job_from_spec,
-    settings_from_spec,
-)
+from repro.service.client import ServiceClient, job_from_spec
 from repro.service.store import serialize_result
 from repro.service.streams import ExploreFuture, stream_pareto
 
@@ -400,12 +398,14 @@ class _Handler(BaseHTTPRequestHandler):
                       "list of them")
             return
         # validate every spec before admitting ANY of them -- a typo'd
-        # backend name must not leave half a batch running
+        # backend name must not leave half a batch running.  Per-job
+        # backend settings (structured "search" form or the top-level
+        # "settings" dict) are parsed onto ExploreJob.search_settings by
+        # job_from_spec, so the queue resolves and keys them per job.
         parsed = []
         for i, spec in enumerate(specs):
             try:
                 job, method = job_from_spec(spec)
-                settings = settings_from_spec(method, spec.get("settings"))
                 cands = spec.get("candidates")
                 if cands is not None:
                     cands = np.asarray(cands, dtype=np.float64)
@@ -413,20 +413,19 @@ class _Handler(BaseHTTPRequestHandler):
                         raise ValueError(
                             f"candidates must be [C, 6] rows, got shape "
                             f"{cands.shape}")
-                parsed.append((job, method, settings, cands,
+                parsed.append((job, method, cands,
                                int(spec.get("priority", 0))))
             except _SPEC_ERRORS as exc:
                 self._bad(f"bad job spec #{i}: {exc}")
                 return
         svc = self.dse.client
         futs: list[ExploreFuture] = []
-        for job, method, settings, cands, priority in parsed:
+        for job, method, cands, priority in parsed:
             if cands is not None:
                 fut = svc.submit_values(job, cands, priority=priority)
                 self.dse.bump("values_posted")
             else:
-                fut = svc.submit(job, method, settings=settings,
-                                 priority=priority)
+                fut = svc.submit(job, method, priority=priority)
                 self.dse.bump("jobs_posted")
             self.dse.register(fut)
             futs.append(fut)

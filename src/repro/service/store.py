@@ -74,6 +74,8 @@ def serialize_result(r: ExploreResult) -> dict:
 
 
 def deserialize_result(rec: dict) -> ExploreResult:
+    """Rehydrate a :func:`serialize_result` record (``sa`` diagnostics
+    were dropped at serialization time, so they come back ``None``)."""
     return ExploreResult(
         config=AcceleratorConfig(**rec["config"]),
         macro=MacroSpec(**rec["macro"]),
@@ -110,6 +112,10 @@ class ResultStore:
     _ENV = object()                    # sentinel: read limits from env
 
     def __init__(self, root: str | None = None, ttl_s=_ENV, max_mb=_ENV):
+        """Open (lazily -- no I/O here) the store rooted at ``root``
+        (default: ``CIM_TUNER_RESULT_STORE``, else
+        ``~/.cache/cim-tuner/result-store``); see the class docstring for
+        the ``ttl_s`` / ``max_mb`` hygiene knobs."""
         self.root = root or os.environ.get("CIM_TUNER_RESULT_STORE") or \
             os.path.join(os.path.expanduser("~"), ".cache", "cim-tuner",
                          "result-store")
@@ -168,6 +174,9 @@ class ResultStore:
         return payload
 
     def get(self, key: str) -> ExploreResult | None:
+        """The stored result for a canonical job key, or ``None`` on any
+        kind of miss (absent, expired, corrupt, schema-mismatched); hits
+        are tagged ``search["cache"] = "store"`` and refresh recency."""
         payload = self.get_raw(key)
         if payload is None:
             return None
@@ -181,6 +190,10 @@ class ResultStore:
         return out
 
     def put(self, key: str, result: ExploreResult) -> None:
+        """Persist one result under its canonical key (atomic publish via
+        ``os.replace``; write failures degrade to a no-op so read-only
+        filesystems never break exploration), then enforce the size cap.
+        """
         rec = {"schema": STORE_SCHEMA, "key": key,
                "created_s": time.time(),
                "result": serialize_result(result)}
@@ -248,6 +261,7 @@ class ResultStore:
             time.time() - rec.get("created_s", 0.0) <= self.ttl_s
 
     def keys(self) -> list[str]:
+        """Every record key currently on disk, sorted within shards."""
         out = []
         if not os.path.isdir(self.root):
             return out
@@ -260,6 +274,7 @@ class ResultStore:
         return out
 
     def clear(self) -> int:
+        """Remove every record; returns how many were deleted."""
         n = 0
         for key in self.keys():
             try:
@@ -286,6 +301,9 @@ class RemoteStoreTier:
     def __init__(self, base_url: str,
                  local: "ResultStore | None" = None,
                  timeout_s: float = 10.0):
+        """Tier over the server at ``base_url`` with an optional
+        ``local`` write-back store; ``timeout_s`` bounds each remote GET.
+        """
         self.base_url = base_url.rstrip("/")
         self.local = local
         self.timeout_s = float(timeout_s)
@@ -298,6 +316,9 @@ class RemoteStoreTier:
             self.stats[counter] += 1
 
     def get(self, key: str) -> ExploreResult | None:
+        """Read-through lookup: local tier, then ``GET /v1/store/<key>``
+        (remote hits are written back locally; remote errors read as
+        misses so a down server degrades to plain submission)."""
         if self.local is not None:
             out = self.local.get(key)
             if out is not None:
@@ -319,6 +340,8 @@ class RemoteStoreTier:
         return out
 
     def put(self, key: str, result: ExploreResult) -> None:
+        """Write the LOCAL tier only -- the server is the shared store's
+        sole writer (its own queue persists every engine result)."""
         if self.local is not None:
             self.local.put(key, result)
         self._bump("puts")

@@ -1,13 +1,15 @@
 """Hypothesis property: the portfolio racer never returns worse than its
-best constituent's result on the same seed.
+best constituent's result on the same seed -- under EITHER budget
+allocator (UCB bandit or fixed-rung halving).
 
 Every race run is bit-reproducible standalone (constituent settings +
 derived seeds come deterministically from the portfolio settings via
-``race_plan``), and the racer reports the min across all phases -- so for
-any seed/budget the portfolio's best raw objective must be <= every
-constituent's rung-0 best.  Seeds are normalized out of the engine's
-executable cache key, so the sweep re-uses one compile per (backend,
-budget) and only the RNG inputs vary.
+``race_plan`` / ``bandit_pull_plan``; the bandit's initialization pulls
+ARE halving's rung 0), and the racer reports the min across all phases --
+so for any seed/budget/allocator the portfolio's best raw objective must
+be <= every constituent's rung-0 best.  Seeds are normalized out of the
+engine's executable cache key, so the sweep re-uses one compile per
+(backend, budget) and only the RNG inputs vary.
 """
 import pytest
 
@@ -38,12 +40,14 @@ ENGINE = ExplorationEngine()
 @hyp_settings(max_examples=8, deadline=None)
 @given(seed=st.integers(0, 1_000_000),
        total_evals=st.sampled_from([800, 1600]),
-       objective=st.sampled_from(["ee", "th"]))
+       objective=st.sampled_from(["ee", "th"]),
+       allocator=st.sampled_from(["bandit", "halving"]))
 def test_portfolio_never_worse_than_best_constituent(
-        seed, total_evals, objective):
+        seed, total_evals, objective, allocator):
     job = ExploreJob(MACRO, bert_large_workload(), 3.0,
                      objective=objective, space=SMALL)
-    pf_settings = PortfolioSettings(total_evals=total_evals, seed=seed)
+    pf_settings = PortfolioSettings(total_evals=total_evals, seed=seed,
+                                    allocator=allocator)
     pf = ENGINE.run([job], method="portfolio", settings=pf_settings)[0]
     pf_best = float(pf.sa.best_value)
 

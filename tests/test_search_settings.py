@@ -1,0 +1,353 @@
+"""Per-job backend settings end-to-end + the bandit budget allocator.
+
+Covers the PR-5 tentpole surface: JSON job specs carrying per-job
+``"search"`` settings (structured form and the legacy top-level
+``"settings"``) round-trip through specs and the HTTP server with
+``job_key`` parity, one engine batch mixes allocators, the bandit
+allocator mirrors the halving dominance guarantees, and a forced
+2-CPU-device subprocess proves the device-raced portfolio matches the
+single-device path bit-for-bit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DesignSpace,
+    ExplorationEngine,
+    ExploreJob,
+    bert_large_workload,
+    job_key,
+)
+from repro.core.macro import TPDCIM_MACRO
+from repro.search import (
+    GASettings,
+    PortfolioSettings,
+    SobolSettings,
+    bandit_pull_plan,
+    race_plan,
+)
+from repro.service import (
+    ServiceClient,
+    job_from_spec,
+    job_to_spec,
+    merge_spec_settings,
+)
+from repro.service.queue import resolve_settings
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SMALL = DesignSpace(mr=(1, 2, 3), mc=(1, 2), scr=(1, 4, 16),
+                    is_kb=(2, 16, 128), os_kb=(2, 16, 64))
+SMALL_SPEC = {"mr": [1, 2, 3], "mc": [1, 2], "scr": [1, 4, 16],
+              "is_kb": [2, 16, 128], "os_kb": [2, 16, 64]}
+
+
+def _job(method="sa", settings=None, objective="ee"):
+    return ExploreJob(TPDCIM_MACRO, bert_large_workload(), 2.23,
+                      objective=objective, space=SMALL,
+                      search_method=method, search_settings=settings)
+
+
+# ------------------------------------------------------------------ #
+# spec round-trips
+# ------------------------------------------------------------------ #
+def test_structured_search_spec_roundtrips_with_key_parity():
+    """JSON spec (structured "search" form) -> job -> spec -> job keeps
+    the canonical job_key bit-for-bit, including the settings."""
+    spec = {"macro": "tpdcim-macro", "workload": "bert-large",
+            "area_budget_mm2": 2.23, "space": SMALL_SPEC,
+            "search": {"method": "genetic",
+                       "settings": {"pop": 24, "generations": 40,
+                                    "seed": 7}}}
+    job, method = job_from_spec(spec)
+    assert method == "genetic"
+    assert job.search_settings == GASettings(pop=24, generations=40, seed=7)
+    wire = json.loads(json.dumps(job_to_spec(job)))
+    assert wire["search"]["settings"]["pop"] == 24
+    back, method2 = job_from_spec(wire)
+    assert method2 == "genetic"
+    assert back.search_settings == job.search_settings
+    assert job_key(back) == job_key(job)
+    # ... and equals the explicit-settings spelling of the same query
+    assert job_key(back) == job_key(
+        _job("genetic"), "genetic",
+        GASettings(pop=24, generations=40, seed=7))
+
+
+def test_legacy_top_level_settings_and_structured_form_share_a_key():
+    base = {"macro": "tpdcim-macro", "workload": "bert-large",
+            "area_budget_mm2": 2.23, "space": SMALL_SPEC}
+    legacy, _ = job_from_spec(
+        {**base, "search": "sobol", "settings": {"n_points": 64}})
+    structured, _ = job_from_spec(
+        {**base, "search": {"method": "sobol",
+                            "settings": {"n_points": 64}}})
+    assert legacy.search_settings == SobolSettings(n_points=64)
+    assert job_key(legacy) == job_key(structured)
+
+
+def test_allocator_key_is_portfolio_settings_sugar():
+    base = {"macro": "tpdcim-macro", "workload": "bert-large",
+            "area_budget_mm2": 2.23, "space": SMALL_SPEC}
+    sugar, _ = job_from_spec(
+        {**base, "search": {"method": "portfolio", "allocator": "halving",
+                            "settings": {"total_evals": 2000}}})
+    explicit, _ = job_from_spec(
+        {**base, "search": {"method": "portfolio",
+                            "settings": {"total_evals": 2000,
+                                         "allocator": "halving"}}})
+    assert sugar.search_settings == \
+        PortfolioSettings(total_evals=2000, allocator="halving")
+    assert job_key(sugar) == job_key(explicit)
+    # distinct allocators must never share a key (or a store record)
+    bandit, _ = job_from_spec(
+        {**base, "search": {"method": "portfolio", "allocator": "bandit",
+                            "settings": {"total_evals": 2000}}})
+    assert job_key(sugar) != job_key(bandit)
+
+
+def test_bad_search_specs_rejected():
+    base = {"macro": "tpdcim-macro", "workload": "bert-large",
+            "area_budget_mm2": 2.23}
+    with pytest.raises(ValueError, match="unknown 'search' keys"):
+        job_from_spec({**base, "search": {"method": "sa", "nope": 1}})
+    with pytest.raises(ValueError, match="both top-level and inside"):
+        job_from_spec({**base,
+                       "search": {"method": "sobol",
+                                  "settings": {"n_points": 8}},
+                       "settings": {"n_points": 16}})
+    with pytest.raises(ValueError, match="unknown search"):
+        job_from_spec({**base, "search": {"method": "nope"}})
+    with pytest.raises(ValueError, match="unknown PortfolioSettings"):
+        job_from_spec({**base, "search": "portfolio",
+                       "settings": {"allocators": "bandit"}})
+    with pytest.raises(ValueError, match="unknown portfolio allocator"):
+        ExplorationEngine().run(
+            [_job("portfolio",
+                  PortfolioSettings(total_evals=64, allocator="nope"))])
+
+
+def test_merge_spec_settings_both_spellings():
+    legacy = {"macro": "m", "workload": "w", "area_budget_mm2": 1,
+              "search": "sobol", "settings": {"n_points": 8}}
+    merged = merge_spec_settings(legacy, {"n_points": 32, "seed": 2})
+    assert merged["settings"] == {"n_points": 32, "seed": 2}
+    structured = {"macro": "m", "workload": "w", "area_budget_mm2": 1,
+                  "search": {"method": "portfolio", "allocator": "halving",
+                             "settings": {"total_evals": 100}}}
+    merged = merge_spec_settings(structured, {"allocator": "bandit"})
+    assert "allocator" not in merged["search"] or \
+        merged["search"].get("allocator") == "bandit"
+    assert merged["search"]["settings"]["allocator"] == "bandit"
+    assert merged["search"]["settings"]["total_evals"] == 100
+    # inputs are not mutated
+    assert structured["search"]["allocator"] == "halving"
+    # a spec ambiguous to job_from_spec is equally rejected here, not
+    # silently legitimized by the merge
+    ambiguous = {"macro": "m", "workload": "w", "area_budget_mm2": 1,
+                 "settings": {"n_points": 16},
+                 "search": {"method": "sobol",
+                            "settings": {"n_points": 64}}}
+    with pytest.raises(ValueError, match="both top-level and inside"):
+        merge_spec_settings(ambiguous, {"seed": 1})
+
+
+# ------------------------------------------------------------------ #
+# per-job settings through queue / engine (mixed batches)
+# ------------------------------------------------------------------ #
+def test_mixed_allocators_and_settings_in_one_batch():
+    """One run() with settings=None executes each job under its own
+    search_settings: bandit and halving portfolios side by side, plus a
+    custom-budget Sobol -- three distinct executable groups, three
+    distinct keys."""
+    engine = ExplorationEngine()
+    jobs = [
+        _job("portfolio", PortfolioSettings(total_evals=800, seed=2,
+                                            allocator="bandit")),
+        _job("portfolio", PortfolioSettings(total_evals=800, seed=2,
+                                            allocator="halving")),
+        _job("sobol", SobolSettings(n_points=64, seed=2)),
+    ]
+    keys = {job_key(j) for j in jobs}
+    assert len(keys) == 3
+    outs = engine.run(jobs)
+    assert outs[0].search["portfolio"]["allocator"] == "bandit"
+    assert outs[1].search["portfolio"]["allocator"] == "halving"
+    assert outs[2].search["method"] == "sobol"
+    # both allocators spend the same race budget across the same backends
+    assert outs[0].search["portfolio"]["race"].keys() == \
+        outs[1].search["portfolio"]["race"].keys()
+
+
+def test_per_job_settings_through_service_and_server(tmp_path):
+    """A spec batch mixing allocators round-trips the HTTP server with
+    client/server job_key parity (the cross-host store contract)."""
+    from repro.service.server import DSEServer, ServerConfig
+    from test_service import CountingStubEngine
+
+    srv = DSEServer(engine=CountingStubEngine(), store=None,
+                    config=ServerConfig(port=0)).start()
+    try:
+        specs = [
+            {"macro": "tpdcim-macro", "workload": "bert-large",
+             "area_budget_mm2": 2.23, "space": SMALL_SPEC,
+             "search": {"method": "portfolio", "allocator": alloc,
+                        "settings": {"total_evals": 500}}}
+            for alloc in ("bandit", "halving")
+        ]
+        cli = ServiceClient(base_url=srv.url, store=None)
+        try:
+            results = cli.explore_specs(specs)
+            assert len(results) == 2
+        finally:
+            cli.close()
+        # server-side canonical keys == a local client's computation
+        import urllib.request
+        for spec in specs:
+            job, method = job_from_spec(spec)
+            key = job_key(job, method, resolve_settings(method, job=job))
+            with urllib.request.urlopen(
+                    f"{srv.url}/v1/jobs/{key}", timeout=30) as resp:
+                state = json.loads(resp.read().decode())
+            assert state["status"] == "done", state
+    finally:
+        srv.shutdown()
+
+
+def test_engine_settings_override_beats_job_settings():
+    engine = ExplorationEngine()
+    job = _job("sobol", SobolSettings(n_points=16, seed=0))
+    out = engine.run([job], settings=SobolSettings(n_points=64, seed=0))[0]
+    assert out.sa.best_per_chain.shape[0] == 64
+    # and a method override with type-mismatched job settings falls back
+    # to the override backend's defaults instead of raising
+    out2 = engine.run([job], method="genetic",
+                      settings=GASettings(pop=8, generations=4))[0]
+    assert out2.search["method"] == "genetic"
+
+
+# ------------------------------------------------------------------ #
+# bandit dominance (mirrors the halving portfolio-dominance property)
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("allocator", ["bandit", "halving"])
+def test_allocator_dominance_over_constituent_rung0(allocator):
+    """Either allocator's portfolio never reports worse than any
+    constituent's initialization run at the same seed (init pulls ==
+    halving rung 0 == ``bandit_pull_plan(..., 0)``, bit-for-bit)."""
+    settings = PortfolioSettings(total_evals=2000, seed=11,
+                                 allocator=allocator)
+    engine = ExplorationEngine()
+    job = _job("portfolio")
+    pf = engine.run([job], method="portfolio", settings=settings)[0]
+    race = pf.search["portfolio"]["race"]
+    assert pf.search["portfolio"]["allocator"] == allocator
+    assert set(race) == set(settings.backends)
+    best = float(pf.sa.best_value)
+    assert best <= min(race.values()) + 1e-9
+    assert best <= pf.search["portfolio"]["final"] + 1e-9
+    assert float(np.min(np.asarray(pf.sa.best_per_chain))) == \
+        pytest.approx(best, rel=1e-12)
+
+    rung0 = race_plan(settings)[0]
+    for b_idx, name in enumerate(settings.backends):
+        assert bandit_pull_plan(settings, b_idx, 0) == rung0[name]
+        solo = engine.run([job], method=name, settings=rung0[name])[0]
+        assert best <= float(solo.sa.best_value) + 1e-9, name
+        assert race[name] <= float(solo.sa.best_value) + 1e-9, name
+
+
+def test_bandit_spends_exactly_the_halving_pull_budget():
+    """Budget parity: the bandit's pull count times its slice equals the
+    halving race budget, so the two allocators are eval-for-eval
+    comparable; the bandit replays deterministically."""
+    from repro.search import bandit_rounds, bandit_slice
+
+    settings = PortfolioSettings(total_evals=1600, seed=4)
+    engine = ExplorationEngine()
+    pf = engine.run([_job("portfolio")], method="portfolio",
+                    settings=settings)[0]
+    pulls = pf.search["portfolio"]["pulls"]
+    assert sum(pulls.values()) == bandit_rounds(settings)
+    assert all(p >= 1 for p in pulls.values())      # every arm initialized
+    assert bandit_rounds(settings) * bandit_slice(settings) <= \
+        int(settings.total_evals * settings.race_fraction)
+    again = engine.run([_job("portfolio")], method="portfolio",
+                       settings=settings)[0]
+    assert again.config.as_tuple() == pf.config.as_tuple()
+    assert float(again.sa.best_value) == float(pf.sa.best_value)
+    assert again.search["portfolio"]["pulls"] == pulls
+
+
+# ------------------------------------------------------------------ #
+# device racing (acceptance: forced multi-CPU-device race)
+# ------------------------------------------------------------------ #
+_DEVICE_RACE_SCRIPT = """
+import jax
+assert jax.device_count() == 2, jax.devices()
+from repro.core import DesignSpace, ExplorationEngine, ExploreJob, \\
+    bert_large_workload
+from repro.core.macro import TPDCIM_MACRO
+from repro.search import PortfolioSettings
+
+space = DesignSpace(mr=(1, 2, 3), mc=(1, 2), scr=(1, 4, 16),
+                    is_kb=(2, 16, 128), os_kb=(2, 16, 64))
+job = ExploreJob(TPDCIM_MACRO, bert_large_workload(), 2.23,
+                 objective="ee", space=space)
+s = PortfolioSettings(total_evals=800, seed=5)
+raced = ExplorationEngine().run([job], method="portfolio", settings=s)[0]
+assert raced.search["portfolio"]["devices"] == 2, raced.search
+single = ExplorationEngine(device_race=False).run(
+    [job], method="portfolio", settings=s)[0]
+assert single.search["portfolio"]["devices"] == 1
+assert raced.config.as_tuple() == single.config.as_tuple()
+assert float(raced.sa.best_value) == float(single.sa.best_value)
+print("DEVICE_RACE_OK", raced.config.as_tuple())
+"""
+
+
+def test_multi_device_portfolio_race_matches_single_device():
+    """With XLA forced to 2 host CPU devices, portfolio race waves shard
+    constituents across both devices and the result is bit-identical to
+    the single-device fallback (seeds derive from the plan, not the
+    placement)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    out = subprocess.run(
+        [sys.executable, "-c", _DEVICE_RACE_SCRIPT], env=env, cwd=REPO,
+        capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "DEVICE_RACE_OK" in out.stdout
+
+
+# ------------------------------------------------------------------ #
+# CLI --search-settings
+# ------------------------------------------------------------------ #
+def test_cli_search_settings_override(tmp_path, capsys):
+    from repro.service.__main__ import main
+
+    jobs_file = tmp_path / "jobs.json"
+    jobs_file.write_text(json.dumps([
+        {"macro": "tpdcim-macro", "workload": "bert-large",
+         "area_budget_mm2": 2.23, "space": SMALL_SPEC,
+         "search": "sobol"}]))
+    rc = main(["explore", str(jobs_file), "--no-store",
+               "--search-settings", '{"n_points": 64, "seed": 3}'])
+    assert rc == 0
+    assert "bert-large" in capsys.readouterr().out
+    # bad JSON fails fast with exit 2
+    rc = main(["explore", str(jobs_file), "--no-store",
+               "--search-settings", "{not json"])
+    assert rc == 2
+    # fields unknown to the (overridden) backend fail fast too
+    rc = main(["explore", str(jobs_file), "--no-store",
+               "--search", "genetic",
+               "--search-settings", '{"n_points": 64}'])
+    assert rc == 2

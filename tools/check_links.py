@@ -1,0 +1,109 @@
+#!/usr/bin/env python
+"""Markdown intra-repo link checker (stdlib only; the CI `docs` job).
+
+Scans the given markdown files/directories for inline links and images
+(``[text](target)``), reference definitions (``[ref]: target``) and bare
+relative targets, then fails (exit 1) when a non-external target does not
+resolve to an existing file/directory, or when a ``#fragment`` does not
+match any heading anchor in the target file (GitHub-style slugs).
+
+External schemes (http/https/mailto) are deliberately NOT fetched -- CI
+must stay hermetic and flake-free; this checker only guards the links we
+fully control.
+
+    python tools/check_links.py docs README.md ROADMAP.md
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# inline links/images: [text](target "title")  -- target up to ) or space
+_INLINE = re.compile(r"!?\[[^\]]*\]\(\s*<?([^)\s>]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+# reference definitions: [ref]: target
+_REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+<?(\S+?)>?\s*$", re.M)
+_HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$", re.M)
+_CODE_FENCE = re.compile(r"```.*?```", re.S)
+_INLINE_CODE = re.compile(r"`[^`\n]*`")
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://", "data:")
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug of a heading line."""
+    text = re.sub(r"[`*_]", "", heading)            # strip md emphasis
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)   # [t](url) -> t
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.replace(" ", "-")
+
+
+def _anchors(path: str) -> set[str]:
+    with open(path, encoding="utf-8") as f:
+        body = _CODE_FENCE.sub("", f.read())
+    return {_slug(m.group(2)) for m in _HEADING.finditer(body)}
+
+
+def _targets(body: str) -> list[str]:
+    body = _CODE_FENCE.sub("", body)
+    body = _INLINE_CODE.sub("", body)
+    return [m.group(1) for m in _INLINE.finditer(body)] + \
+        [m.group(1) for m in _REFDEF.finditer(body)]
+
+
+def check_file(md_path: str) -> list[str]:
+    """Broken-link messages for one markdown file (empty = clean)."""
+    errors = []
+    with open(md_path, encoding="utf-8") as f:
+        body = f.read()
+    base = os.path.dirname(os.path.abspath(md_path))
+    for target in _targets(body):
+        if target.startswith(_EXTERNAL):
+            continue
+        path, _, frag = target.partition("#")
+        if not path:                                   # same-file anchor
+            dest = os.path.abspath(md_path)
+        else:
+            dest = os.path.normpath(os.path.join(base, path))
+            if not os.path.exists(dest):
+                errors.append(f"{md_path}: broken link -> {target}")
+                continue
+        if frag and dest.endswith(".md") and os.path.isfile(dest):
+            if _slug(frag) not in _anchors(dest):
+                errors.append(
+                    f"{md_path}: missing anchor -> {target}")
+    return errors
+
+
+def collect(paths: list[str]) -> list[str]:
+    """Every .md file under the given files/directories, sorted."""
+    out = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, files in os.walk(p):
+                out.extend(os.path.join(root, f) for f in files
+                           if f.endswith(".md"))
+        elif p.endswith(".md"):
+            out.append(p)
+        else:
+            raise SystemExit(f"not a markdown file or directory: {p}")
+    return sorted(out)
+
+
+def main(argv: list[str]) -> int:
+    files = collect(argv or ["docs", "README.md", "ROADMAP.md"])
+    if not files:
+        print("no markdown files found", file=sys.stderr)
+        return 1
+    errors = []
+    for md in files:
+        errors.extend(check_file(md))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'FAIL (' + str(len(errors)) + ' broken)' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
