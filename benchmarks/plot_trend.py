@@ -71,22 +71,22 @@ def module_trend_lines(artifacts: list[dict]) -> list[str]:
     return out
 
 
+def _rows_of(a: dict) -> dict[str, float]:
+    out = {}
+    for rec in a["modules"].values():
+        for row in rec.get("rows", []):
+            if isinstance(row.get("us_per_call"), (int, float)) \
+                    and row["us_per_call"] > 0:
+                out[row["name"]] = row["us_per_call"]
+    return out
+
+
 def row_regression_lines(artifacts: list[dict], top: int = 10) -> list[str]:
     """Largest us_per_call ratios between the oldest and newest artifact."""
     if len(artifacts) < 2:
         return []
     old, new = artifacts[0], artifacts[-1]
-
-    def rows_of(a):
-        out = {}
-        for rec in a["modules"].values():
-            for row in rec.get("rows", []):
-                if isinstance(row.get("us_per_call"), (int, float)) \
-                        and row["us_per_call"] > 0:
-                    out[row["name"]] = row["us_per_call"]
-        return out
-
-    o, n = rows_of(old), rows_of(new)
+    o, n = _rows_of(old), _rows_of(new)
     shared = sorted(set(o) & set(n), key=lambda k: n[k] / o[k], reverse=True)
     if not shared:
         return []
@@ -95,6 +95,38 @@ def row_regression_lines(artifacts: list[dict], top: int = 10) -> list[str]:
         out.append(f"  {k:40} {o[k]:12.1f} -> {n[k]:12.1f} us  "
                    f"x{n[k] / o[k]:.2f}")
     return out
+
+
+def regression_gate(artifacts: list[dict],
+                    threshold: float) -> tuple[list[str], list[str]]:
+    """The nightly regression gate: a full per-row delta table between the
+    oldest and newest artifact (markdown, for the CI job summary) plus the
+    rows whose ``us_per_call`` ratio breaches ``threshold`` (the job fails
+    when any do).  Rows present in only one artifact are reported but
+    never gate -- module sets change across PRs."""
+    if len(artifacts) < 2:
+        return [], []
+    old, new = artifacts[0], artifacts[-1]
+    o, n = _rows_of(old), _rows_of(new)
+    table = [f"| row | {old['label']} (us) | {new['label']} (us) "
+             "| ratio | status |",
+             "|---|---:|---:|---:|---|"]
+    breaches: list[str] = []
+    for k in sorted(set(o) | set(n)):
+        if k in o and k in n:
+            ratio = n[k] / o[k]
+            bad = ratio > threshold
+            status = f"REGRESSED (> x{threshold:g})" if bad else "ok"
+            table.append(f"| {k} | {o[k]:.1f} | {n[k]:.1f} "
+                         f"| x{ratio:.2f} | {status} |")
+            if bad:
+                breaches.append(f"{k}: {o[k]:.1f} -> {n[k]:.1f} us "
+                                f"(x{ratio:.2f} > x{threshold:g})")
+        elif k in n:
+            table.append(f"| {k} | - | {n[k]:.1f} | - | new |")
+        else:
+            table.append(f"| {k} | {o[k]:.1f} | - | - | removed |")
+    return table, breaches
 
 
 def maybe_plot(artifacts: list[dict], path: str) -> bool:
@@ -128,6 +160,14 @@ def main(argv: list[str] | None = None) -> int:
                     help="also render a timing-trend plot")
     ap.add_argument("--top", type=int, default=10,
                     help="row-level regressions to show")
+    ap.add_argument("--fail-threshold", type=float, default=None,
+                    metavar="RATIO",
+                    help="exit 1 when any shared row's us_per_call ratio "
+                         "(newest / oldest) exceeds RATIO; prints the "
+                         "full per-row delta table (markdown)")
+    ap.add_argument("--summary", default=None, metavar="MD",
+                    help="with --fail-threshold: also write the markdown "
+                         "delta table to this file (for CI job summaries)")
     args = ap.parse_args(argv)
 
     artifacts = sorted((load_artifact(p) for p in args.files),
@@ -139,9 +179,25 @@ def main(argv: list[str] | None = None) -> int:
         print()
         for line in reg:
             print(line)
+    breaches: list[str] = []
+    if args.fail_threshold is not None:
+        table, breaches = regression_gate(artifacts, args.fail_threshold)
+        if table:
+            print()
+            for line in table:
+                print(line)
+        if args.summary and table:
+            verdict = (f"{len(breaches)} row(s) beyond x"
+                       f"{args.fail_threshold:g}" if breaches
+                       else f"no row beyond x{args.fail_threshold:g}")
+            with open(args.summary, "w") as f:
+                f.write(f"## Benchmark trend gate: {verdict}\n\n")
+                f.write("\n".join(table) + "\n")
+        for b in breaches:
+            print(f"REGRESSION: {b}", file=sys.stderr)
     if args.plot and maybe_plot(artifacts, args.plot):
         print(f"\nwrote {args.plot}")
-    return 0
+    return 1 if breaches else 0
 
 
 if __name__ == "__main__":

@@ -58,6 +58,11 @@ def main() -> None:
         # must land before any bench module builds the default service
         os.environ["CIM_TUNER_SERVICE_URL"] = args.service_url
 
+    # per-module registry deltas land in each record as "metrics" --
+    # compile/run seconds, cache hits, queue traffic -- so trend artifacts
+    # carry the telemetry the run produced, not just wall-clock
+    from repro import obs
+
     records = []
     failures = 0
     t_all = time.perf_counter()
@@ -66,6 +71,7 @@ def main() -> None:
             continue
         print(f"# === {mod_name}: {title} ===", flush=True)
         rec = {"module": mod_name, "title": title, "rows": []}
+        snap0 = obs.registry().snapshot()
         t0 = time.perf_counter()
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
@@ -82,6 +88,11 @@ def main() -> None:
             rec["error"] = traceback.format_exc()
             print(f"# {mod_name} FAILED:\n{rec['error']}", flush=True)
         rec["elapsed_s"] = round(time.perf_counter() - t0, 3)
+        snap1 = obs.registry().snapshot()
+        rec["metrics"] = {
+            k: round(v - snap0.get(k, 0.0), 6)
+            for k, v in snap1.items()
+            if "_bucket" not in k and v != snap0.get(k, 0.0)}
         records.append(rec)
 
     total_s = time.perf_counter() - t_all

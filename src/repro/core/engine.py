@@ -54,6 +54,7 @@ import dataclasses
 import hashlib
 import json
 import os
+import threading
 import time
 import typing
 
@@ -61,6 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import cost_model
 from repro.core.annealing import SASettings, _axes_matrix
 from repro.core.calibration import DEFAULT_TECH, TechConstants
@@ -81,6 +83,38 @@ __all__ = [
     "preferred_settings",
     "valid_methods",
 ]
+
+
+# --------------------------------------------------------------------- #
+# telemetry families (process-wide; see docs/observability.md)
+# --------------------------------------------------------------------- #
+_REG = obs.registry()
+_LOG = obs.get_logger("engine")
+_M_JOBS = _REG.counter(
+    "cim_engine_jobs_total", "Jobs submitted to ExplorationEngine.run")
+_M_BATCHES = _REG.counter(
+    "cim_engine_batches_total", "Batched executable dispatches")
+_M_DEDUP = _REG.counter(
+    "cim_engine_dedup_hits_total",
+    "In-batch duplicate jobs folded into one evaluation")
+_M_EXEC = _REG.counter(
+    "cim_engine_executable_cache_events_total",
+    "Executable-cache lookups by outcome", ("outcome",))
+_M_RACE = _REG.counter(
+    "cim_engine_device_race_dispatches_total",
+    "Portfolio waves placed on a non-default device")
+_M_RUN_S = _REG.histogram(
+    "cim_engine_run_seconds", "Wall-clock of ExplorationEngine.run calls")
+_M_COMPILE_S = _REG.histogram(
+    "cim_engine_compile_seconds",
+    "First-call (trace + XLA compile) latency per cached executable")
+_M_PULLS = _REG.counter(
+    "cim_search_pulls_total",
+    "Portfolio pulls granted per backend by the budget allocator",
+    ("backend", "allocator"))
+_M_RUNGS = _REG.counter(
+    "cim_search_rungs_total",
+    "Portfolio race rungs / bandit waves executed", ("allocator",))
 
 
 # --------------------------------------------------------------------- #
@@ -383,11 +417,16 @@ class ExplorationEngine:
         self._use_cache = bool(executable_cache)
         self._device_race = bool(device_race)
         self._executables: dict = {}
-        self.stats = {
-            "jobs": 0, "batches": 0, "dedup_hits": 0,
-            "executable_cache_hits": 0, "executable_cache_misses": 0,
-            "device_race_dispatches": 0,
-        }
+        # legacy-shaped per-instance counters mirrored into the
+        # process-wide registry (the /v1/metrics families above)
+        self.stats = obs.StatCounters({
+            "jobs": _M_JOBS.labels(),
+            "batches": _M_BATCHES.labels(),
+            "dedup_hits": _M_DEDUP.labels(),
+            "executable_cache_hits": _M_EXEC.labels(outcome="hit"),
+            "executable_cache_misses": _M_EXEC.labels(outcome="miss"),
+            "device_race_dispatches": _M_RACE.labels(),
+        })
         if persistent_compile_cache:
             enable_persistent_compilation_cache()
 
@@ -396,7 +435,7 @@ class ExplorationEngine:
         the run counters plus the live executable-cache size and the active
         persistent compile-cache directory."""
         return {
-            **self.stats,
+            **self.stats.snapshot(),
             "executable_cache_size": len(self._executables),
             "persistent_compile_cache": _persistent_cache_dir,
         }
@@ -404,15 +443,40 @@ class ExplorationEngine:
     # ------------------------------------------------------------- #
     # executable cache
     # ------------------------------------------------------------- #
+    @staticmethod
+    def _time_first_call(fn, label: str):
+        """Wrap a fresh ``jax.jit`` executable so its FIRST invocation --
+        where the lazy trace + XLA compile actually happen -- is recorded
+        as an ``engine.compile`` span and a ``cim_engine_compile_seconds``
+        observation; later calls pass straight through."""
+        state = {"first": True}
+        lock = threading.Lock()
+
+        def wrapper(*a, **kw):
+            with lock:
+                first, state["first"] = state["first"], False
+            if first:
+                t0 = time.perf_counter()
+                with obs.span("engine.compile", histogram=_M_COMPILE_S,
+                              executable=label):
+                    out = fn(*a, **kw)
+                _LOG.debug("compiled %s in %.2fs", label,
+                           time.perf_counter() - t0)
+                return out
+            return fn(*a, **kw)
+
+        return wrapper
+
     def _cached(self, key, build):
+        label = str(key[:2])
         if not self._use_cache:
-            self.stats["executable_cache_misses"] += 1
-            return build()
+            self.stats.bump("executable_cache_misses")
+            return self._time_first_call(build(), label)
         hit = key in self._executables
-        self.stats["executable_cache_hits" if hit else
-                   "executable_cache_misses"] += 1
+        self.stats.bump("executable_cache_hits" if hit else
+                        "executable_cache_misses")
         if not hit:
-            self._executables[key] = build()
+            self._executables[key] = self._time_first_call(build(), label)
         return self._executables[key]
 
     def _search_executable(self, backend, ops_pad: int, axes_pad: int,
@@ -547,32 +611,40 @@ class ExplorationEngine:
         unique: list[int] = []
         for i, k in enumerate(keys):
             if k in first_of:
-                self.stats["dedup_hits"] += 1
+                self.stats.bump("dedup_hits")
             else:
                 first_of[k] = i
                 unique.append(i)
 
         prepared = {i: self._prepare(jobs[i]) for i in unique}
-        self.stats["jobs"] += len(jobs)
+        self.stats.bump("jobs", len(jobs))
 
         results: list[ExploreResult | None] = [None] * len(jobs)
-        for (bucket, group_settings), members in self._buckets(
-                [(i, prepared[i]) for i in unique], methods, eff).items():
-            m = bucket[0]
-            idxs = [i for i, _ in members]
-            batch = [p for _, p in members]
-            self.stats["batches"] += 1
-            if m == "exhaustive":
-                outs = self._run_exhaustive_batch(batch)
-            else:
-                backend = get_backend(m)
-                if backend.composite:
-                    outs = self._run_portfolio_batch(batch, group_settings)
-                else:
-                    outs = self._run_search_batch(batch, backend,
-                                                  group_settings)
-            for i, out in zip(idxs, outs):
-                results[i] = out
+        with obs.span("engine.run", histogram=_M_RUN_S,
+                      jobs=len(jobs), unique=len(unique)):
+            for (bucket, group_settings), members in self._buckets(
+                    [(i, prepared[i]) for i in unique], methods, eff).items():
+                m = bucket[0]
+                idxs = [i for i, _ in members]
+                batch = [p for _, p in members]
+                self.stats.bump("batches")
+                _LOG.debug("batch method=%s jobs=%d bucket=%s",
+                           m, len(idxs), bucket)
+                with obs.span("engine.batch", method=m, jobs=len(idxs),
+                              bucket=str(bucket)):
+                    if m == "exhaustive":
+                        outs = self._run_exhaustive_batch(batch)
+                    else:
+                        backend = get_backend(m)
+                        if backend.composite:
+                            outs = self._run_portfolio_batch(
+                                batch, group_settings,
+                                job_keys=[keys[i] for i in idxs])
+                        else:
+                            outs = self._run_search_batch(batch, backend,
+                                                          group_settings)
+                for i, out in zip(idxs, outs):
+                    results[i] = out
         for i, k in enumerate(keys):
             if results[i] is None:
                 results[i] = clone_result(results[first_of[k]])
@@ -684,7 +756,7 @@ class ExplorationEngine:
                     jnp.asarray(keys))
         if device is not None:
             operands = jax.device_put(operands, device)
-            self.stats["device_race_dispatches"] += 1
+            self.stats.bump("device_race_dispatches")
         return fn(*operands)
 
     def _dispatch_backend(
@@ -756,10 +828,15 @@ class ExplorationEngine:
 
     def _run_portfolio_batch(
         self, batch: list[_PreparedJob], settings,
+        job_keys: typing.Sequence[str] | None = None,
     ) -> list[ExploreResult]:
         """Race the constituent backends per job under the settings'
         budget allocator, then spend the remaining budget on each job's
         winner.  The reported best is the min across every phase.
+        ``job_keys`` (aligned 1:1 with ``batch``) enables per-rung
+        progress events on :func:`repro.obs.progress_bus` -- one event
+        per job per race wave plus a ``phase="final"`` event -- so SSE
+        clients watch the race converge.
 
         ``allocator="bandit"``: after one initialization pull per backend
         (identical to halving's rung 0), each adaptive pull goes to the
@@ -788,6 +865,8 @@ class ExplorationEngine:
         names = settings.backends
         n_jobs, n_back = len(batch), len(names)
         devices = self._race_devices()
+        n_devices = sum(d is not None for d in devices) or 1
+        bus = obs.progress_bus()
         best_val = np.full(n_jobs, np.inf)
         best_idx = np.zeros((n_jobs, 5), dtype=np.int64)
         per_backend = np.full((n_jobs, n_back), np.inf)
@@ -834,17 +913,50 @@ class ExplorationEngine:
             return out
 
         pulls = np.zeros((n_jobs, n_back), dtype=np.int64)
+
+        def _record_pull(j: int, b_idx: int) -> None:
+            """Bookkeeping shared by every phase: the per-(job, backend)
+            pull counter plus the process-wide pull family."""
+            pulls[j, b_idx] += 1
+            _M_PULLS.inc(backend=names[b_idx],
+                         allocator=settings.allocator)
+
+        def _fin(v: float) -> float | None:
+            return float(v) if np.isfinite(v) else None
+
+        def _publish(phase: str, rung: int,
+                     jobs_touched: typing.Iterable[int]) -> None:
+            """One progress event per touched job after a race wave (the
+            SSE ``progress`` payload; no-op when the caller didn't pass
+            ``job_keys``)."""
+            if job_keys is None:
+                return
+            for j in jobs_touched:
+                bus.publish(
+                    job_keys[j], phase=phase, allocator=settings.allocator,
+                    rung=rung, best=_fin(best_val[j]),
+                    backend_best={name: _fin(per_backend[j, b])
+                                  for b, name in enumerate(names)},
+                    pulls={name: int(pulls[j, b])
+                           for b, name in enumerate(names)},
+                    devices=n_devices)
+
         if settings.allocator == "halving":
             alive = np.ones((n_jobs, n_back), dtype=bool)
-            for rung in race_plan(settings):
-                handles = [
-                    _launch(b_idx, rung[name],
-                            [j for j in range(n_jobs) if alive[j, b_idx]])
-                    for b_idx, name in enumerate(names)]
-                for h in handles:
-                    if h is not None:
-                        for j in _collect(h):
-                            pulls[j, h[0]] += 1      # bookkeeping only
+            for rung_no, rung in enumerate(race_plan(settings)):
+                _M_RUNGS.inc(allocator="halving")
+                with obs.span("engine.portfolio.rung", allocator="halving",
+                              rung=rung_no, jobs=n_jobs):
+                    handles = [
+                        _launch(b_idx, rung[name],
+                                [j for j in range(n_jobs)
+                                 if alive[j, b_idx]])
+                        for b_idx, name in enumerate(names)]
+                    for h in handles:
+                        if h is not None:
+                            for j in _collect(h):
+                                _record_pull(j, h[0])
+                _publish("race", rung_no, range(n_jobs))
                 # cull: each job keeps its best ceil(k/2) survivors
                 for j in range(n_jobs):
                     live = np.flatnonzero(alive[j])
@@ -855,52 +967,76 @@ class ExplorationEngine:
         else:                                          # "bandit"
             sum_reward = np.zeros((n_jobs, n_back))
             # init wave: one pull per backend for every job (== rung 0)
+            _M_RUNGS.inc(allocator="bandit")
             prev = best_val.copy()
-            handles = [
-                _launch(b_idx, bandit_pull_plan(settings, b_idx, 0),
-                        list(range(n_jobs)))
-                for b_idx in range(n_back)]
-            for h in handles:
-                for j, (_v, r) in _collect(h, prev).items():
-                    sum_reward[j, h[0]] += r
-                    pulls[j, h[0]] += 1
+            with obs.span("engine.portfolio.rung", allocator="bandit",
+                          rung=0, jobs=n_jobs):
+                handles = [
+                    _launch(b_idx, bandit_pull_plan(settings, b_idx, 0),
+                            list(range(n_jobs)))
+                    for b_idx in range(n_back)]
+                for h in handles:
+                    for j, (_v, r) in _collect(h, prev).items():
+                        sum_reward[j, h[0]] += r
+                        _record_pull(j, h[0])
+            _publish("race", 0, range(n_jobs))
             # adaptive pulls: per-job UCB argmax (stable: ties resolve to
             # the lower backend index, so the schedule is deterministic)
-            for _ in range(bandit_rounds(settings) - n_back):
+            for wave in range(bandit_rounds(settings) - n_back):
+                _M_RUNGS.inc(allocator="bandit")
                 scores = ucb_scores(
                     sum_reward / np.maximum(pulls, 1), pulls,
                     settings.ucb_c)
                 choice = np.argmax(scores, axis=1)
                 prev = best_val.copy()
-                handles = []
-                for b_idx in range(n_back):
-                    sel = [j for j in range(n_jobs) if choice[j] == b_idx]
-                    if not sel:
-                        continue
-                    handles.append(_launch(
-                        b_idx, bandit_pull_plan(settings, b_idx, 0), sel,
-                        seed_rows=[derived_seed(settings.seed, b_idx,
-                                                int(pulls[j, b_idx]))
-                                   for j in sel]))
-                for h in handles:
-                    for j, (_v, r) in _collect(h, prev).items():
-                        sum_reward[j, h[0]] += r
-                        pulls[j, h[0]] += 1
+                touched: set[int] = set()
+                with obs.span("engine.portfolio.rung", allocator="bandit",
+                              rung=wave + 1, jobs=n_jobs):
+                    handles = []
+                    for b_idx in range(n_back):
+                        sel = [j for j in range(n_jobs)
+                               if choice[j] == b_idx]
+                        if not sel:
+                            continue
+                        handles.append(_launch(
+                            b_idx, bandit_pull_plan(settings, b_idx, 0),
+                            sel,
+                            seed_rows=[derived_seed(settings.seed, b_idx,
+                                                    int(pulls[j, b_idx]))
+                                       for j in sel]))
+                    for h in handles:
+                        for j, (_v, r) in _collect(h, prev).items():
+                            sum_reward[j, h[0]] += r
+                            _record_pull(j, h[0])
+                            touched.add(j)
+                _publish("race", wave + 1, sorted(touched))
 
         # exploitation: the per-job winner gets the remaining budget
         # (kept out of per_backend so `race` stays race-phase-only)
         winners = per_backend.argmin(axis=1)
         final = final_plan(settings)
         final_best = np.full(n_jobs, np.inf)
-        handles = [
-            _launch(b_idx, final[name],
-                    [j for j in range(n_jobs) if winners[j] == b_idx])
-            for b_idx, name in enumerate(names)]
-        for h in handles:
-            if h is None:
-                continue
-            for j, (v, _r) in _collect(h, fold_race=False).items():
-                final_best[j] = v
+        with obs.span("engine.portfolio.final", allocator=settings.allocator,
+                      jobs=n_jobs):
+            handles = [
+                _launch(b_idx, final[name],
+                        [j for j in range(n_jobs) if winners[j] == b_idx])
+                for b_idx, name in enumerate(names)]
+            for h in handles:
+                if h is None:
+                    continue
+                for j, (v, _r) in _collect(h, fold_race=False).items():
+                    final_best[j] = v
+        if job_keys is not None:
+            for j in range(n_jobs):
+                bus.publish(
+                    job_keys[j], phase="final",
+                    allocator=settings.allocator,
+                    winner=names[int(winners[j])], best=_fin(best_val[j]),
+                    final=_fin(final_best[j]),
+                    pulls={name: int(pulls[j, b])
+                           for b, name in enumerate(names)},
+                    devices=n_devices)
 
         results = []
         for j, p in enumerate(batch):

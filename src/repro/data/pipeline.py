@@ -106,10 +106,16 @@ def make_batch_iterator(stream, mesh: Mesh, start_step: int = 0,
 
     def producer():
         step = start_step
+        pending = None
         while not stop.is_set():
-            try:
-                q.put(stream.global_batch_at(step), timeout=0.5)
+            if pending is None:
+                # build the batch once; a full queue must not re-build it
+                # on every put retry
+                pending = stream.global_batch_at(step)
                 step += 1
+            try:
+                q.put(pending, timeout=0.5)
+                pending = None
             except queue.Full:
                 continue
 
@@ -120,3 +126,4 @@ def make_batch_iterator(stream, mesh: Mesh, start_step: int = 0,
             yield shard_batch(q.get(), mesh)
     finally:
         stop.set()
+        th.join(timeout=2.0)

@@ -1,0 +1,47 @@
+"""Unified telemetry: metrics registry, span tracer, logging, progress.
+
+One stdlib-only subsystem behind every counter, latency histogram, trace
+span, log line and SSE progress event in the DSE stack::
+
+    from repro import obs
+
+    REQS = obs.registry().counter("cim_http_requests_total", "...",
+                                  ("endpoint", "method"))
+    with obs.span("engine.compile", bucket=str(key)):
+        ...
+    obs.get_logger("server").debug("GET /v1/stats 200")
+    obs.progress_bus().publish(job_key, phase="race", rung=1, best=2.4)
+
+See ``docs/observability.md`` for the metric catalog and span names.
+"""
+from repro.obs.events import ProgressBus, progress_bus
+from repro.obs.log import configure_logging, get_logger
+from repro.obs.metrics import (
+    DEFAULT_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    Registry,
+    StatCounters,
+    registry,
+)
+from repro.obs.trace import Span, Tracer, chrome_trace, span, tracer
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "Registry",
+    "StatCounters",
+    "registry",
+    "DEFAULT_BUCKETS",
+    "Span",
+    "Tracer",
+    "tracer",
+    "span",
+    "chrome_trace",
+    "configure_logging",
+    "get_logger",
+    "ProgressBus",
+    "progress_bus",
+]

@@ -7,6 +7,7 @@
     python -m repro.service stats --url http://host:8731
     python -m repro.service store --info
     python -m repro.service store --clear
+    python -m repro.service trace --export chrome -o trace.json
 
 ``jobs.json`` is a list of job specs (see
 :func:`repro.service.client.job_from_spec`)::
@@ -150,6 +151,54 @@ def _cmd_stats(args) -> int:
     return 0
 
 
+def _cmd_trace(args) -> int:
+    from repro import obs
+
+    events: list = []
+    if args.url or (not args.input and os.environ.get(
+            "CIM_TUNER_SERVICE_URL") and not os.environ.get(
+            "CIM_TUNER_TRACE")):
+        # live ring buffer of a running serve instance
+        import urllib.request
+        url = (args.url or os.environ["CIM_TUNER_SERVICE_URL"]).rstrip("/")
+        with urllib.request.urlopen(f"{url}/v1/trace", timeout=30) as resp:
+            doc = json.loads(resp.read().decode("utf-8"))
+        events = doc.get("traceEvents", [])
+    else:
+        path = args.input or os.environ.get("CIM_TUNER_TRACE")
+        if not path:
+            print("error: no trace source -- pass --input FILE / --url URL "
+                  "or set CIM_TUNER_TRACE", file=sys.stderr)
+            return 2
+        try:
+            with open(path) as f:
+                for line in f:
+                    line = line.strip()
+                    if line:
+                        events.append(json.loads(line))
+        except (OSError, ValueError) as exc:
+            print(f"error: cannot read trace {path!r}: {exc}",
+                  file=sys.stderr)
+            return 2
+
+    if args.export == "chrome":
+        out = args.output or "trace.json"
+        with open(out, "w") as f:
+            json.dump(obs.chrome_trace(events), f)
+        print(f"wrote {len(events)} spans to {out} "
+              f"(load in Perfetto / chrome://tracing)")
+    else:                                              # jsonl
+        stream = open(args.output, "w") if args.output else sys.stdout
+        try:
+            for ev in events:
+                stream.write(json.dumps(ev) + "\n")
+        finally:
+            if args.output:
+                stream.close()
+                print(f"wrote {len(events)} spans to {args.output}")
+    return 0
+
+
 def _cmd_store(args) -> int:
     from repro.service import default_store
 
@@ -223,7 +272,27 @@ def main(argv: list[str] | None = None) -> int:
     so.add_argument("--clear", action="store_true")
     so.set_defaults(fn=_cmd_store)
 
+    tr = sub.add_parser(
+        "trace", help="export the span trace buffer "
+                      "(Chrome trace_event / JSONL)")
+    tr.add_argument("--input", default=None, metavar="FILE",
+                    help="JSONL trace file written via CIM_TUNER_TRACE "
+                         "(default: $CIM_TUNER_TRACE)")
+    tr.add_argument("--url", default=None, metavar="URL",
+                    help="fetch the live ring buffer from a running "
+                         "serve instance (GET /v1/trace)")
+    tr.add_argument("--export", choices=("chrome", "jsonl"),
+                    default="chrome",
+                    help="chrome: Perfetto-loadable trace.json (default); "
+                         "jsonl: raw span lines")
+    tr.add_argument("-o", "--output", default=None, metavar="PATH",
+                    help="output file (chrome default: trace.json; "
+                         "jsonl default: stdout)")
+    tr.set_defaults(fn=_cmd_trace)
+
     args = ap.parse_args(argv)
+    from repro.obs import configure_logging
+    configure_logging()                    # honour CIM_TUNER_LOG in CLIs
     return args.fn(args)
 
 

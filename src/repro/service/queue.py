@@ -25,6 +25,7 @@ import typing
 
 import numpy as np
 
+from repro import obs
 from repro.core.annealing import SASettings
 from repro.core.engine import (
     ExplorationEngine,
@@ -41,6 +42,32 @@ from repro.service.streams import ExploreFuture
 
 __all__ = ["QueueConfig", "JobQueue", "values_key", "resolve_settings"]
 
+# telemetry families (process-wide; see docs/observability.md)
+_REG = obs.registry()
+_LOG = obs.get_logger("queue")
+_M_SUBMITTED = _REG.counter(
+    "cim_queue_submitted_total", "Jobs admitted to the service queue")
+_M_STORE_HITS = _REG.counter(
+    "cim_queue_store_hits_total",
+    "Submissions resolved from the persistent result store")
+_M_INFLIGHT_DEDUP = _REG.counter(
+    "cim_queue_inflight_dedup_total",
+    "Submissions folded onto an identical pending/running job")
+_M_DISPATCHES = _REG.counter(
+    "cim_queue_dispatches_total", "Engine calls issued (one per bucket)")
+_M_COMPLETED = _REG.counter(
+    "cim_queue_completed_total", "Queue entries resolved successfully")
+_M_FAILED = _REG.counter(
+    "cim_queue_failed_total", "Queue entries rejected with an error")
+_M_WINDOW = _REG.counter(
+    "cim_queue_window_flushes_total",
+    "Micro-batch windows closed and dispatched")
+_M_DEPTH = _REG.gauge(
+    "cim_queue_depth", "Instantaneous queue depth", ("state",))
+_M_WAIT_S = _REG.histogram(
+    "cim_queue_wait_seconds",
+    "Submit-to-dispatch latency per queue entry")
+
 
 @dataclasses.dataclass(frozen=True)
 class QueueConfig:
@@ -52,7 +79,7 @@ class QueueConfig:
 
 class _Entry:
     __slots__ = ("priority", "seq", "kind", "key", "job", "method",
-                 "settings", "payload", "futures", "bucket")
+                 "settings", "payload", "futures", "bucket", "t_submit")
 
     def __init__(self, priority, seq, kind, key, job, method, settings,
                  payload, future):
@@ -66,6 +93,7 @@ class _Entry:
         self.payload = payload            # candidate rows for "values"
         self.futures = [future]
         self.bucket = None                # lazily cached executable bucket
+        self.t_submit = time.perf_counter()  # queue-wait histogram anchor
 
     def order(self) -> tuple:
         return (-self.priority, self.seq)
@@ -145,10 +173,17 @@ class JobQueue:
         self._thread: threading.Thread | None = None
         self._closed = False
         self._seq = 0
-        self.stats = {
-            "submitted": 0, "store_hits": 0, "inflight_dedup": 0,
-            "dispatches": 0, "completed": 0, "failed": 0,
-        }
+        # legacy-shaped per-instance counters mirrored into the
+        # process-wide registry; StatCounters carries its own lock, so
+        # bump() is safe from submitter threads AND the worker thread
+        self.stats = obs.StatCounters({
+            "submitted": _M_SUBMITTED.labels(),
+            "store_hits": _M_STORE_HITS.labels(),
+            "inflight_dedup": _M_INFLIGHT_DEDUP.labels(),
+            "dispatches": _M_DISPATCHES.labels(),
+            "completed": _M_COMPLETED.labels(),
+            "failed": _M_FAILED.labels(),
+        })
 
     # ------------------------------------------------------------- #
     # engine access (lazy so tests can build queues without JAX work)
@@ -190,15 +225,13 @@ class JobQueue:
         key = job_key(job, method, settings)
         future = ExploreFuture(job, method, key, meta=meta)
         # submissions arrive from concurrent threads (the HTTP front
-        # door); counter updates must be locked or increments get lost
-        with self._lock:
-            self.stats["submitted"] += 1
+        # door); StatCounters locks each bump so increments never race
+        self.stats.bump("submitted")
 
         if self.store is not None:
             cached = self.store.get(key)
             if cached is not None:
-                with self._lock:
-                    self.stats["store_hits"] += 1
+                self.stats.bump("store_hits")
                 future._finish(cached, source="store")
                 return future
 
@@ -235,8 +268,7 @@ class JobQueue:
         rows = np.asarray(candidates, dtype=np.float64)
         key = values_key(job, rows)
         future = ExploreFuture(job, "values", key, meta=meta)
-        with self._lock:
-            self.stats["submitted"] += 1
+        self.stats.bump("submitted")
         self._enqueue("values", key, job, "values", None, rows,
                       priority, future)
         return future
@@ -260,15 +292,19 @@ class JobQueue:
     # ------------------------------------------------------------- #
     def depth(self) -> dict:
         """Instantaneous queue depth: submissions still waiting for a
-        micro-batch plus keys currently being evaluated."""
+        micro-batch plus keys currently being evaluated (also exported as
+        the ``cim_queue_depth`` gauge)."""
         with self._lock:
-            return {"pending": len(self._pending),
-                    "inflight": len(self._inflight)}
+            d = {"pending": len(self._pending),
+                 "inflight": len(self._inflight)}
+        _M_DEPTH.set(d["pending"], state="pending")
+        _M_DEPTH.set(d["inflight"], state="inflight")
+        return d
 
     def stats_snapshot(self) -> dict:
         """One JSON-able view of queue + store + engine counters (engine
         stats appear only once an engine was actually instantiated)."""
-        out: dict = {"queue": {**self.stats, **self.depth()}}
+        out: dict = {"queue": {**self.stats.snapshot(), **self.depth()}}
         out["store"] = dict(self.store.stats) \
             if self.store is not None else None
         eng = self._engine
@@ -305,13 +341,15 @@ class JobQueue:
             entry = self._inflight.get(key)
             if entry is not None:
                 entry.futures.append(future)
-                self.stats["inflight_dedup"] += 1
+                self.stats.bump("inflight_dedup")
                 return
             self._seq += 1
             entry = _Entry(priority, self._seq, kind, key, job, method,
                            settings, payload, future)
             self._pending.append(entry)
             self._inflight[key] = entry
+            _M_DEPTH.set(len(self._pending), state="pending")
+            _M_DEPTH.set(len(self._inflight), state="inflight")
             if self._thread is None:
                 self._thread = threading.Thread(
                     target=self._worker, name="cim-tuner-dse-queue",
@@ -336,8 +374,11 @@ class JobQueue:
                     self._cv.wait(remaining)
                 batch = sorted(self._pending, key=_Entry.order)
                 self._pending = []
+                _M_DEPTH.set(0, state="pending")
+            _M_WINDOW.inc()
             try:
-                self._dispatch(batch)
+                with obs.span("queue.batch", jobs=len(batch)):
+                    self._dispatch(batch)
             except Exception as exc:    # noqa: BLE001 -- worker must survive
                 # reject whatever the dispatch didn't resolve (resolved
                 # futures ignore the second _finish) and keep serving
@@ -363,7 +404,13 @@ class JobQueue:
 
     def _dispatch(self, batch: list[_Entry]) -> None:
         for group in self._groups(batch):
-            self.stats["dispatches"] += 1
+            self.stats.bump("dispatches")
+            now = time.perf_counter()
+            for e in group:
+                _M_WAIT_S.observe(now - e.t_submit)
+            _LOG.debug("dispatch %d job(s) kind=%s method=%s wait=%.3fs",
+                       len(group), group[0].kind, group[0].method,
+                       now - min(e.t_submit for e in group))
             try:
                 if group[0].kind == "values":
                     outs = self.engine.candidate_values(
@@ -392,8 +439,9 @@ class JobQueue:
             with self._lock:
                 self._inflight.pop(e.key, None)
                 futures = list(e.futures)
+                _M_DEPTH.set(len(self._inflight), state="inflight")
             if exc is not None:
-                self.stats["failed"] += 1
+                self.stats.bump("failed")
                 # surface the failure into every affected future, tagged
                 # with ITS canonical key -- a bucket-wide engine error must
                 # stay attributable per submission, not merely logged
@@ -401,7 +449,7 @@ class JobQueue:
                 for f in futures:
                     f._finish(exc=err, source="engine")
                 continue
-            self.stats["completed"] += 1
+            self.stats.bump("completed")
             for j, f in enumerate(futures):
                 r = out
                 if j > 0 and isinstance(out, ExploreResult):

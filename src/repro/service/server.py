@@ -58,6 +58,7 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 import numpy as np
 
+from repro import obs
 from repro.core.engine import ExplorationEngine, ExploreResult
 from repro.service.client import ServiceClient, job_from_spec
 from repro.service.store import serialize_result
@@ -66,6 +67,34 @@ from repro.service.streams import ExploreFuture, stream_pareto
 __all__ = ["ServerConfig", "DSEServer", "serve"]
 
 _SPEC_ERRORS = (KeyError, TypeError, ValueError)
+
+# telemetry families (process-wide; see docs/observability.md)
+_REG = obs.registry()
+_M_HTTP = _REG.counter(
+    "cim_http_requests_total",
+    "Requests served per (normalized) endpoint and method",
+    ("endpoint", "method"))
+_M_HTTP_S = _REG.histogram(
+    "cim_http_request_seconds", "Request handling latency per endpoint",
+    ("endpoint",))
+_M_EVENTS = _REG.counter(
+    "cim_http_events_total", "Front-door events by type", ("event",))
+
+#: normalized route labels -- key-bearing paths collapse onto one child so
+#: label cardinality stays bounded no matter how many job keys exist
+_ROUTES = ("/healthz", "/v1/stats", "/v1/metrics", "/v1/trace",
+           "/v1/jobs", "/v1/stream", "/v1/pareto")
+
+
+def _route(path: str) -> str:
+    """Bounded endpoint label of a request path."""
+    if path in _ROUTES:
+        return path
+    if path.startswith("/v1/jobs/"):
+        return "/v1/jobs/{key}"
+    if path.startswith("/v1/store/"):
+        return "/v1/store/{key}"
+    return "other"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,7 +114,9 @@ class ServerConfig:
     stream_ping_s: float = 15.0
     #: cap on ?wait= long-polling
     max_wait_s: float = 600.0
-    #: silence per-request stderr logging
+    #: keep the ``repro.server`` logger at its env-configured level
+    #: (``CIM_TUNER_LOG``); ``quiet=False`` forces it to DEBUG, which
+    #: turns on per-request access lines (the old stderr logging)
     quiet: bool = True
 
 
@@ -103,14 +134,21 @@ class DSEServer:
         if self.client.remote:
             raise ValueError("DSEServer needs an in-process ServiceClient")
         self.config = config
-        self.http_stats = {
-            "requests": 0, "bad_requests": 0, "errors": 0,
-            "jobs_posted": 0, "values_posted": 0, "store_get_hits": 0,
-            "store_get_misses": 0, "streams": 0,
-        }
+        # legacy-shaped per-instance counters mirrored into the
+        # process-wide cim_http_events_total family; StatCounters locks
+        # each bump, replacing the old dedicated _stats_lock
+        self.http_stats = obs.StatCounters({
+            key: _M_EVENTS.labels(event=key)
+            for key in ("requests", "bad_requests", "errors",
+                        "jobs_posted", "values_posted", "store_get_hits",
+                        "store_get_misses", "streams")})
+        self.log = obs.get_logger("server")
+        if not config.quiet:
+            # --verbose: per-request access lines regardless of env
+            import logging
+            self.log.setLevel(logging.DEBUG)
         self._registry: OrderedDict[str, ExploreFuture] = OrderedDict()
         self._reg_lock = threading.Lock()
-        self._stats_lock = threading.Lock()
         self._started_s = time.time()
         self._httpd = ThreadingHTTPServer(
             (config.host, config.port), _Handler)
@@ -167,8 +205,7 @@ class DSEServer:
         """Locked counter increment -- handler threads are concurrent and
         ``/v1/stats`` readings gate CI assertions, so lost updates from
         racing read-modify-writes are not acceptable."""
-        with self._stats_lock:
-            self.http_stats[counter] += 1
+        self.http_stats.bump(counter)
 
     # ------------------------------------------------------------- #
     # registry
@@ -240,8 +277,7 @@ class DSEServer:
         snap = self.client.stats_snapshot()
         with self._reg_lock:
             registry = len(self._registry)
-        with self._stats_lock:
-            http = dict(self.http_stats)
+        http = self.http_stats.snapshot()
         snap["server"] = {
             **http,
             "registry": registry,
@@ -277,13 +313,22 @@ class _Handler(BaseHTTPRequestHandler):
         return self.server.dse                         # type: ignore[attr-defined]
 
     def log_message(self, fmt: str, *args) -> None:    # noqa: A003
-        if not self.dse.config.quiet:                  # pragma: no cover
-            BaseHTTPRequestHandler.log_message(self, fmt, *args)
+        # request lines go through the repro.server logger at DEBUG --
+        # silent by default, enabled via CIM_TUNER_LOG=server or --verbose
+        self.dse.log.debug("%s %s", self.address_string(), fmt % args)
 
     def _send_json(self, code: int, obj: dict) -> None:
         body = json.dumps(obj).encode("utf-8")
         self.send_response(code)
         self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _send_text(self, code: int, text: str, content_type: str) -> None:
+        body = text.encode("utf-8")
+        self.send_response(code)
+        self.send_header("Content-Type", content_type)
         self.send_header("Content-Length", str(len(body)))
         self.end_headers()
         self.wfile.write(body)
@@ -330,29 +375,41 @@ class _Handler(BaseHTTPRequestHandler):
     def do_GET(self) -> None:                          # noqa: N802
         self.dse.bump("requests")
         path, q = self._query()
+        route = _route(path)
+        _M_HTTP.inc(endpoint=route, method="GET")
         try:
-            if path == "/healthz":
-                self._send_json(200, {
-                    "ok": True, "service": "cim-tuner-dse",
-                    "pid": os.getpid(),
-                    "uptime_s": round(
-                        time.time() - self.dse._started_s, 3)})
-            elif path == "/v1/stats":
-                self._send_json(200, self.dse.stats())
-            elif path.startswith("/v1/jobs/"):
-                self._get_job(path.rsplit("/", 1)[1], q)
-            elif path == "/v1/stream":
-                self._get_stream(q)
-            elif path == "/v1/pareto":
-                self._get_pareto(q)
-            elif path.startswith("/v1/store/"):
-                self._get_store(path.rsplit("/", 1)[1])
-            else:
-                self._bad(f"unknown path {path!r}", code=404)
+            with obs.span("server.request", histogram=_M_HTTP_S.labels(
+                    endpoint=route), endpoint=route, method="GET"):
+                if path == "/healthz":
+                    self._send_json(200, {
+                        "ok": True, "service": "cim-tuner-dse",
+                        "pid": os.getpid(),
+                        "uptime_s": round(
+                            time.time() - self.dse._started_s, 3)})
+                elif path == "/v1/stats":
+                    self._send_json(200, self.dse.stats())
+                elif path == "/v1/metrics":
+                    self._send_text(
+                        200, obs.registry().render(),
+                        "text/plain; version=0.0.4; charset=utf-8")
+                elif path == "/v1/trace":
+                    self._send_json(
+                        200, obs.chrome_trace(obs.tracer().events()))
+                elif path.startswith("/v1/jobs/"):
+                    self._get_job(path.rsplit("/", 1)[1], q)
+                elif path == "/v1/stream":
+                    self._get_stream(q)
+                elif path == "/v1/pareto":
+                    self._get_pareto(q)
+                elif path.startswith("/v1/store/"):
+                    self._get_store(path.rsplit("/", 1)[1])
+                else:
+                    self._bad(f"unknown path {path!r}", code=404)
         except (BrokenPipeError, ConnectionResetError):
             pass                                       # client went away
         except Exception as exc:                       # noqa: BLE001
             self.dse.bump("errors")
+            self.dse.log.warning("GET %s failed: %r", path, exc)
             try:
                 self._send_json(500, {"error": repr(exc)})
             except OSError:                            # pragma: no cover
@@ -361,15 +418,20 @@ class _Handler(BaseHTTPRequestHandler):
     def do_POST(self) -> None:                         # noqa: N802
         self.dse.bump("requests")
         path, q = self._query()
+        route = _route(path)
+        _M_HTTP.inc(endpoint=route, method="POST")
         try:
-            if path == "/v1/jobs":
-                self._post_jobs(q)
-            else:
-                self._bad(f"unknown path {path!r}", code=404)
+            with obs.span("server.request", histogram=_M_HTTP_S.labels(
+                    endpoint=route), endpoint=route, method="POST"):
+                if path == "/v1/jobs":
+                    self._post_jobs(q)
+                else:
+                    self._bad(f"unknown path {path!r}", code=404)
         except (BrokenPipeError, ConnectionResetError):
             pass
         except Exception as exc:                       # noqa: BLE001
             self.dse.bump("errors")
+            self.dse.log.warning("POST %s failed: %r", path, exc)
             try:
                 self._send_json(500, {"error": repr(exc)})
             except OSError:                            # pragma: no cover
@@ -483,27 +545,47 @@ class _Handler(BaseHTTPRequestHandler):
             return
         self.dse.bump("streams")
         self._sse_begin()
+        # one queue interleaves final results and per-rung progress
+        # events (portfolio races publish on the progress bus); the
+        # atomic subscribe returns history for rungs that fired before
+        # this stream attached, so POST-then-stream clients still see
+        # the whole race, each event exactly once
         done_q: _queue.SimpleQueue = _queue.SimpleQueue()
+        bus = obs.progress_bus()
+
+        def _on_progress(_key: str, ev: dict) -> None:
+            done_q.put(("progress", ev))
+
+        history = bus.subscribe([f.key for f in futs], _on_progress)
         for fut in futs:
-            fut.add_done_callback(done_q.put)
-        deadline = None if timeout is None else time.monotonic() + timeout
-        remaining = len(futs)
-        while remaining:
-            budget = self.dse.config.stream_ping_s
-            if deadline is not None:
-                budget = min(budget, deadline - time.monotonic())
-                if budget <= 0:
-                    self._sse_event({"remaining": remaining,
-                                     "reason": "timeout"}, event="end")
-                    return
-            try:
-                fut = done_q.get(timeout=budget)
-            except _queue.Empty:
-                self._sse_ping()
-                continue
-            self._sse_event(self.dse.job_state(fut), event="result")
-            remaining -= 1
-        self._sse_event({"remaining": 0}, event="end")
+            fut.add_done_callback(lambda f: done_q.put(("result", f)))
+        try:
+            for ev in history:
+                self._sse_event(ev, event="progress")
+            deadline = None if timeout is None \
+                else time.monotonic() + timeout
+            remaining = len(futs)
+            while remaining:
+                budget = self.dse.config.stream_ping_s
+                if deadline is not None:
+                    budget = min(budget, deadline - time.monotonic())
+                    if budget <= 0:
+                        self._sse_event({"remaining": remaining,
+                                         "reason": "timeout"}, event="end")
+                        return
+                try:
+                    kind, item = done_q.get(timeout=budget)
+                except _queue.Empty:
+                    self._sse_ping()
+                    continue
+                if kind == "progress":
+                    self._sse_event(item, event="progress")
+                    continue
+                self._sse_event(self.dse.job_state(item), event="result")
+                remaining -= 1
+            self._sse_event({"remaining": 0}, event="end")
+        finally:
+            bus.unsubscribe(_on_progress)
 
     def _get_pareto(self, q: dict[str, str]) -> None:
         from repro.core.macro import get_macro

@@ -24,17 +24,23 @@ import dataclasses
 import json
 import os
 import tempfile
-import threading
 import time
 
 import numpy as np
 
+from repro import obs
 from repro.core.engine import ExploreResult
 from repro.core.macro import MacroSpec
 from repro.core.template import AcceleratorConfig
 
 __all__ = ["ResultStore", "RemoteStoreTier", "default_store",
            "serialize_result", "deserialize_result", "STORE_SCHEMA"]
+
+#: one family covers both tiers: ``tier="local"`` is the on-disk store,
+#: ``tier="remote"`` the read-through client tier (docs/observability.md)
+_M_OPS = obs.registry().counter(
+    "cim_store_ops_total", "Result-store operations by tier and outcome",
+    ("tier", "op"))
 
 #: bump together with ``engine.JOB_KEY_SCHEMA`` when the serialized result
 #: layout changes shape
@@ -128,24 +134,32 @@ class ResultStore:
         #: directory walk only happens when this crosses the cap, so puts
         #: stay O(1) until eviction is actually needed
         self._approx_bytes: float | None = None
-        self.stats = {"hits": 0, "misses": 0, "puts": 0,
-                      "expired": 0, "evicted": 0}
         # handler threads of the HTTP front door and the queue worker hit
-        # one store concurrently; counter updates must not lose increments
-        self._stats_lock = threading.Lock()
+        # one store concurrently; StatCounters locks each bump and
+        # mirrors it into the process-wide cim_store_ops_total family
+        self.stats = obs.StatCounters({
+            "hits": _M_OPS.labels(tier="local", op="hit"),
+            "misses": _M_OPS.labels(tier="local", op="miss"),
+            "puts": _M_OPS.labels(tier="local", op="put"),
+            "expired": _M_OPS.labels(tier="local", op="expired"),
+            "evicted": _M_OPS.labels(tier="local", op="evicted"),
+        })
 
     def _bump(self, counter: str, n: int = 1) -> None:
-        with self._stats_lock:
-            self.stats[counter] += n
+        self.stats.bump(counter, n)
 
     # ------------------------------------------------------------- #
     def _path(self, key: str) -> str:
         return os.path.join(self.root, key[:2], f"{key}.jsonl")
 
-    def get_raw(self, key: str) -> dict | None:
+    def get_raw(self, key: str, count: bool = True) -> dict | None:
         """The serialized-result payload of a live record (TTL and schema
         enforced exactly like :meth:`get`); what the HTTP front door's
-        ``GET /v1/store/<key>`` ships to remote readers."""
+        ``GET /v1/store/<key>`` ships to remote readers.  ``count=False``
+        suppresses the hit/miss accounting (for callers like :meth:`get`
+        that do their own, once deserialization is known to succeed --
+        mirrored counters are monotonic, so outcomes must be counted
+        exactly once, after they are final)."""
         path = self._path(key)
         try:
             with open(path) as f:
@@ -164,9 +178,11 @@ class ResultStore:
             if not isinstance(payload, dict):
                 raise ValueError("malformed record")
         except (OSError, ValueError, KeyError, TypeError):
-            self._bump("misses")
+            if count:
+                self._bump("misses")
             return None
-        self._bump("hits")
+        if count:
+            self._bump("hits")
         try:
             os.utime(path)             # LRU-ish: hits refresh the mtime
         except OSError:                                # pragma: no cover
@@ -177,15 +193,17 @@ class ResultStore:
         """The stored result for a canonical job key, or ``None`` on any
         kind of miss (absent, expired, corrupt, schema-mismatched); hits
         are tagged ``search["cache"] = "store"`` and refresh recency."""
-        payload = self.get_raw(key)
-        if payload is None:
-            return None
-        try:
-            out = deserialize_result(payload)
-        except (ValueError, KeyError, TypeError):
-            self._bump("hits", -1)
-            self._bump("misses")
-            return None
+        with obs.span("store.get", tier="local"):
+            payload = self.get_raw(key, count=False)
+            if payload is None:
+                self._bump("misses")
+                return None
+            try:
+                out = deserialize_result(payload)
+            except (ValueError, KeyError, TypeError):
+                self._bump("misses")
+                return None
+            self._bump("hits")
         out.search["cache"] = "store"
         return out
 
@@ -307,33 +325,38 @@ class RemoteStoreTier:
         self.base_url = base_url.rstrip("/")
         self.local = local
         self.timeout_s = float(timeout_s)
-        self.stats = {"local_hits": 0, "remote_hits": 0, "misses": 0,
-                      "puts": 0, "remote_errors": 0}
-        self._stats_lock = threading.Lock()
+        self.stats = obs.StatCounters({
+            "local_hits": _M_OPS.labels(tier="remote", op="local_hit"),
+            "remote_hits": _M_OPS.labels(tier="remote", op="remote_hit"),
+            "misses": _M_OPS.labels(tier="remote", op="miss"),
+            "puts": _M_OPS.labels(tier="remote", op="put"),
+            "remote_errors": _M_OPS.labels(tier="remote",
+                                           op="remote_error"),
+        })
 
     def _bump(self, counter: str) -> None:
-        with self._stats_lock:
-            self.stats[counter] += 1
+        self.stats.bump(counter)
 
     def get(self, key: str) -> ExploreResult | None:
         """Read-through lookup: local tier, then ``GET /v1/store/<key>``
         (remote hits are written back locally; remote errors read as
         misses so a down server degrades to plain submission)."""
-        if self.local is not None:
-            out = self.local.get(key)
-            if out is not None:
-                self._bump("local_hits")
-                return out
-        payload = self._remote_get(key)
-        if payload is None:
-            self._bump("misses")
-            return None
-        try:
-            out = deserialize_result(payload)
-        except (ValueError, KeyError, TypeError):
-            self._bump("misses")
-            return None
-        self._bump("remote_hits")
+        with obs.span("store.get", tier="remote"):
+            if self.local is not None:
+                out = self.local.get(key)
+                if out is not None:
+                    self._bump("local_hits")
+                    return out
+            payload = self._remote_get(key)
+            if payload is None:
+                self._bump("misses")
+                return None
+            try:
+                out = deserialize_result(payload)
+            except (ValueError, KeyError, TypeError):
+                self._bump("misses")
+                return None
+            self._bump("remote_hits")
         out.search["cache"] = "remote-store"
         if self.local is not None:
             self.local.put(key, out)       # read-through: warm the local tier

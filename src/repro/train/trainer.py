@@ -113,27 +113,32 @@ class Trainer:
         params, opt, start = self.restore_or_init()
         it = make_batch_iterator(self.stream, self.mesh, start_step=start)
         ewma = None
-        for step in range(start, tc.steps):
-            batch = next(it)
-            t0 = time.perf_counter()
-            params, opt, metrics = self.step_fn(params, opt, batch)
-            loss = float(metrics["loss"])       # blocks; CPU-scale is fine
-            dt = time.perf_counter() - t0
-            ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
-            if dt > tc.straggler_factor * ewma and step > start + 3:
-                self.straggler_steps += 1
-            rec = {"step": step + 1, "loss": loss,
-                   "grad_norm": float(metrics["grad_norm"]),
-                   "lr": float(metrics["lr"]),
-                   "skipped": bool(metrics["skipped"]),
-                   "sec_per_step": dt}
-            self.history.append(rec)
-            if (step + 1) % tc.log_every == 0 or step == start:
-                log(f"step {rec['step']:5d} loss {loss:8.4f} "
-                    f"gnorm {rec['grad_norm']:8.3f} lr {rec['lr']:.2e} "
-                    f"{dt*1e3:7.1f} ms"
-                    + (" [SKIPPED:nan]" if rec["skipped"] else ""))
-            if (step + 1) % tc.ckpt_every == 0 or step + 1 == tc.steps:
-                path = self.ckpt.save(step + 1, (params, opt))
-                log(f"checkpoint @ {path}")
+        try:
+            for step in range(start, tc.steps):
+                batch = next(it)
+                t0 = time.perf_counter()
+                params, opt, metrics = self.step_fn(params, opt, batch)
+                loss = float(metrics["loss"])   # blocks; CPU-scale is fine
+                dt = time.perf_counter() - t0
+                ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+                if dt > tc.straggler_factor * ewma and step > start + 3:
+                    self.straggler_steps += 1
+                rec = {"step": step + 1, "loss": loss,
+                       "grad_norm": float(metrics["grad_norm"]),
+                       "lr": float(metrics["lr"]),
+                       "skipped": bool(metrics["skipped"]),
+                       "sec_per_step": dt}
+                self.history.append(rec)
+                if (step + 1) % tc.log_every == 0 or step == start:
+                    log(f"step {rec['step']:5d} loss {loss:8.4f} "
+                        f"gnorm {rec['grad_norm']:8.3f} lr {rec['lr']:.2e} "
+                        f"{dt*1e3:7.1f} ms"
+                        + (" [SKIPPED:nan]" if rec["skipped"] else ""))
+                if (step + 1) % tc.ckpt_every == 0 or step + 1 == tc.steps:
+                    path = self.ckpt.save(step + 1, (params, opt))
+                    log(f"checkpoint @ {path}")
+        finally:
+            # close the generator so its producer thread stops now --
+            # leaked producers otherwise keep allocating batches forever
+            it.close()
         return params, opt

@@ -1,0 +1,148 @@
+#!/usr/bin/env python
+"""Prometheus text-exposition parser + assertion gate (stdlib only).
+
+The service-fleet CI smoke pipes ``GET /v1/metrics`` output through this
+to prove the endpoint is genuinely Prometheus-parseable (not just
+200-OK text) and that the counters a healthy fleet run must move --
+engine jobs, store traffic -- are present and non-zero::
+
+    curl -s "$URL/v1/metrics" | python tools/check_metrics.py \
+        --min-families 12 \
+        --require cim_http_request_seconds \
+        --nonzero cim_engine_jobs_total --nonzero cim_store_ops_total
+
+Also importable: :func:`parse` returns ``{family: {"type", "help",
+"samples": {labeled-name: value}}}`` and raises ``ValueError`` on any
+malformed line, which the unit tests use for a render/parse round-trip.
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+
+_NAME = r"[a-zA-Z_:][a-zA-Z0-9_:]*"
+# label values are quoted and may contain '}' (e.g. route templates like
+# /v1/jobs/{key}), so the block must be matched pair-by-pair, not [^}]*
+_LBLOCK = r'\{(?:\s*[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*"\s*,?)*\}'
+_SAMPLE = re.compile(
+    rf"^({_NAME})({_LBLOCK})?\s+(-?[0-9.eE+-]+|[+-]Inf|NaN)\s*$")
+_LABELS = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+#: histogram/summary series carry these suffixes on the family name
+_SUFFIXES = ("_bucket", "_sum", "_count")
+
+
+def _family_of(sample_name: str, families: dict) -> str | None:
+    if sample_name in families:
+        return sample_name
+    for suf in _SUFFIXES:
+        if sample_name.endswith(suf) and sample_name[:-len(suf)] in families:
+            return sample_name[:-len(suf)]
+    return None
+
+
+def parse(text: str) -> dict:
+    """Parse Prometheus text exposition; raises ValueError on bad lines.
+
+    Every sample must belong to a ``# TYPE``-declared family (histogram
+    ``_bucket``/``_sum``/``_count`` series resolve to their base family).
+    """
+    families: dict[str, dict] = {}
+    for lineno, line in enumerate(text.splitlines(), 1):
+        line = line.rstrip()
+        if not line:
+            continue
+        if line.startswith("# HELP "):
+            parts = line.split(None, 3)
+            if len(parts) < 3:
+                raise ValueError(f"line {lineno}: malformed HELP")
+            families.setdefault(
+                parts[2], {"type": None, "help": "", "samples": {}})
+            families[parts[2]]["help"] = parts[3] if len(parts) > 3 else ""
+        elif line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4 or parts[3] not in (
+                    "counter", "gauge", "histogram", "summary", "untyped"):
+                raise ValueError(f"line {lineno}: malformed TYPE: {line!r}")
+            families.setdefault(
+                parts[2], {"type": None, "help": "", "samples": {}})
+            families[parts[2]]["type"] = parts[3]
+        elif line.startswith("#"):
+            continue                                   # plain comment
+        else:
+            m = _SAMPLE.match(line)
+            if not m:
+                raise ValueError(f"line {lineno}: malformed sample: {line!r}")
+            name, labels, value_s = m.group(1), m.group(2) or "", m.group(3)
+            fam = _family_of(name, families)
+            if fam is None:
+                raise ValueError(
+                    f"line {lineno}: sample {name!r} has no TYPE family")
+            if labels:
+                body = labels[1:-1].strip()
+                if body and _LABELS.sub("", body).strip(", ") != "":
+                    raise ValueError(
+                        f"line {lineno}: malformed labels: {labels!r}")
+            try:
+                value = float(value_s.replace("Inf", "inf"))
+            except ValueError as exc:
+                raise ValueError(
+                    f"line {lineno}: bad value {value_s!r}") from exc
+            families[fam]["samples"][name + labels] = value
+    for fam, rec in families.items():
+        if rec["type"] is None:
+            raise ValueError(f"family {fam!r} has samples but no TYPE")
+    return families
+
+
+def family_total(families: dict, name: str) -> float:
+    """Sum of every sample in one family (histograms: the _count sum)."""
+    rec = families.get(name)
+    if rec is None:
+        return 0.0
+    if rec["type"] == "histogram":
+        return sum(v for k, v in rec["samples"].items()
+                   if k.startswith(f"{name}_count"))
+    return sum(rec["samples"].values())
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("file", nargs="?", default="-",
+                    help="exposition text file ('-' = stdin)")
+    ap.add_argument("--min-families", type=int, default=0,
+                    help="fail unless at least this many families parse")
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="FAMILY", help="family that must be present")
+    ap.add_argument("--nonzero", action="append", default=[],
+                    metavar="FAMILY",
+                    help="family whose sample total must be > 0")
+    args = ap.parse_args(argv)
+
+    text = sys.stdin.read() if args.file == "-" else \
+        open(args.file, encoding="utf-8").read()
+    try:
+        families = parse(text)
+    except ValueError as exc:
+        print(f"NOT Prometheus-parseable: {exc}", file=sys.stderr)
+        return 1
+
+    errors = []
+    if len(families) < args.min_families:
+        errors.append(f"only {len(families)} families, "
+                      f"need >= {args.min_families}")
+    for name in args.require + args.nonzero:
+        if name not in families:
+            errors.append(f"missing family {name!r}")
+    for name in args.nonzero:
+        if name in families and family_total(families, name) <= 0:
+            errors.append(f"family {name!r} total is zero")
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"parsed {len(families)} metric families: "
+          f"{'FAIL' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Markdown code-block linter (stdlib only; part of the CI `docs` job).
+
+Walks the given markdown files/directories and checks every fenced code
+block:
+
+- fences must balance (an unclosed ``` swallows the rest of the file);
+- ``python`` / ``py`` blocks must at least compile (``compile(...,
+  "exec")``) -- blocks holding REPL transcripts (``>>>``) have their
+  prompts stripped first;
+- ``json`` blocks must ``json.loads``;
+- every fence's info string must come from a known vocabulary, so typos
+  like ```pyhton don't silently disable highlighting AND linting.
+
+    python tools/lint_docs.py docs README.md ROADMAP.md
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+_FENCE = re.compile(r"^(```+|~~~+)\s*([\w+-]*)\s*$")
+#: info strings we expect in this repo's docs; extend as docs grow
+_KNOWN = {"", "python", "py", "json", "jsonl", "bash", "sh", "shell",
+          "console", "text", "yaml", "toml", "ini", "diff", "makefile",
+          "mermaid", "csv"}
+_CHECK_PY = {"python", "py"}
+_CHECK_JSON = {"json"}
+
+
+def blocks_of(body: str, path: str) -> tuple[list[tuple[int, str, str]],
+                                             list[str]]:
+    """Fenced blocks of one file -> ([(lineno, lang, code)], errors)."""
+    out: list[tuple[int, str, str]] = []
+    errors: list[str] = []
+    fence = None                     # (marker, lang, start_lineno, lines)
+    for lineno, line in enumerate(body.splitlines(), 1):
+        m = _FENCE.match(line.strip())
+        if fence is None:
+            if m:
+                fence = (m.group(1)[0] * 3, m.group(2).lower(), lineno, [])
+                if fence[1] not in _KNOWN:
+                    errors.append(f"{path}:{lineno}: unknown code-fence "
+                                  f"language {fence[1]!r}")
+        elif m and m.group(1).startswith(fence[0]) and not m.group(2):
+            out.append((fence[2], fence[1], "\n".join(fence[3])))
+            fence = None
+        else:
+            fence[3].append(line)
+    if fence is not None:
+        errors.append(f"{path}:{fence[2]}: unclosed code fence")
+    return out, errors
+
+
+def _parse_json_stream(code: str) -> None:
+    """Accept one JSON document OR several concatenated ones (docs often
+    show alternative spellings of a request body in a single block)."""
+    dec = json.JSONDecoder()
+    idx, n = 0, len(code)
+    while idx < n:
+        while idx < n and code[idx].isspace():
+            idx += 1
+        if idx >= n:
+            return
+        _, idx = dec.raw_decode(code, idx)
+
+
+def _strip_repl(code: str) -> str:
+    """``>>> x`` / ``... y`` transcript -> the statements themselves."""
+    lines = []
+    for line in code.splitlines():
+        s = line.strip()
+        if s.startswith(">>> "):
+            lines.append(s[4:])
+        elif s.startswith("... "):
+            lines.append(s[4:])
+        elif s in (">>>", "..."):
+            continue
+        # plain lines in a transcript are output: drop them
+    return "\n".join(lines)
+
+
+def check_file(path: str) -> list[str]:
+    """Code-block lint messages for one markdown file (empty = clean)."""
+    with open(path, encoding="utf-8") as f:
+        body = f.read()
+    blocks, errors = blocks_of(body, path)
+    for lineno, lang, code in blocks:
+        if lang in _CHECK_PY:
+            src = _strip_repl(code) if ">>>" in code else code
+            try:
+                compile(src, f"{path}:{lineno}", "exec")
+            except SyntaxError as exc:
+                errors.append(
+                    f"{path}:{lineno}: python block does not compile: "
+                    f"{exc.msg} (block line {exc.lineno})")
+        elif lang in _CHECK_JSON:
+            try:
+                _parse_json_stream(code)
+            except ValueError as exc:
+                errors.append(f"{path}:{lineno}: invalid JSON block: {exc}")
+    return errors
+
+
+def collect(paths: list[str]) -> list[str]:
+    """Every .md file under the given files/directories, sorted."""
+    out = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, files in os.walk(p):
+                out.extend(os.path.join(root, f) for f in files
+                           if f.endswith(".md"))
+        elif p.endswith(".md"):
+            out.append(p)
+        else:
+            raise SystemExit(f"not a markdown file or directory: {p}")
+    return sorted(out)
+
+
+def main(argv: list[str]) -> int:
+    files = collect(argv or ["docs", "README.md", "ROADMAP.md"])
+    if not files:
+        print("no markdown files found", file=sys.stderr)
+        return 1
+    errors = []
+    for md in files:
+        errors.extend(check_file(md))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"linted code blocks in {len(files)} files: "
+          f"{'FAIL (' + str(len(errors)) + ')' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
