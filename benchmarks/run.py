@@ -8,6 +8,13 @@ their rows incrementally through the async DSE service.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig7,table2]
                                             [--jsonl results.jsonl]
+                                            [--trace trace.json]
+                                            [--profile-kernels]
+
+``--trace`` exports the run's span ring buffer as a Chrome trace;
+``--profile-kernels`` appends a ``_kernel_profile`` pseudo-module record
+(one row per profiled kernel/shape with ``us_per_call``) so
+``plot_trend.py`` trends kernel microseconds alongside the figures.
 """
 from __future__ import annotations
 
@@ -52,6 +59,13 @@ def main() -> None:
                          "`repro-service serve` front door (sets "
                          "CIM_TUNER_SERVICE_URL), so benchmark shards "
                          "share one warm engine and result store")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the run's telemetry spans as a Chrome "
+                         "trace (CI uploads it as a nightly artifact)")
+    ap.add_argument("--profile-kernels", action="store_true",
+                    help="run the kernel micro-profile sweep "
+                         "(CIM_TUNER_PROFILE) and append a "
+                         "_kernel_profile record to the jsonl")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else None
     if args.service_url:
@@ -94,6 +108,38 @@ def main() -> None:
             for k, v in snap1.items()
             if "_bucket" not in k and v != snap0.get(k, 0.0)}
         records.append(rec)
+
+    if args.profile_kernels:
+        print("# === _kernel_profile: Pallas kernel micro-profile ===",
+              flush=True)
+        t0 = time.perf_counter()
+        rec = {"module": "_kernel_profile",
+               "title": "Pallas kernel micro-profile", "rows": []}
+        try:
+            for row in obs.profile.run_microbench():
+                rec["rows"].append({
+                    "name": f"kernel/{row['kernel']}/{row['bucket']}",
+                    "us_per_call": row["us_per_call"],
+                    "derived": (f"flops={row['flops']:.3g} "
+                                f"bytes={row['bytes']:.3g} "
+                                f"roofline={row['roofline_utilization']:.3g}"),
+                })
+                print(f"{rec['rows'][-1]['name']},"
+                      f"{row['us_per_call']:.3f},"
+                      f"{rec['rows'][-1]['derived']}", flush=True)
+            rec["status"] = "ok"
+        except Exception:   # noqa: BLE001 -- profile must not fail the run
+            failures += 1
+            rec["status"] = "failed"
+            rec["error"] = traceback.format_exc()
+            print(f"# _kernel_profile FAILED:\n{rec['error']}", flush=True)
+        rec["elapsed_s"] = round(time.perf_counter() - t0, 3)
+        records.append(rec)
+
+    if args.trace:
+        with open(args.trace, "w") as f:
+            json.dump(obs.chrome_trace(obs.tracer().events()), f)
+        print(f"# wrote Chrome trace to {args.trace}")
 
     total_s = time.perf_counter() - t_all
     print(f"# total {total_s:.1f}s, failures={failures}")

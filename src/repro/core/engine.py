@@ -645,9 +645,16 @@ class ExplorationEngine:
                                                           group_settings)
                 for i, out in zip(idxs, outs):
                     results[i] = out
+        fanout: dict[str, int] = {}
         for i, k in enumerate(keys):
             if results[i] is None:
                 results[i] = clone_result(results[first_of[k]])
+                fanout[k] = fanout.get(k, 0) + 1
+        # dedup provenance: a timeline whose result fanned out to
+        # duplicate slots says so (annotate no-ops for keys without one)
+        recorder = obs.flight_recorder()
+        for k, n in fanout.items():
+            recorder.annotate(k, dedup_fanout=n)
 
         runtime = time.perf_counter() - t_start
         for r in results:
@@ -867,6 +874,21 @@ class ExplorationEngine:
         devices = self._race_devices()
         n_devices = sum(d is not None for d in devices) or 1
         bus = obs.progress_bus()
+        recorder = obs.flight_recorder()
+        if job_keys is not None:
+            # the flight recorder opens one decision timeline per job,
+            # capturing the same per-rung payloads the SSE bus publishes
+            # (so the two reconcile exactly) plus bandit internals
+            device_map = {name: str(devices[b_idx % len(devices)]
+                                    or "default")
+                          for b_idx, name in enumerate(names)}
+            for j in range(n_jobs):
+                recorder.start(
+                    job_keys[j], method="portfolio",
+                    allocator=settings.allocator, backends=list(names),
+                    devices=n_devices, device_map=device_map,
+                    total_evals=settings.total_evals,
+                    rungs=settings.rungs, seed=settings.seed)
         best_val = np.full(n_jobs, np.inf)
         best_idx = np.zeros((n_jobs, 5), dtype=np.int64)
         per_backend = np.full((n_jobs, n_back), np.inf)
@@ -925,21 +947,35 @@ class ExplorationEngine:
             return float(v) if np.isfinite(v) else None
 
         def _publish(phase: str, rung: int,
-                     jobs_touched: typing.Iterable[int]) -> None:
+                     jobs_touched: typing.Iterable[int],
+                     rewards: dict | None = None,
+                     ucb=None, chosen=None) -> None:
             """One progress event per touched job after a race wave (the
             SSE ``progress`` payload; no-op when the caller didn't pass
-            ``job_keys``)."""
+            ``job_keys``).  The identical payload lands on the flight
+            recorder, extended with the wave's bandit internals
+            (``rewards`` per job, UCB ``scores`` and the ``chosen``
+            arm) so timelines reconcile with the SSE stream exactly."""
             if job_keys is None:
                 return
             for j in jobs_touched:
-                bus.publish(
-                    job_keys[j], phase=phase, allocator=settings.allocator,
+                payload = dict(
+                    phase=phase, allocator=settings.allocator,
                     rung=rung, best=_fin(best_val[j]),
                     backend_best={name: _fin(per_backend[j, b])
                                   for b, name in enumerate(names)},
                     pulls={name: int(pulls[j, b])
                            for b, name in enumerate(names)},
                     devices=n_devices)
+                bus.publish(job_keys[j], **payload)
+                if rewards is not None and j in rewards:
+                    payload["rewards"] = rewards[j]
+                if ucb is not None:
+                    payload["ucb"] = {name: _fin(ucb[j, b])
+                                      for b, name in enumerate(names)}
+                if chosen is not None:
+                    payload["chosen"] = names[int(chosen[j])]
+                recorder.event(job_keys[j], payload)
 
         if settings.allocator == "halving":
             alive = np.ones((n_jobs, n_back), dtype=bool)
@@ -969,6 +1005,7 @@ class ExplorationEngine:
             # init wave: one pull per backend for every job (== rung 0)
             _M_RUNGS.inc(allocator="bandit")
             prev = best_val.copy()
+            wave_rewards: dict[int, dict[str, float]] = {}
             with obs.span("engine.portfolio.rung", allocator="bandit",
                           rung=0, jobs=n_jobs):
                 handles = [
@@ -979,7 +1016,9 @@ class ExplorationEngine:
                     for j, (_v, r) in _collect(h, prev).items():
                         sum_reward[j, h[0]] += r
                         _record_pull(j, h[0])
-            _publish("race", 0, range(n_jobs))
+                        wave_rewards.setdefault(j, {})[names[h[0]]] = \
+                            float(r)
+            _publish("race", 0, range(n_jobs), rewards=wave_rewards)
             # adaptive pulls: per-job UCB argmax (stable: ties resolve to
             # the lower backend index, so the schedule is deterministic)
             for wave in range(bandit_rounds(settings) - n_back):
@@ -990,6 +1029,7 @@ class ExplorationEngine:
                 choice = np.argmax(scores, axis=1)
                 prev = best_val.copy()
                 touched: set[int] = set()
+                wave_rewards = {}
                 with obs.span("engine.portfolio.rung", allocator="bandit",
                               rung=wave + 1, jobs=n_jobs):
                     handles = []
@@ -1009,7 +1049,10 @@ class ExplorationEngine:
                             sum_reward[j, h[0]] += r
                             _record_pull(j, h[0])
                             touched.add(j)
-                _publish("race", wave + 1, sorted(touched))
+                            wave_rewards.setdefault(j, {})[
+                                names[h[0]]] = float(r)
+                _publish("race", wave + 1, sorted(touched),
+                         rewards=wave_rewards, ucb=scores, chosen=choice)
 
         # exploitation: the per-job winner gets the remaining budget
         # (kept out of per_backend so `race` stays race-phase-only)
@@ -1029,14 +1072,19 @@ class ExplorationEngine:
                     final_best[j] = v
         if job_keys is not None:
             for j in range(n_jobs):
-                bus.publish(
-                    job_keys[j], phase="final",
-                    allocator=settings.allocator,
+                payload = dict(
+                    phase="final", allocator=settings.allocator,
                     winner=names[int(winners[j])], best=_fin(best_val[j]),
                     final=_fin(final_best[j]),
                     pulls={name: int(pulls[j, b])
                            for b, name in enumerate(names)},
                     devices=n_devices)
+                bus.publish(job_keys[j], **payload)
+                recorder.event(job_keys[j], payload)
+                recorder.finish(
+                    job_keys[j], winner=payload["winner"],
+                    best=payload["best"], final=payload["final"],
+                    pulls=payload["pulls"])
 
         results = []
         for j, p in enumerate(batch):

@@ -14,6 +14,7 @@ span, log line and SSE progress event in the DSE stack::
 
 See ``docs/observability.md`` for the metric catalog and span names.
 """
+from repro.obs import profile
 from repro.obs.events import ProgressBus, progress_bus
 from repro.obs.log import configure_logging, get_logger
 from repro.obs.metrics import (
@@ -23,7 +24,15 @@ from repro.obs.metrics import (
     Histogram,
     Registry,
     StatCounters,
+    exemplars_enabled,
     registry,
+)
+from repro.obs.recorder import (
+    TIMELINE_SCHEMA,
+    FlightRecorder,
+    flight_recorder,
+    regret_curve,
+    render_timeline,
 )
 from repro.obs.trace import Span, Tracer, chrome_trace, span, tracer
 
@@ -34,12 +43,19 @@ __all__ = [
     "Registry",
     "StatCounters",
     "registry",
+    "exemplars_enabled",
     "DEFAULT_BUCKETS",
     "Span",
     "Tracer",
     "tracer",
     "span",
     "chrome_trace",
+    "FlightRecorder",
+    "flight_recorder",
+    "render_timeline",
+    "regret_curve",
+    "TIMELINE_SCHEMA",
+    "profile",
     "configure_logging",
     "get_logger",
     "ProgressBus",

@@ -30,8 +30,10 @@ from __future__ import annotations
 
 import json
 import math
+import os
 import re
 import threading
+import time
 import typing
 
 __all__ = [
@@ -41,8 +43,21 @@ __all__ = [
     "Registry",
     "StatCounters",
     "registry",
+    "exemplars_enabled",
     "DEFAULT_BUCKETS",
 ]
+
+#: when truthy, ``Histogram.render_into`` appends each bucket's last
+#: exemplar in OpenMetrics syntax (``... # {span_id="..."} value ts``);
+#: off by default so the exposition stays strict text-format 0.0.4
+_EXEMPLARS_ENV = "CIM_TUNER_EXEMPLARS"
+
+
+def exemplars_enabled() -> bool:
+    """Whether ``CIM_TUNER_EXEMPLARS`` asks for OpenMetrics exemplar
+    suffixes on histogram bucket lines."""
+    return os.environ.get(_EXEMPLARS_ENV, "") not in ("", "0", "false",
+                                                      "no")
 
 #: default latency buckets (seconds): sub-ms HTTP handling up to multi-
 #: second cold compiles; +Inf is implicit
@@ -197,28 +212,42 @@ class Gauge(_Family):
 
 
 class _HistChild:
-    """Bucket counts + sum + count for one label combination."""
+    """Bucket counts + sum + count for one label combination.
 
-    __slots__ = ("buckets", "counts", "sum", "count", "_lock")
+    ``exemplars`` holds, per non-cumulative bucket, the most recent
+    ``(labels, value, unix_ts)`` exemplar handed to :meth:`observe`
+    (typically ``{"span_id": ...}`` from ``obs.span``) -- rendered as
+    OpenMetrics suffixes when :func:`exemplars_enabled`."""
+
+    __slots__ = ("buckets", "counts", "sum", "count", "exemplars",
+                 "_lock")
 
     def __init__(self, buckets: tuple[float, ...]):
         self.buckets = buckets
         self.counts = [0] * (len(buckets) + 1)   # +1 for +Inf
+        self.exemplars: list[tuple[dict, float, float] | None] = \
+            [None] * (len(buckets) + 1)
         self.sum = 0.0
         self.count = 0
         self._lock = threading.Lock()
 
-    def observe(self, value: float) -> None:
+    def observe(self, value: float, exemplar: dict | None = None) -> None:
         value = float(value)
         with self._lock:
             self.sum += value
             self.count += 1
             for i, ub in enumerate(self.buckets):
                 if value <= ub:
-                    self.counts[i] += 1
                     break
             else:
-                self.counts[-1] += 1
+                i = len(self.buckets)
+            self.counts[i] += 1
+            if exemplar:
+                self.exemplars[i] = (dict(exemplar), value, time.time())
+
+    def exemplars_snapshot(self) -> list:
+        with self._lock:
+            return list(self.exemplars)
 
     def cumulative(self) -> list[int]:
         with self._lock:
@@ -249,20 +278,30 @@ class Histogram(_Family):
     def _child_values(self) -> _HistChild:
         return _HistChild(self.buckets)
 
-    def observe(self, value: float, **labels) -> None:
-        """Record one observation for the given labels."""
-        self.labels(**labels).observe(value)
+    def observe(self, value: float, exemplar: dict | None = None,
+                **labels) -> None:
+        """Record one observation for the given labels; ``exemplar`` is
+        an optional dict of exemplar labels (e.g. ``{"span_id": ...}``)
+        remembered as the bucket's latest exemplar."""
+        self.labels(**labels).observe(value, exemplar=exemplar)
 
     def render_into(self, out: list[str]) -> None:
+        show_ex = exemplars_enabled()
         for values, child in self.samples():
             cum = child.cumulative()
-            for ub, c in zip(self.buckets, cum):
-                out.append(
-                    f"{self.name}_bucket"
-                    f"{self._label_str(values, (('le', _fmt(ub)),))} {c}")
-            out.append(f"{self.name}_bucket"
-                       f"{self._label_str(values, (('le', '+Inf'),))} "
-                       f"{cum[-1]}")
+            exs = child.exemplars_snapshot() if show_ex \
+                else [None] * len(cum)
+            for i, ub in enumerate((*self.buckets, math.inf)):
+                line = (f"{self.name}_bucket"
+                        f"{self._label_str(values, (('le', _fmt(ub)),))} "
+                        f"{cum[i]}")
+                if exs[i] is not None:
+                    ex_labels, ex_value, ex_ts = exs[i]
+                    pairs = ",".join(f'{k}="{_escape(v)}"'
+                                     for k, v in ex_labels.items())
+                    line += (f" # {{{pairs}}} {_fmt(ex_value)} "
+                             f"{ex_ts:.3f}")
+                out.append(line)
             s, n = child.snapshot()
             out.append(f"{self.name}_sum{self._label_str(values)} {_fmt(s)}")
             out.append(f"{self.name}_count{self._label_str(values)} {n}")

@@ -1,0 +1,283 @@
+"""Kernel profiling tier: wall-clock histograms + roofline utilization.
+
+Profiling hooks around the Pallas kernel wrappers (``repro.kernels.ops``)
+record, per ``(kernel, bucket)`` series:
+
+``cim_kernel_us`` (histogram)
+    Wall-clock per call in microseconds (``block_until_ready`` timed), with
+    the producing span's id as the bucket exemplar -- a latency outlier in
+    ``/v1/metrics`` links to its span in ``/v1/trace``.
+``cim_kernel_flops_per_call`` / ``cim_kernel_bytes_per_call`` (gauges)
+    XLA's compiled cost analysis (via
+    :func:`repro.compat.compiled_cost_analysis`), computed once per series.
+``cim_kernel_roofline_utilization`` (gauge)
+    Achieved FLOP/s over the roofline-attainable rate
+    ``min(peak_flops, peak_bw * arithmetic_intensity)`` -- the measurement
+    substrate the ROADMAP calibration tier fits correction factors from.
+
+Everything is gated on ``CIM_TUNER_PROFILE`` (checked per call, so the
+hooks cost one env lookup when off).  Peak rates default to the TPU v5e
+constants shared with ``repro.launch.roofline`` and can be overridden via
+``CIM_TUNER_PEAK_FLOPS`` / ``CIM_TUNER_PEAK_BW`` (interpret-mode CPU runs
+report honest-but-tiny utilizations against TPU peaks).
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+import typing
+
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+
+__all__ = [
+    "PROFILE_ENV",
+    "KERNEL_US_BUCKETS",
+    "profiling_enabled",
+    "instrument",
+    "roofline_utilization",
+    "peak_flops",
+    "peak_bw",
+    "summary",
+    "run_microbench",
+]
+
+PROFILE_ENV = "CIM_TUNER_PROFILE"
+
+#: per-call kernel wall clock is microseconds, not seconds -- interpret
+#: mode on CPU reaches well into the ms range, compiled TPU kernels sit
+#: in the single-digit us range
+KERNEL_US_BUCKETS = (1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0,
+                     500.0, 1e3, 2.5e3, 5e3, 1e4, 2.5e4, 1e5, 2.5e5, 1e6)
+
+#: defaults mirror repro.launch.roofline (TPU v5e: bf16 FLOP/s per chip,
+#: HBM bandwidth)
+DEFAULT_PEAK_FLOPS = 197e12
+DEFAULT_PEAK_BW = 819e9
+
+_REG = _metrics.registry()
+_M_US = _REG.histogram(
+    "cim_kernel_us", "Per-call kernel wall clock (microseconds)",
+    ("kernel", "bucket"), buckets=KERNEL_US_BUCKETS)
+_M_FLOPS = _REG.gauge(
+    "cim_kernel_flops_per_call",
+    "Compiled cost analysis: FLOPs per kernel call", ("kernel", "bucket"))
+_M_BYTES = _REG.gauge(
+    "cim_kernel_bytes_per_call",
+    "Compiled cost analysis: bytes accessed per kernel call",
+    ("kernel", "bucket"))
+_M_ROOF = _REG.gauge(
+    "cim_kernel_roofline_utilization",
+    "Achieved FLOP/s over the roofline-attainable rate",
+    ("kernel", "bucket"))
+_M_RUNTIME = _REG.gauge(
+    "cim_kernel_profile_runtime_seconds",
+    "Wall clock of the last kernel micro-profile pass")
+
+#: one cost analysis per (kernel, bucket); None caches failures so a
+#: non-lowerable callable is probed once, not per call
+_COST_CACHE: dict[tuple[str, str], tuple[float, float] | None] = {}
+_COST_LOCK = threading.Lock()
+
+
+def profiling_enabled() -> bool:
+    """Whether ``CIM_TUNER_PROFILE`` turns the kernel hooks on."""
+    return os.environ.get(PROFILE_ENV, "") not in ("", "0", "false", "no")
+
+
+def _env_float(var: str, default: float) -> float:
+    raw = os.environ.get(var)
+    try:
+        return float(raw) if raw else default
+    except ValueError:
+        return default
+
+
+def peak_flops() -> float:
+    """Peak FLOP/s the roofline is drawn against
+    (``CIM_TUNER_PEAK_FLOPS``, default TPU v5e bf16)."""
+    return _env_float("CIM_TUNER_PEAK_FLOPS", DEFAULT_PEAK_FLOPS)
+
+
+def peak_bw() -> float:
+    """Peak memory bandwidth in bytes/s (``CIM_TUNER_PEAK_BW``, default
+    TPU v5e HBM)."""
+    return _env_float("CIM_TUNER_PEAK_BW", DEFAULT_PEAK_BW)
+
+
+def roofline_utilization(flops: float, nbytes: float,
+                         seconds: float) -> float:
+    """Achieved FLOP/s over the roofline-attainable rate for one call.
+
+    Attainable is ``min(peak_flops, peak_bw * intensity)`` with
+    ``intensity = flops / nbytes``; zero-byte kernels are compute-bound
+    by definition."""
+    if seconds <= 0 or flops <= 0:
+        return 0.0
+    achieved = flops / seconds
+    if nbytes > 0:
+        attainable = min(peak_flops(), peak_bw() * (flops / nbytes))
+    else:
+        attainable = peak_flops()
+    return achieved / attainable if attainable > 0 else 0.0
+
+
+def _cost_analysis(kernel: str, bucket: str, fn, args,
+                   kwargs) -> tuple[float, float] | None:
+    """(flops, bytes accessed) of one jitted call, cached per series."""
+    key = (kernel, bucket)
+    with _COST_LOCK:
+        if key in _COST_CACHE:
+            return _COST_CACHE[key]
+    result = None
+    lower = getattr(fn, "lower", None)
+    if callable(lower):
+        try:
+            from repro.compat import compiled_cost_analysis
+            ca = compiled_cost_analysis(lower(*args, **kwargs).compile())
+            result = (float(ca.get("flops", 0.0) or 0.0),
+                      float(ca.get("bytes accessed", 0.0) or 0.0))
+        except Exception:        # noqa: BLE001 -- profiling never raises
+            result = None
+    with _COST_LOCK:
+        _COST_CACHE[key] = result
+    return result
+
+
+def profiled_call(kernel: str, fn, bucket: str, args: tuple,
+                  kwargs: dict):
+    """Run ``fn(*args, **kwargs)`` timed to completion, recording the
+    ``cim_kernel_*`` series for ``(kernel, bucket)``."""
+    import jax
+
+    with _trace.span(f"kernel.{kernel}", cat="kernel", kernel=kernel,
+                     bucket=bucket) as sp:
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+    _M_US.observe(sp.duration_s * 1e6,
+                  exemplar={"span_id": sp.span_id},
+                  kernel=kernel, bucket=bucket)
+    cost = _cost_analysis(kernel, bucket, fn, args, kwargs)
+    if cost is not None:
+        flops, nbytes = cost
+        _M_FLOPS.set(flops, kernel=kernel, bucket=bucket)
+        _M_BYTES.set(nbytes, kernel=kernel, bucket=bucket)
+        _M_ROOF.set(roofline_utilization(flops, nbytes, sp.duration_s),
+                    kernel=kernel, bucket=bucket)
+    return out
+
+
+def instrument(kernel: str, fn, bucket_fn) -> typing.Callable:
+    """Wrap one kernel entry point with the profiling hook.
+
+    ``bucket_fn(*args, **kwargs) -> str`` derives the shape-bucket label;
+    with profiling off the wrapper is a single env lookup, so the
+    default path stays effectively free."""
+    def wrapper(*args, **kwargs):
+        if not profiling_enabled():
+            return fn(*args, **kwargs)
+        return profiled_call(kernel, fn, bucket_fn(*args, **kwargs),
+                             args, kwargs)
+    wrapper.__name__ = getattr(fn, "__name__", kernel)
+    wrapper.__qualname__ = getattr(fn, "__qualname__", kernel)
+    wrapper.__doc__ = getattr(fn, "__doc__", None)
+    wrapper.__wrapped__ = fn
+    return wrapper
+
+
+def summary() -> list[dict]:
+    """Per-(kernel, bucket) profile rows from the registry, sorted:
+    call count, mean microseconds, FLOPs/bytes and roofline utilization
+    (0.0 when cost analysis was unavailable)."""
+    rows = []
+    for values, child in _M_US.samples():
+        kernel, bucket = values
+        s, n = child.snapshot()
+        if n == 0:
+            continue
+        rows.append({
+            "kernel": kernel,
+            "bucket": bucket,
+            "calls": n,
+            "us_per_call": s / n,
+            "flops": _M_FLOPS.value(kernel=kernel, bucket=bucket),
+            "bytes": _M_BYTES.value(kernel=kernel, bucket=bucket),
+            "roofline_utilization": _M_ROOF.value(kernel=kernel,
+                                                  bucket=bucket),
+        })
+    rows.sort(key=lambda r: (r["kernel"], r["bucket"]))
+    return rows
+
+
+# --------------------------------------------------------------------- #
+# standard micro-profile pass
+# --------------------------------------------------------------------- #
+_ALL_KERNELS = ("cim_matmul", "flash_attention", "selective_scan",
+                "strategy_eval")
+
+
+def run_microbench(kernels: typing.Sequence[str] | None = None,
+                   repeats: int = 3, seed: int = 0) -> list[dict]:
+    """Run a small profiled pass over the Pallas kernels and return
+    :func:`summary` rows.
+
+    This is the shared body of ``repro-service profile``, the server's
+    ``CIM_TUNER_PROFILE`` warm-up and ``benchmarks/run.py
+    --profile-kernels`` -- tiny canonical shapes, interpret mode on CPU
+    hosts, so the ``cim_kernel_*`` families always have real series to
+    scrape.  Enables ``CIM_TUNER_PROFILE`` for this process if unset."""
+    if not profiling_enabled():
+        os.environ[PROFILE_ENV] = "1"
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops
+
+    kernels = tuple(kernels) if kernels else _ALL_KERNELS
+    unknown = sorted(set(kernels) - set(_ALL_KERNELS))
+    if unknown:
+        raise ValueError(f"unknown kernels {unknown}; "
+                         f"pick from {_ALL_KERNELS}")
+    rng = np.random.default_rng(seed)
+    t0 = time.perf_counter()
+    for _ in range(max(1, repeats)):
+        if "cim_matmul" in kernels:
+            a = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+            b = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+            ops.cim_matmul(a, b, tiling="AF")
+        if "flash_attention" in kernels:
+            q = jnp.asarray(rng.standard_normal((1, 128, 64)),
+                            jnp.float32)
+            k = jnp.asarray(rng.standard_normal((1, 128, 64)),
+                            jnp.float32)
+            v = jnp.asarray(rng.standard_normal((1, 128, 64)),
+                            jnp.float32)
+            ops.flash_attention(q, k, v, causal=True)
+        if "selective_scan" in kernels:
+            bs, t, i, s = 1, 64, 32, 8
+            xi = jnp.asarray(rng.standard_normal((bs, t, i)), jnp.float32)
+            dt = jnp.asarray(np.abs(rng.standard_normal((bs, t, i))) * 0.1,
+                             jnp.float32)
+            bm = jnp.asarray(rng.standard_normal((bs, t, s)), jnp.float32)
+            cm = jnp.asarray(rng.standard_normal((bs, t, s)), jnp.float32)
+            aa = jnp.asarray(-np.abs(rng.standard_normal((i, s))),
+                             jnp.float32)
+            h0 = jnp.zeros((bs, i, s), jnp.float32)
+            ops.selective_scan(xi, dt, bm, cm, aa, h0, ct=16, ci=16)
+        if "strategy_eval" in kernels:
+            from repro.core.ir import bert_large_workload
+            from repro.core.macro import get_macro
+            from repro.core.pruning import (
+                DesignSpace,
+                candidates_with_bw,
+                enumerate_space,
+            )
+            cands = candidates_with_bw(enumerate_space(DesignSpace(
+                mr=(1, 2), mc=(1, 2), scr=(1, 4), is_kb=(4, 64),
+                os_kb=(4, 64))), 256)
+            wl = bert_large_workload().merged().as_arrays()
+            ops.strategy_eval(cands, wl, get_macro("vanilla-dcim"))
+    rows = [r for r in summary() if r["kernel"] in kernels]
+    _M_RUNTIME.set(time.perf_counter() - t0)
+    return rows

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import collections
 import contextlib
+import itertools
 import json
 import os
 import threading
@@ -34,12 +35,22 @@ __all__ = ["Span", "Tracer", "tracer", "span", "chrome_trace"]
 
 _DEF_CAPACITY = 8192
 
+#: process-unique span-id sequence (itertools.count increments atomically
+#: under the GIL, so ids are race-free without a lock)
+_SPAN_SEQ = itertools.count(1)
+
+
+def _next_span_id() -> str:
+    return f"{os.getpid():x}-{next(_SPAN_SEQ):x}"
+
 
 class Span:
     """One in-flight timed section; attributes land in the event's
-    ``args``."""
+    ``args``.  ``span_id`` is the process-unique id the event carries in
+    ``/v1/trace`` -- histogram exemplars reference it (see
+    ``obs/metrics.py``)."""
 
-    __slots__ = ("name", "cat", "args", "t0", "duration_s")
+    __slots__ = ("name", "cat", "args", "t0", "duration_s", "span_id")
 
     def __init__(self, name: str, cat: str, args: dict):
         self.name = name
@@ -47,6 +58,7 @@ class Span:
         self.args = args
         self.t0 = time.perf_counter()
         self.duration_s: float | None = None
+        self.span_id = _next_span_id()
 
     def set(self, **kw) -> None:
         """Attach extra args discovered mid-span (e.g. result counts)."""
@@ -79,7 +91,9 @@ class Tracer:
 
         ``histogram`` is an optional :class:`repro.obs.metrics.Histogram`
         child or family (no labels) whose ``observe`` receives the span
-        duration in seconds on exit.  Extra keyword args become the
+        duration in seconds on exit, tagged with this span's id as an
+        exemplar (so a latency outlier in ``/v1/metrics`` links back to
+        its span in ``/v1/trace``).  Extra keyword args become the
         event's ``args`` payload.
         """
         sp = Span(name, cat, dict(args))
@@ -89,12 +103,17 @@ class Tracer:
             sp.duration_s = time.perf_counter() - sp.t0
             self._record(sp)
             if histogram is not None:
-                histogram.observe(sp.duration_s)
+                try:
+                    histogram.observe(sp.duration_s,
+                                      exemplar={"span_id": sp.span_id})
+                except TypeError:      # foreign histogram, no exemplars
+                    histogram.observe(sp.duration_s)
 
     def _record(self, sp: Span) -> None:
         ev = {
             "name": sp.name,
             "cat": sp.cat,
+            "id": sp.span_id,
             "ph": "X",
             "ts": round(self._epoch_us + sp.t0 * 1e6, 3),
             "dur": round(sp.duration_s * 1e6, 3),

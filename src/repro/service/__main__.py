@@ -199,6 +199,66 @@ def _cmd_trace(args) -> int:
     return 0
 
 
+def _cmd_timeline(args) -> int:
+    from repro.obs.recorder import render_timeline
+
+    url = _resolved_url(args)
+    timeline = None
+    if url:
+        import urllib.error
+        import urllib.request
+        endpoint = f"{url.rstrip('/')}/v1/jobs/{args.key}/timeline"
+        try:
+            with urllib.request.urlopen(endpoint, timeout=30) as resp:
+                doc = json.loads(resp.read().decode("utf-8"))
+            timeline = doc.get("timeline")
+        except urllib.error.HTTPError as exc:
+            if exc.code != 404:
+                raise
+    else:
+        from repro.service import default_store
+        store = default_store()
+        timeline = store.get_timeline(args.key) \
+            if store is not None else None
+    if timeline is None:
+        print(f"error: no timeline for job {args.key!r}", file=sys.stderr)
+        return 2
+    if args.json:
+        print(json.dumps(timeline, indent=2, sort_keys=True))
+    else:
+        print(render_timeline(timeline))
+    return 0
+
+
+def _cmd_profile(args) -> int:
+    os.environ["CIM_TUNER_PROFILE"] = "1"
+    from repro import obs
+
+    kernels = [k for k in (args.kernels or "").split(",") if k] or None
+    try:
+        rows = obs.profile.run_microbench(kernels=kernels,
+                                          repeats=args.repeats)
+    except ValueError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+    if args.json:
+        print(json.dumps(rows, indent=2))
+    else:
+        print(f"{'kernel':<16} {'bucket':<18} {'calls':>6} "
+              f"{'us/call':>12} {'flops':>12} {'bytes':>12} {'roofline':>9}")
+        for r in rows:
+            print(f"{r['kernel']:<16} {r['bucket']:<18} "
+                  f"{r['calls']:>6} {r['us_per_call']:>12.1f} "
+                  f"{r['flops']:>12.3g} {r['bytes']:>12.3g} "
+                  f"{r['roofline_utilization']:>9.2e}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(obs.registry().render())
+        print(f"# wrote metrics exposition to {args.metrics_out}",
+              file=sys.stderr)
+    return 0
+
+
 def _cmd_store(args) -> int:
     from repro.service import default_store
 
@@ -289,6 +349,34 @@ def main(argv: list[str] | None = None) -> int:
                     help="output file (chrome default: trace.json; "
                          "jsonl default: stdout)")
     tr.set_defaults(fn=_cmd_trace)
+
+    tl = sub.add_parser(
+        "timeline", help="render one job's search decision timeline "
+                         "(regret-vs-budget curve + convergence summary)")
+    tl.add_argument("key", help="canonical job key")
+    tl.add_argument("--url", default=None, metavar="URL",
+                    help="fetch GET /v1/jobs/<key>/timeline from a "
+                         "running serve instance (default: "
+                         "$CIM_TUNER_SERVICE_URL, else the local store)")
+    tl.add_argument("--json", action="store_true",
+                    help="print the raw timeline record instead of the "
+                         "rendered view")
+    tl.set_defaults(fn=_cmd_timeline)
+
+    pr = sub.add_parser(
+        "profile", help="run the kernel micro-profile pass "
+                        "(cim_kernel_us / roofline utilization)")
+    pr.add_argument("--kernels", default=None, metavar="A,B",
+                    help="comma-separated kernel subset (default: all of "
+                         "cim_matmul, flash_attention, selective_scan, "
+                         "strategy_eval)")
+    pr.add_argument("--repeats", type=int, default=3,
+                    help="profiled calls per kernel (default 3)")
+    pr.add_argument("--json", action="store_true",
+                    help="machine-readable summary rows")
+    pr.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="also dump the Prometheus exposition here")
+    pr.set_defaults(fn=_cmd_profile)
 
     args = ap.parse_args(argv)
     from repro.obs import configure_logging

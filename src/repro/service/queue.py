@@ -436,6 +436,14 @@ class JobQueue:
                 # submission always sees either the running entry or the
                 # stored result, never a gap
                 self.store.put(e.key, out)
+                # the decision timeline (portfolio runs) lands next to
+                # the result, so warm-store hits after a restart still
+                # serve GET /v1/jobs/<key>/timeline
+                put_timeline = getattr(self.store, "put_timeline", None)
+                if callable(put_timeline):
+                    timeline = obs.flight_recorder().timeline(e.key)
+                    if timeline is not None:
+                        put_timeline(e.key, timeline)
             with self._lock:
                 self._inflight.pop(e.key, None)
                 futures = list(e.futures)

@@ -91,6 +91,8 @@ def _route(path: str) -> str:
     if path in _ROUTES:
         return path
     if path.startswith("/v1/jobs/"):
+        if path.endswith("/timeline"):
+            return "/v1/jobs/{key}/timeline"
         return "/v1/jobs/{key}"
     if path.startswith("/v1/store/"):
         return "/v1/store/{key}"
@@ -173,12 +175,28 @@ class DSEServer:
 
     def start(self) -> "DSEServer":
         """Serve in a daemon thread; returns self (context-manager style:
-        ``with DSEServer(...).start() as srv: ...``)."""
+        ``with DSEServer(...).start() as srv: ...``).
+
+        With ``CIM_TUNER_PROFILE`` set, a background warm-up runs the
+        kernel micro-profile pass once so ``/v1/metrics`` serves real
+        ``cim_kernel_*`` series (with exemplars into this process's
+        ``/v1/trace``) from the first scrape."""
         self._thread = threading.Thread(
             target=self._httpd.serve_forever, kwargs={"poll_interval": 0.1},
             name="cim-tuner-dse-http", daemon=True)
         self._thread.start()
+        if obs.profile.profiling_enabled():
+            threading.Thread(target=self._profile_warmup,
+                             name="cim-tuner-profile-warmup",
+                             daemon=True).start()
         return self
+
+    def _profile_warmup(self) -> None:
+        try:
+            rows = obs.profile.run_microbench()
+            self.log.info("kernel profile warm-up: %d series", len(rows))
+        except Exception as exc:           # noqa: BLE001 -- never fatal
+            self.log.warning("kernel profile warm-up failed: %r", exc)
 
     def shutdown(self, drain: bool = True,
                  timeout: float | None = 30.0) -> None:
@@ -395,6 +413,10 @@ class _Handler(BaseHTTPRequestHandler):
                 elif path == "/v1/trace":
                     self._send_json(
                         200, obs.chrome_trace(obs.tracer().events()))
+                elif path.startswith("/v1/jobs/") and \
+                        path.endswith("/timeline"):
+                    key = path[len("/v1/jobs/"):-len("/timeline")]
+                    self._get_timeline(key.rstrip("/"))
                 elif path.startswith("/v1/jobs/"):
                     self._get_job(path.rsplit("/", 1)[1], q)
                 elif path == "/v1/stream":
@@ -510,6 +532,24 @@ class _Handler(BaseHTTPRequestHandler):
         if wait:
             fut.wait(wait)
         self._send_json(200, self.dse.job_state(fut))
+
+    def _get_timeline(self, key: str) -> None:
+        """Flight-recorder timeline of one job: the in-process recorder
+        first (live or recently finished races), then the store's
+        persisted sidecar (results from previous runs / other hosts)."""
+        timeline = obs.flight_recorder().timeline(key)
+        source = "live"
+        if timeline is None:
+            store = self.dse.client.store
+            get_timeline = getattr(store, "get_timeline", None)
+            timeline = get_timeline(key) if callable(get_timeline) \
+                else None
+            source = "store"
+        if timeline is None:
+            self._bad(f"no timeline for job {key!r}", code=404)
+            return
+        self._send_json(200, {"key": key, "source": source,
+                              "timeline": timeline})
 
     def _get_store(self, key: str) -> None:
         store = self.dse.client.store

@@ -152,6 +152,40 @@ class ResultStore:
     def _path(self, key: str) -> str:
         return os.path.join(self.root, key[:2], f"{key}.jsonl")
 
+    def _timeline_path(self, key: str) -> str:
+        return os.path.join(self.root, key[:2], f"{key}.timeline.json")
+
+    def put_timeline(self, key: str, timeline: dict) -> None:
+        """Persist one flight-recorder timeline next to its result
+        (atomic publish; write failures degrade to a no-op, exactly like
+        :meth:`put`) -- warm-store hits after a server restart still
+        serve ``GET /v1/jobs/<key>/timeline`` from this sidecar."""
+        path = self._timeline_path(key)
+        try:
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            fd, tmp = tempfile.mkstemp(
+                dir=os.path.dirname(path), suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump(timeline, f)
+            os.replace(tmp, path)                      # atomic publish
+        except (OSError, TypeError, ValueError):       # pragma: no cover
+            return
+        _M_OPS.inc(tier="local", op="timeline_put")
+
+    def get_timeline(self, key: str) -> dict | None:
+        """The persisted timeline for a canonical job key (``None`` on
+        any kind of miss -- absent, corrupt, non-dict)."""
+        try:
+            with open(self._timeline_path(key)) as f:
+                timeline = json.load(f)
+            if not isinstance(timeline, dict):
+                raise ValueError("malformed timeline")
+        except (OSError, ValueError):
+            _M_OPS.inc(tier="local", op="timeline_miss")
+            return None
+        _M_OPS.inc(tier="local", op="timeline_hit")
+        return timeline
+
     def get_raw(self, key: str, count: bool = True) -> dict | None:
         """The serialized-result payload of a live record (TTL and schema
         enforced exactly like :meth:`get`); what the HTTP front door's
@@ -261,6 +295,10 @@ class ResultStore:
                 os.remove(p)
             except OSError:                            # pragma: no cover
                 continue
+            try:                       # the timeline sidecar goes with it
+                os.remove(self._timeline_path(k))
+            except OSError:
+                pass
             self._bump("evicted")
             total -= size
         self._approx_bytes = total
@@ -299,6 +337,10 @@ class ResultStore:
                 os.remove(self._path(key))
                 n += 1
             except OSError:                            # pragma: no cover
+                pass
+            try:
+                os.remove(self._timeline_path(key))
+            except OSError:
                 pass
         self._approx_bytes = None
         return n

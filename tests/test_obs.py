@@ -141,6 +141,175 @@ def test_check_metrics_rejects_malformed_exposition():
         check_metrics.parse("# TYPE t_x_total counter\nt_x_total one\n")
 
 
+def test_check_metrics_validates_histogram_self_consistency():
+    good = (
+        "# TYPE t_h histogram\n"
+        't_h_bucket{k="a",le="1"} 1\n'
+        't_h_bucket{k="a",le="+Inf"} 2\n'
+        't_h_sum{k="a"} 3.5\n'
+        't_h_count{k="a"} 2\n')
+    assert check_metrics.histogram_errors(check_metrics.parse(good)) == []
+    # +Inf bucket disagreeing with _count
+    bad = good.replace('t_h_count{k="a"} 2', 't_h_count{k="a"} 3')
+    errs = check_metrics.histogram_errors(check_metrics.parse(bad))
+    assert any("+Inf bucket" in e and "_count" in e for e in errs), errs
+    # cumulative counts must be monotone non-decreasing in le
+    bad = good.replace('le="+Inf"} 2', 'le="+Inf"} 0')
+    errs = check_metrics.histogram_errors(check_metrics.parse(bad))
+    assert any("monotone" in e for e in errs), errs
+    # a bucket series with no +Inf at all
+    errs = check_metrics.histogram_errors(check_metrics.parse(
+        "# TYPE t_h histogram\n"
+        't_h_bucket{k="a",le="1"} 1\n'
+        't_h_sum{k="a"} 1\nt_h_count{k="a"} 1\n'))
+    assert any("+Inf" in e for e in errs), errs
+
+
+def test_exemplars_render_gated_and_parse_with_span_ids(monkeypatch):
+    monkeypatch.setenv("CIM_TUNER_EXEMPLARS", "1")
+    reg = Registry()
+    h = reg.histogram("t_ex_seconds", "x", ("k",), buckets=(0.1, 1.0))
+    tr = Tracer(capacity=8)
+    with tr.span("unit.ex", histogram=h.labels(k="a")):
+        pass
+    text = reg.render()
+    assert " # {span_id=" in text
+    families = check_metrics.parse(text)
+    assert check_metrics.histogram_errors(families) == []
+    span_ids = check_metrics.exemplar_span_ids(families)
+    ev = tr.events()[-1]
+    assert span_ids == {ev["id"]}, "exemplar must link the span's id"
+    # the trace-json cross-check accepts the matching export...
+    ex = families["t_ex_seconds"]["exemplars"]
+    assert list(ex.values())[0]["value"] == pytest.approx(
+        ev["dur"] / 1e6, rel=1e-2)
+    # ...and the env gate strips the suffixes entirely
+    monkeypatch.setenv("CIM_TUNER_EXEMPLARS", "0")
+    off = reg.render()
+    assert "span_id" not in off
+    assert not any(rec["exemplars"]
+                   for rec in check_metrics.parse(off).values())
+
+
+def test_span_ids_are_unique_and_foreign_histograms_still_observe():
+    tr = Tracer(capacity=8)
+    h = Registry().histogram("t_plain_seconds", "x", buckets=(1.0,))
+
+    class _Plain:                 # a histogram without exemplar support
+        calls = 0
+
+        def observe(self, value, exemplar=None):
+            if exemplar is not None:
+                raise TypeError("no exemplars here")
+            _Plain.calls += 1
+
+    with tr.span("unit.a", histogram=h.labels()):
+        pass
+    with tr.span("unit.b", histogram=_Plain()):
+        pass
+    ids = [e["id"] for e in tr.events()]
+    assert len(set(ids)) == 2, ids
+    assert _Plain.calls == 1, "TypeError fallback must re-observe"
+
+
+def test_check_metrics_catalog_drift_both_directions(tmp_path):
+    md = ("| family | type |\n|---|---|\n"
+          "| `cim_present_total` | counter |\n"
+          "| `cim_ghost_total` | counter |\n")
+    text = ("# TYPE cim_present_total counter\ncim_present_total 1\n"
+            "# TYPE cim_extra_total counter\ncim_extra_total 1\n")
+    errs = check_metrics.catalog_drift(check_metrics.parse(text), md)
+    assert any("cim_extra_total" in e and "missing from the docs" in e
+               for e in errs)
+    assert any("cim_ghost_total" in e and "absent from the scrape" in e
+               for e in errs)
+    # the CLI wires it all together, including the trace cross-check
+    prom = tmp_path / "m.prom"
+    prom.write_text(
+        "# TYPE cim_present_total counter\ncim_present_total 1\n"
+        "# TYPE t_h histogram\n"
+        't_h_bucket{le="+Inf"} 1 # {span_id="77-1"} 0.5 1.0\n'
+        "t_h_sum 0.5\nt_h_count 1\n")
+    cat = tmp_path / "cat.md"
+    cat.write_text("| `cim_present_total` | counter |\n")
+    trace = tmp_path / "trace.json"
+    trace.write_text(json.dumps({"traceEvents": [{"id": "77-1"}]}))
+    rc = check_metrics.main([str(prom), "--require-exemplars", "t_h",
+                             "--catalog", str(cat),
+                             "--trace-json", str(trace)])
+    assert rc == 0
+    trace.write_text(json.dumps({"traceEvents": [{"id": "other"}]}))
+    assert check_metrics.main([str(prom), "--trace-json",
+                               str(trace)]) == 1
+    assert check_metrics.main([str(prom), "--require-exemplars",
+                               "cim_present_total"]) == 1
+
+
+def test_check_dashboard_catches_undocumented_metrics(tmp_path):
+    check_dashboard = _load_tool("check_dashboard")
+    # the shipped dashboard must pass against the shipped catalog
+    assert check_dashboard.main([]) == 0
+    board = {"panels": [
+        {"id": 1, "title": "outer", "targets": [
+            {"expr": "rate(cim_real_total[5m])"}],
+         "panels": [{"id": 2, "title": "nested", "targets": [
+             {"expr": "histogram_quantile(0.9, cim_fake_seconds_bucket)"
+              }]}]}]}
+    path = tmp_path / "board.json"
+    path.write_text(json.dumps(board))
+    cat = tmp_path / "cat.md"
+    cat.write_text("| `cim_real_total` | counter |\n")
+    refs = check_dashboard.dashboard_families(board)
+    assert set(refs) == {"cim_real_total", "cim_fake_seconds"}
+    assert check_dashboard.main(["--dashboard", str(path),
+                                 "--catalog", str(cat)]) == 1
+    cat.write_text("| `cim_real_total` | counter |\n"
+                   "| `cim_fake_seconds` | histogram |\n")
+    assert check_dashboard.main(["--dashboard", str(path),
+                                 "--catalog", str(cat)]) == 0
+
+
+# ------------------------------------------------------------------ #
+# kernel profiling hooks
+# ------------------------------------------------------------------ #
+def test_profile_gate_roofline_and_instrument(monkeypatch):
+    from repro.obs import profile
+
+    monkeypatch.delenv("CIM_TUNER_PROFILE", raising=False)
+    assert not profile.profiling_enabled()
+    monkeypatch.setenv("CIM_TUNER_PROFILE", "1")
+    assert profile.profiling_enabled()
+
+    # roofline: attainable is min(peak compute, bw * intensity)
+    monkeypatch.setenv("CIM_TUNER_PEAK_FLOPS", "100")
+    monkeypatch.setenv("CIM_TUNER_PEAK_BW", "10")
+    # intensity 1 flop/byte -> bw-bound at 10 FLOP/s; achieving 5 = 50%
+    assert profile.roofline_utilization(5, 5, 1.0) == pytest.approx(0.5)
+    # huge intensity -> compute-bound at 100 FLOP/s
+    assert profile.roofline_utilization(100, 0.001, 1.0) \
+        == pytest.approx(1.0)
+    assert profile.roofline_utilization(0, 0, 1.0) == 0.0
+    assert profile.roofline_utilization(1, 1, 0.0) == 0.0
+
+    calls = []
+    wrapped = profile.instrument(
+        "t_kernel", lambda x: calls.append(x) or x * 2,
+        lambda x: f"b{x}")
+    monkeypatch.delenv("CIM_TUNER_PROFILE", raising=False)
+    assert wrapped(3) == 6                 # off: plain passthrough
+    monkeypatch.setenv("CIM_TUNER_PROFILE", "1")
+    before = profile._M_US.labels(kernel="t_kernel", bucket="b4") \
+        .snapshot()[1]
+    assert wrapped(4) == 8                 # on: observed into cim_kernel_us
+    after = profile._M_US.labels(kernel="t_kernel", bucket="b4") \
+        .snapshot()[1]
+    assert after == before + 1
+    assert calls == [3, 4]
+    rows = [r for r in profile.summary() if r["kernel"] == "t_kernel"]
+    assert rows and rows[0]["bucket"] == "b4" \
+        and rows[0]["us_per_call"] > 0
+
+
 # ------------------------------------------------------------------ #
 # StatCounters: the legacy-dict facade
 # ------------------------------------------------------------------ #

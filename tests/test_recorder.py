@@ -1,0 +1,309 @@
+"""Search flight recorder (`repro.obs.recorder`) + timeline plumbing.
+
+Fast tier: recorder lifecycle/LRU semantics, regret-curve math and the
+deterministic CLI rendering, the store's `.timeline.json` sidecar
+round-trip, the `GET /v1/jobs/<key>/timeline` endpoint (live recorder,
+persisted sidecar after a server restart, 404), queue persistence on
+resolve, and the `repro-service timeline` CLI.  Slow tier: a real
+portfolio run in a child interpreter proving the recorded rungs
+reconcile *exactly* with the SSE progress events and the result's
+portfolio block, and that fixed seeds render an identical timeline.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import urllib.error
+
+import pytest
+from test_server import _get_json, _post_json, _server
+from test_service import CountingStubEngine
+
+from repro import obs
+from repro.core import job_key
+from repro.obs.recorder import (
+    FlightRecorder,
+    regret_curve,
+    render_timeline,
+)
+from repro.service import ResultStore, job_from_spec
+from repro.service.queue import resolve_settings
+from repro.service.server import _route
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SPEC = {"macro": "tpdcim-macro", "workload": "bert-large",
+         "area_budget_mm2": 2.23, "objective": "ee",
+         "search": "exhaustive",
+         "space": {"mr": [1, 2], "mc": [1, 2], "scr": [1, 4],
+                   "is_kb": [2, 16], "os_kb": [2, 16]}}
+
+
+def _synthetic(key: str = "feedc0de") -> dict:
+    """A hand-built schema-1 timeline: 3 rungs converging 10 -> 2."""
+    rec = FlightRecorder(capacity=4)
+    rec.start(key, method="portfolio", allocator="bandit",
+              backends=["sa", "sobol"], devices=1,
+              device_map={"sa": "cpu:0", "sobol": "cpu:0"},
+              total_evals=512, rungs=2, seed=0)
+    rec.event(key, {"phase": "race", "allocator": "bandit", "rung": 0,
+                    "best": 10.0, "backend_best": {"sa": 10.0,
+                                                   "sobol": 12.0},
+                    "pulls": {"sa": 1, "sobol": 1}, "devices": 1,
+                    "rewards": {"sa": 0.5, "sobol": 0.1}})
+    rec.event(key, {"phase": "race", "allocator": "bandit", "rung": 1,
+                    "best": 4.0, "backend_best": {"sa": 4.0,
+                                                  "sobol": 11.0},
+                    "pulls": {"sa": 2, "sobol": 1}, "devices": 1,
+                    "rewards": {"sa": 0.9}, "ucb": {"sa": 1.2,
+                                                    "sobol": 0.7},
+                    "chosen": "sa"})
+    rec.event(key, {"phase": "race", "allocator": "bandit", "rung": 2,
+                    "best": 2.0, "backend_best": {"sa": 2.0,
+                                                  "sobol": 11.0},
+                    "pulls": {"sa": 3, "sobol": 1}, "devices": 1,
+                    "rewards": {"sa": 0.4}, "ucb": {"sa": 1.1,
+                                                    "sobol": 0.6},
+                    "chosen": "sa"})
+    rec.event(key, {"phase": "final", "winner": "sa", "best": 2.0,
+                    "final": 2.0, "pulls": {"sa": 3, "sobol": 1}})
+    rec.annotate(key, dedup_fanout=2)
+    rec.finish(key, winner="sa", best=2.0, final=2.0,
+               pulls={"sa": 3, "sobol": 1})
+    return rec.timeline(key)
+
+
+# ------------------------------------------------------------------ #
+# recorder semantics
+# ------------------------------------------------------------------ #
+def test_recorder_lifecycle_and_snapshot_isolation():
+    rec = FlightRecorder(capacity=8)
+    rec.start("k1", method="portfolio", backends=["sa"])
+    rec.event("k1", {"phase": "race", "rung": 0, "best": 1.0})
+    rec.annotate("k1", dedup_fanout=3)
+    rec.finish("k1", winner="sa")
+    tl = rec.timeline("k1")
+    assert tl["schema"] == 1
+    assert tl["key"] == "k1"
+    assert tl["provenance"] == {"dedup_fanout": 3}
+    assert tl["summary"] == {"winner": "sa"}
+    # snapshots are deep copies in both directions
+    tl["events"].append({"phase": "bogus"})
+    assert len(rec.timeline("k1")["events"]) == 1
+    payload = {"phase": "race", "rung": 1, "pulls": {"sa": 1}}
+    rec.event("k1", payload)
+    payload["pulls"]["sa"] = 99
+    assert rec.timeline("k1")["events"][1]["pulls"] == {"sa": 1}
+    # unknown keys are no-ops, not errors
+    rec.event("ghost", {"phase": "race"})
+    rec.annotate("ghost", x=1)
+    rec.finish("ghost", winner="?")
+    assert rec.timeline("ghost") is None
+    # a timeline must round-trip through JSON (store persistence)
+    assert json.loads(json.dumps(rec.timeline("k1")))["key"] == "k1"
+
+
+def test_recorder_lru_eviction_and_env_capacity(monkeypatch):
+    rec = FlightRecorder(capacity=2)
+    for k in ("a", "b", "c"):
+        rec.start(k, method="portfolio")
+    assert rec.keys() == ["b", "c"]       # oldest evicted
+    rec.start("b", method="portfolio")    # restart refreshes recency
+    rec.start("d", method="portfolio")
+    assert rec.keys() == ["b", "d"]
+    monkeypatch.setenv("CIM_TUNER_TIMELINE_BUFFER", "3")
+    assert FlightRecorder().capacity == 3
+
+
+# ------------------------------------------------------------------ #
+# regret curve + rendering
+# ------------------------------------------------------------------ #
+def test_regret_curve_floor_includes_final_phase():
+    tl = _synthetic()
+    curve = regret_curve(tl)
+    assert [pt["rung"] for pt in curve] == [0, 1, 2]
+    assert [pt["pulls"] for pt in curve] == [2, 3, 4]
+    # floor is the overall best (2.0), so regret ends at zero
+    assert [pt["regret"] for pt in curve] == [8.0, 2.0, 0.0]
+    assert regret_curve({"events": []}) == []
+
+
+def test_render_timeline_deterministic_and_complete():
+    tl = _synthetic()
+    out = render_timeline(tl)
+    assert out == render_timeline(tl)     # pure function of the data
+    assert "method    portfolio allocator=bandit devices=1" in out
+    assert "backends  sa, sobol" in out
+    assert "dedup_fanout=2" in out
+    assert "winner    sa best=2 final=2" in out
+    # rung table rows: rung / best / chosen / pulls per backend
+    assert any(line.split() == ["1", "4", "sa", "2/1"]
+               for line in out.splitlines())
+    # regret bars shrink to zero; convergence names the zero-regret rung
+    assert "converged rung 2 of 3" in out
+    # no wall-clock leaks into the rendering (stable under fixed seeds)
+    assert str(tl["created_s"]) not in out
+
+
+# ------------------------------------------------------------------ #
+# store sidecar persistence
+# ------------------------------------------------------------------ #
+def test_store_timeline_sidecar_roundtrip(tmp_path):
+    store = ResultStore(str(tmp_path / "store"))
+    tl = _synthetic()
+    assert store.get_timeline("feedc0de") is None      # miss first
+    store.put_timeline("feedc0de", tl)
+    assert store.get_timeline("feedc0de") == tl
+    # corrupt sidecars degrade to a miss, never an exception
+    path = store._timeline_path("feedc0de")
+    with open(path, "w") as f:
+        f.write("{not json")
+    assert store.get_timeline("feedc0de") is None
+    # unserializable timelines degrade to a silent no-op
+    store.put_timeline("feedc0de", {"bad": object()})
+    assert store.get_timeline("feedc0de") is None
+
+
+# ------------------------------------------------------------------ #
+# HTTP endpoint + queue persistence + CLI
+# ------------------------------------------------------------------ #
+def test_timeline_endpoint_live_store_and_404(tmp_path):
+    key = "a1b2c3d4"
+    store = ResultStore(str(tmp_path / "store"))
+    srv = _server(tmp_path, store=store)
+    rec = obs.flight_recorder()
+    try:
+        rec.start(key, method="portfolio", backends=["sa"])
+        rec.finish(key, winner="sa")
+        doc = _get_json(f"{srv.url}/v1/jobs/{key}/timeline")
+        assert doc["source"] == "live"
+        assert doc["timeline"]["summary"] == {"winner": "sa"}
+        # once only the sidecar has it, the store serves it
+        store.put_timeline(key, rec.timeline(key))
+        rec.clear()
+        doc = _get_json(f"{srv.url}/v1/jobs/{key}/timeline")
+        assert doc["source"] == "store"
+        with pytest.raises(urllib.error.HTTPError) as err:
+            _get_json(f"{srv.url}/v1/jobs/unknown00/timeline")
+        assert err.value.code == 404
+    finally:
+        rec.clear()
+        srv.shutdown()
+    assert _route(f"/v1/jobs/{key}/timeline") == "/v1/jobs/{key}/timeline"
+
+
+def test_queue_persists_timeline_and_restart_serves_it(tmp_path, capsys):
+    """The resolve path writes the recorder's timeline into the store,
+    so a fresh server over the same store root (recorder empty, warm
+    store hit) still serves it -- and the CLI renders it."""
+    job, method = job_from_spec(_SPEC)
+    key = job_key(job, method, resolve_settings(method))
+    rec = obs.flight_recorder()
+    store = ResultStore(str(tmp_path / "store"))
+    srv = _server(tmp_path, store=store)
+    try:
+        rec.start(key, method=method, backends=["sa"], allocator="none")
+        rec.finish(key, winner="sa", best=1.0, final=1.0)
+        out = _post_json(f"{srv.url}/v1/jobs?wait=30", [_SPEC])
+        assert out["jobs"][0]["status"] == "done"
+        assert out["jobs"][0]["key"] == key
+        assert store.get_timeline(key) is not None
+    finally:
+        rec.clear()
+        srv.shutdown()
+    # restart: new server + engine over the same store root
+    srv2 = _server(tmp_path, engine=CountingStubEngine(),
+                   store=ResultStore(str(tmp_path / "store")))
+    try:
+        doc = _get_json(f"{srv2.url}/v1/jobs/{key}/timeline")
+        assert doc["source"] == "store"
+        assert doc["timeline"]["summary"]["winner"] == "sa"
+        from repro.service.__main__ import main
+        assert main(["timeline", key, "--url", srv2.url]) == 0
+        assert "winner    sa" in capsys.readouterr().out
+        # --json prints the raw timeline
+        assert main(["timeline", key, "--url", srv2.url, "--json"]) == 0
+        assert json.loads(capsys.readouterr().out)["key"] == key
+        # unknown keys exit 2 with a stderr note
+        assert main(["timeline", "unknown00", "--url", srv2.url]) == 2
+        assert "no timeline" in capsys.readouterr().err
+    finally:
+        srv2.shutdown()
+
+
+# ------------------------------------------------------------------ #
+# real-engine reconciliation (slow tier)
+# ------------------------------------------------------------------ #
+# Child interpreter for the same reason as test_obs's progress child: a
+# real XLA portfolio run inside the suite process perturbs native
+# allocator state enough to corrupt later jitted tests.
+_RECONCILE_CHILD = """
+import json, sys
+from test_service import _job
+from repro import obs
+from repro.core import ExplorationEngine, job_key
+from repro.obs.recorder import render_timeline
+from repro.search import PortfolioSettings
+from repro.service.queue import resolve_settings
+
+settings = resolve_settings(
+    "portfolio", PortfolioSettings(backends=("sobol", "sa"),
+                                   total_evals=512, rungs=2))
+job = _job(budget=7.91)
+key = job_key(job, "portfolio", settings)
+got = []
+obs.progress_bus().subscribe([key], lambda k, ev: got.append(ev))
+eng = ExplorationEngine()
+res = eng.run([job], method="portfolio", settings=settings)[0]
+tl = obs.flight_recorder().timeline(key)
+render_1 = render_timeline(tl)
+events_run1 = list(got)
+# identical fixed-seed rerun: the recorder restarts the key's timeline
+eng.run([job], method="portfolio", settings=settings)
+render_2 = render_timeline(obs.flight_recorder().timeline(key))
+json.dump({"key": key, "events": events_run1, "timeline": tl,
+           "portfolio": res.search["portfolio"],
+           "render_1": render_1, "render_2": render_2}, sys.stdout)
+"""
+
+
+@pytest.mark.slow
+def test_portfolio_timeline_reconciles_with_sse_and_result():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(REPO, "src"), os.path.join(REPO, "tests")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    proc = subprocess.run(
+        [sys.executable, "-c", _RECONCILE_CHILD],
+        env=env, capture_output=True, text=True, cwd=REPO, timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    out = json.loads(proc.stdout)
+    tl, sse = out["timeline"], out["events"]
+    assert tl["schema"] == 1 and tl["key"] == out["key"]
+    assert tl["method"] == "portfolio" and tl["allocator"] == "bandit"
+    assert set(tl["device_map"]) == {"sobol", "sa"}
+
+    # every SSE progress event must appear, in order, as a timeline
+    # event agreeing on ALL shared payload fields -- the recorder sees
+    # a superset (rewards / ucb / chosen), never a different number
+    shared = ("phase", "allocator", "rung", "best", "backend_best",
+              "pulls", "devices")
+    assert len(tl["events"]) == len(sse)
+    for tl_ev, sse_ev in zip(tl["events"], sse):
+        for field in shared:
+            assert tl_ev.get(field) == sse_ev.get(field), \
+                (field, tl_ev, sse_ev)
+    races = [ev for ev in tl["events"] if ev["phase"] == "race"]
+    assert races and all("rewards" in ev for ev in races)
+    assert any("ucb" in ev and "chosen" in ev for ev in races[1:])
+
+    # the final result's portfolio block and the summary must agree
+    portfolio = out["portfolio"]
+    assert tl["summary"]["winner"] == portfolio["winner"]
+    assert tl["summary"]["pulls"] == tl["events"][-1]["pulls"]
+
+    # fixed seeds => byte-identical CLI rendering across reruns
+    assert out["render_1"] == out["render_2"]
+    assert "winner    " + portfolio["winner"] in out["render_1"]

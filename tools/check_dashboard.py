@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""Grafana-dashboard <-> docs-catalog drift gate (stdlib only).
+
+Walks every panel target in ``tools/grafana/cim-tuner.json``, extracts
+the ``cim_*`` metric families referenced by PromQL ``expr`` strings
+(normalizing ``_bucket`` / ``_sum`` / ``_count`` histogram-series
+suffixes back to the family name), and fails unless each one appears in
+the ``docs/observability.md`` metric-catalog table.  The docs CI job
+runs::
+
+    python tools/check_dashboard.py \
+        --dashboard tools/grafana/cim-tuner.json \
+        --catalog docs/observability.md
+
+so a panel can never reference a metric the catalog does not document
+-- the same catalog the service-fleet smoke diffs against the live
+``/v1/metrics`` scrape, closing the dashboard -> docs -> scrape loop.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from check_metrics import catalog_families  # noqa: E402
+
+_METRIC = re.compile(r"\bcim_[a-z0-9_]+\b")
+_SUFFIXES = ("_bucket", "_sum", "_count")
+
+
+def _panels(doc: dict):
+    """Every panel, including ones nested inside row panels."""
+    stack = list(doc.get("panels", []))
+    while stack:
+        panel = stack.pop()
+        stack.extend(panel.get("panels", []))
+        yield panel
+
+
+def dashboard_families(doc: dict) -> dict[str, list[str]]:
+    """``{family: [panel titles referencing it]}`` across the board."""
+    out: dict[str, list[str]] = {}
+    for panel in _panels(doc):
+        title = panel.get("title", f"panel {panel.get('id', '?')}")
+        for target in panel.get("targets", []):
+            for name in _METRIC.findall(target.get("expr", "")):
+                for suf in _SUFFIXES:
+                    if name.endswith(suf):
+                        name = name[:-len(suf)]
+                        break
+                out.setdefault(name, []).append(title)
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    here = os.path.dirname(os.path.abspath(__file__))
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dashboard",
+                    default=os.path.join(here, "grafana", "cim-tuner.json"))
+    ap.add_argument("--catalog",
+                    default=os.path.join(here, os.pardir, "docs",
+                                         "observability.md"))
+    args = ap.parse_args(argv)
+
+    with open(args.dashboard, encoding="utf-8") as f:
+        doc = json.load(f)
+    with open(args.catalog, encoding="utf-8") as f:
+        documented = catalog_families(f.read())
+
+    referenced = dashboard_families(doc)
+    if not referenced:
+        print("dashboard references no cim_* metrics", file=sys.stderr)
+        return 1
+    errors = []
+    for name in sorted(set(referenced) - documented):
+        panels = ", ".join(sorted(set(referenced[name])))
+        errors.append(f"dashboard metric {name!r} (panels: {panels}) "
+                      f"missing from the docs catalog")
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"dashboard references {len(referenced)} documented metric "
+          f"families: {'FAIL' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

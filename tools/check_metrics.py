@@ -3,21 +3,34 @@
 
 The service-fleet CI smoke pipes ``GET /v1/metrics`` output through this
 to prove the endpoint is genuinely Prometheus-parseable (not just
-200-OK text) and that the counters a healthy fleet run must move --
-engine jobs, store traffic -- are present and non-zero::
+200-OK text), that every histogram family is self-consistent (cumulative
+bucket counts monotone non-decreasing, ``+Inf`` bucket == ``_count``),
+and that the counters a healthy fleet run must move -- engine jobs,
+store traffic -- are present and non-zero::
 
     curl -s "$URL/v1/metrics" | python tools/check_metrics.py \
         --min-families 12 \
         --require cim_http_request_seconds \
-        --nonzero cim_engine_jobs_total --nonzero cim_store_ops_total
+        --nonzero cim_engine_jobs_total --nonzero cim_store_ops_total \
+        --require-exemplars cim_kernel_us \
+        --catalog docs/observability.md --trace-json trace.json
+
+OpenMetrics exemplar suffixes (``... # {span_id="..."} value ts``) are
+accepted and parsed; ``--require-exemplars FAMILY`` asserts a family
+actually carries them, ``--trace-json FILE`` asserts every exemplar's
+``span_id`` points at a real span in a ``/v1/trace`` export, and
+``--catalog FILE`` diffs the scraped families against the
+``docs/observability.md`` metric-catalog table in both directions.
 
 Also importable: :func:`parse` returns ``{family: {"type", "help",
-"samples": {labeled-name: value}}}`` and raises ``ValueError`` on any
-malformed line, which the unit tests use for a render/parse round-trip.
+"samples": {labeled-name: value}, "buckets": {...}, "exemplars":
+{...}}}`` and raises ``ValueError`` on any malformed line, which the
+unit tests use for a render/parse round-trip.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import re
 import sys
 
@@ -25,11 +38,16 @@ _NAME = r"[a-zA-Z_:][a-zA-Z0-9_:]*"
 # label values are quoted and may contain '}' (e.g. route templates like
 # /v1/jobs/{key}), so the block must be matched pair-by-pair, not [^}]*
 _LBLOCK = r'\{(?:\s*[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*"\s*,?)*\}'
+_NUM = r"-?[0-9.eE+-]+|[+-]Inf|NaN"
+#: OpenMetrics exemplar suffix: `# {labels} value [timestamp]`
+_EXEMPLAR = rf"#\s+({_LBLOCK})\s+({_NUM})(?:\s+({_NUM}))?"
 _SAMPLE = re.compile(
-    rf"^({_NAME})({_LBLOCK})?\s+(-?[0-9.eE+-]+|[+-]Inf|NaN)\s*$")
+    rf"^({_NAME})({_LBLOCK})?\s+({_NUM})(?:\s+{_EXEMPLAR})?\s*$")
 _LABELS = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
 #: histogram/summary series carry these suffixes on the family name
 _SUFFIXES = ("_bucket", "_sum", "_count")
+#: docs/observability.md catalog rows: `| `cim_family` | type | ... |`
+_CATALOG_ROW = re.compile(rf"^\|\s*`({_NAME})`\s*\|")
 
 
 def _family_of(sample_name: str, families: dict) -> str | None:
@@ -41,13 +59,38 @@ def _family_of(sample_name: str, families: dict) -> str | None:
     return None
 
 
+def _float(value_s: str) -> float:
+    return float(value_s.replace("Inf", "inf"))
+
+
+def _check_labels(labels: str, lineno: int) -> None:
+    body = labels[1:-1].strip()
+    if body and _LABELS.sub("", body).strip(", ") != "":
+        raise ValueError(f"line {lineno}: malformed labels: {labels!r}")
+
+
+def _series_key(labels: str, drop: tuple[str, ...] = ()) -> tuple:
+    """Canonical (sorted label pairs) identity of one labeled series."""
+    return tuple(sorted((k, v) for k, v in _LABELS.findall(labels or "")
+                        if k not in drop))
+
+
 def parse(text: str) -> dict:
     """Parse Prometheus text exposition; raises ValueError on bad lines.
 
     Every sample must belong to a ``# TYPE``-declared family (histogram
-    ``_bucket``/``_sum``/``_count`` series resolve to their base family).
+    ``_bucket``/``_sum``/``_count`` series resolve to their base
+    family).  Per family the record carries ``samples`` (labeled name ->
+    value), ``buckets`` (series key sans ``le`` -> {le: count}) and
+    ``exemplars`` (labeled sample name -> {"labels", "value", "ts"}).
     """
     families: dict[str, dict] = {}
+
+    def _family_rec(name: str) -> dict:
+        return families.setdefault(
+            name, {"type": None, "help": "", "samples": {},
+                   "buckets": {}, "exemplars": {}})
+
     for lineno, line in enumerate(text.splitlines(), 1):
         line = line.rstrip()
         if not line:
@@ -56,17 +99,14 @@ def parse(text: str) -> dict:
             parts = line.split(None, 3)
             if len(parts) < 3:
                 raise ValueError(f"line {lineno}: malformed HELP")
-            families.setdefault(
-                parts[2], {"type": None, "help": "", "samples": {}})
-            families[parts[2]]["help"] = parts[3] if len(parts) > 3 else ""
+            _family_rec(parts[2])["help"] = \
+                parts[3] if len(parts) > 3 else ""
         elif line.startswith("# TYPE "):
             parts = line.split()
             if len(parts) != 4 or parts[3] not in (
                     "counter", "gauge", "histogram", "summary", "untyped"):
                 raise ValueError(f"line {lineno}: malformed TYPE: {line!r}")
-            families.setdefault(
-                parts[2], {"type": None, "help": "", "samples": {}})
-            families[parts[2]]["type"] = parts[3]
+            _family_rec(parts[2])["type"] = parts[3]
         elif line.startswith("#"):
             continue                                   # plain comment
         else:
@@ -74,25 +114,112 @@ def parse(text: str) -> dict:
             if not m:
                 raise ValueError(f"line {lineno}: malformed sample: {line!r}")
             name, labels, value_s = m.group(1), m.group(2) or "", m.group(3)
+            ex_labels, ex_value_s, ex_ts_s = m.group(4), m.group(5), \
+                m.group(6)
             fam = _family_of(name, families)
             if fam is None:
                 raise ValueError(
                     f"line {lineno}: sample {name!r} has no TYPE family")
             if labels:
-                body = labels[1:-1].strip()
-                if body and _LABELS.sub("", body).strip(", ") != "":
-                    raise ValueError(
-                        f"line {lineno}: malformed labels: {labels!r}")
+                _check_labels(labels, lineno)
             try:
-                value = float(value_s.replace("Inf", "inf"))
+                value = _float(value_s)
             except ValueError as exc:
                 raise ValueError(
                     f"line {lineno}: bad value {value_s!r}") from exc
-            families[fam]["samples"][name + labels] = value
+            rec = families[fam]
+            rec["samples"][name + labels] = value
+            if name.endswith("_bucket"):
+                le = dict(_LABELS.findall(labels)).get("le")
+                if le is None:
+                    raise ValueError(
+                        f"line {lineno}: bucket sample without le label")
+                rec["buckets"].setdefault(
+                    _series_key(labels, drop=("le",)), {})[le] = value
+            if ex_labels is not None:
+                _check_labels(ex_labels, lineno)
+                try:
+                    ex = {"labels": dict(_LABELS.findall(ex_labels)),
+                          "value": _float(ex_value_s),
+                          "ts": _float(ex_ts_s)
+                          if ex_ts_s is not None else None}
+                except ValueError as exc:
+                    raise ValueError(
+                        f"line {lineno}: bad exemplar: {line!r}") from exc
+                rec["exemplars"][name + labels] = ex
     for fam, rec in families.items():
         if rec["type"] is None:
             raise ValueError(f"family {fam!r} has samples but no TYPE")
     return families
+
+
+def histogram_errors(families: dict) -> list[str]:
+    """Self-consistency violations across every histogram family:
+    cumulative bucket counts must be monotone non-decreasing in ``le``,
+    the ``+Inf`` bucket must exist and equal the series' ``_count``."""
+    errors = []
+    for fam, rec in families.items():
+        if rec["type"] != "histogram":
+            continue
+        counts = {}
+        for k, v in rec["samples"].items():
+            if k.startswith(f"{fam}_count"):
+                counts[_series_key(k[len(fam) + len("_count"):])] = v
+        for key, buckets in rec["buckets"].items():
+            label_s = "{" + ",".join(f'{k}="{v}"' for k, v in key) + "}"
+            order = sorted(buckets, key=_float)
+            vals = [buckets[le] for le in order]
+            if any(b < a for a, b in zip(vals, vals[1:])):
+                errors.append(f"{fam}{label_s}: bucket counts not "
+                              f"monotone non-decreasing")
+            if "+Inf" not in buckets:
+                errors.append(f"{fam}{label_s}: missing +Inf bucket")
+                continue
+            count = counts.get(key)
+            if count is None:
+                errors.append(f"{fam}{label_s}: buckets without a "
+                              f"_count sample")
+            elif buckets["+Inf"] != count:
+                errors.append(
+                    f"{fam}{label_s}: +Inf bucket {buckets['+Inf']:g} "
+                    f"!= _count {count:g}")
+    return errors
+
+
+def catalog_families(md_text: str) -> set[str]:
+    """``cim_*`` family names listed in the docs metric-catalog table."""
+    out = set()
+    for line in md_text.splitlines():
+        m = _CATALOG_ROW.match(line.strip())
+        if m and m.group(1).startswith("cim_"):
+            out.add(m.group(1))
+    return out
+
+
+def catalog_drift(families: dict, md_text: str) -> list[str]:
+    """Two-way diff between the scraped ``cim_*`` families and the docs
+    catalog: every scraped family must be documented and vice versa."""
+    scraped = {f for f in families if f.startswith("cim_")}
+    documented = catalog_families(md_text)
+    errors = []
+    for name in sorted(scraped - documented):
+        errors.append(f"scraped family {name!r} missing from the docs "
+                      f"catalog")
+    for name in sorted(documented - scraped):
+        errors.append(f"documented family {name!r} absent from the "
+                      f"scrape")
+    return errors
+
+
+def exemplar_span_ids(families: dict) -> set[str]:
+    """Every ``span_id`` referenced by an exemplar in the exposition."""
+    out = set()
+    for rec in families.values():
+        for ex in rec["exemplars"].values():
+            span_id = ex["labels"].get("span_id")
+            if span_id:
+                out.add(span_id)
+    return out
 
 
 def family_total(families: dict, name: str) -> float:
@@ -117,6 +244,15 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--nonzero", action="append", default=[],
                     metavar="FAMILY",
                     help="family whose sample total must be > 0")
+    ap.add_argument("--require-exemplars", action="append", default=[],
+                    metavar="FAMILY",
+                    help="family that must carry OpenMetrics exemplars")
+    ap.add_argument("--catalog", default=None, metavar="FILE",
+                    help="docs/observability.md to diff scraped families "
+                         "against (two-way)")
+    ap.add_argument("--trace-json", default=None, metavar="FILE",
+                    help="Chrome trace export (/v1/trace); every "
+                         "exemplar span_id must resolve to a span in it")
     args = ap.parse_args(argv)
 
     text = sys.stdin.read() if args.file == "-" else \
@@ -127,16 +263,30 @@ def main(argv: list[str] | None = None) -> int:
         print(f"NOT Prometheus-parseable: {exc}", file=sys.stderr)
         return 1
 
-    errors = []
+    errors = histogram_errors(families)
     if len(families) < args.min_families:
         errors.append(f"only {len(families)} families, "
                       f"need >= {args.min_families}")
-    for name in args.require + args.nonzero:
+    for name in args.require + args.nonzero + args.require_exemplars:
         if name not in families:
             errors.append(f"missing family {name!r}")
     for name in args.nonzero:
         if name in families and family_total(families, name) <= 0:
             errors.append(f"family {name!r} total is zero")
+    for name in args.require_exemplars:
+        if name in families and not families[name]["exemplars"]:
+            errors.append(f"family {name!r} carries no exemplars")
+    if args.catalog:
+        errors.extend(catalog_drift(
+            families, open(args.catalog, encoding="utf-8").read()))
+    if args.trace_json:
+        with open(args.trace_json, encoding="utf-8") as f:
+            doc = json.load(f)
+        span_ids = {ev.get("id") for ev in doc.get("traceEvents", [])}
+        for span_id in sorted(exemplar_span_ids(families)):
+            if span_id not in span_ids:
+                errors.append(f"exemplar span_id {span_id!r} not found "
+                              f"in {args.trace_json}")
     for e in errors:
         print(e, file=sys.stderr)
     print(f"parsed {len(families)} metric families: "
