@@ -139,13 +139,24 @@ def run() -> typing.Iterator[str]:
 
 def run_search(
     networks: typing.Sequence[str] = SEARCH_NETWORKS,
+    backends: typing.Sequence[str] | None = None,
+    fidelity: str = "analytic",
 ) -> typing.Iterator[str]:
     """Backend race: best-found objective + wall-clock per ``repro.search``
     backend (portfolio rows once per budget allocator), against the
     exhaustive ground truth, one engine per race so every backend pays its
-    own compile exactly once.  Every row carries an ``alloc=`` column."""
+    own compile exactly once.  Every row carries an ``alloc=`` column.
+
+    ``backends`` restricts the race (``None`` = all); ``fidelity`` other
+    than ``"analytic"`` (``"two"``/``"measured"``) runs the portfolio as a
+    two-fidelity race whose final rung re-scores the top-K analytic
+    winners with measured Pallas kernel timings -- its rows then carry
+    ``rank_corr=`` plus both rankings (see docs/calibration.md)."""
     from repro.search import PortfolioSettings
 
+    chosen = set(backends) if backends else None
+    fidelity = {"two": "measured"}.get(fidelity, fidelity)
+    measured = fidelity != "analytic"
     macro = get_macro("vanilla-dcim")
     engine = ExplorationEngine()
     for name in networks:
@@ -158,29 +169,51 @@ def run_search(
             f"EE={ex.metrics['tops_w']:.2f} TOPS/W "
             f"(ground truth, wall {t_ex:.2f}s)")
         races: list[tuple[str, str | None]] = \
-            [(b, None) for b in SEARCH_BACKENDS] + \
-            [("portfolio", alloc) for alloc in PORTFOLIO_ALLOCATORS]
+            [(b, None) for b in SEARCH_BACKENDS
+             if chosen is None or b in chosen] + \
+            ([("portfolio", alloc) for alloc in PORTFOLIO_ALLOCATORS]
+             if chosen is None or "portfolio" in chosen else [])
         best_name, best_energy = None, float("inf")
         wall: dict[str, float] = {}
         for backend, alloc in races:
             settings = None if alloc is None else \
-                PortfolioSettings(allocator=alloc)
+                PortfolioSettings(allocator=alloc,
+                                  fidelity=fidelity if measured
+                                  else "analytic")
             (res,), t_b = timed(engine.run, [job], method=backend,
                                 settings=settings)
             row = backend if alloc is None else f"{backend}_{alloc}"
             wall[row] = t_b
             energy = res.metrics["energy_pj"]
-            if energy < best_energy:
-                best_name, best_energy = row, energy
-            gap = energy / ex.metrics["energy_pj"] - 1.0
+            tf = res.search.get("two_fidelity") \
+                if backend == "portfolio" else None
+            # measured-fidelity metrics carry calibrated energy constants
+            # -- a different unit system than the analytic exhaustive
+            # reference, so the gap column and the cross-backend best-of
+            # would compare apples to oranges
+            if tf is None:
+                if energy < best_energy:
+                    best_name, best_energy = row, energy
+                gap_txt = (f"(gap "
+                           f"{(energy / ex.metrics['energy_pj'] - 1) * 100:+.3f}% "
+                           f"vs exhaustive) ")
+            else:
+                gap_txt = "(calibrated units; gap n/a) "
             extra = ""
             if backend == "portfolio":
                 pf = res.search["portfolio"]
                 extra = f" winner={pf['winner']} devices={pf['devices']}"
+                if tf is not None:
+                    extra += (
+                        f" rank_corr={tf['rank_correlation']:.3f}"
+                        f" topk={tf['topk']}"
+                        f" analytic_rank={tf['analytic_ranking']}"
+                        f" measured_rank={tf['measured_ranking']}"
+                        f" calib={tf['source']}")
             yield csv_line(
                 f"fig7_search_{name}_{row}", t_b * 1e6,
                 f"alloc={alloc or '-'} energy={energy:.6g} pJ "
-                f"(gap {gap * 100:+.3f}% vs exhaustive) "
+                f"{gap_txt}"
                 f"EE={res.metrics['tops_w']:.2f} TOPS/W "
                 f"wall={t_b:.2f}s{extra}")
         if {"portfolio_bandit", "portfolio_halving"} <= wall.keys():
@@ -191,23 +224,37 @@ def run_search(
                 f"alloc=bandit-vs-halving bandit {wall['portfolio_bandit']:.2f}s "
                 f"vs halving {wall['portfolio_halving']:.2f}s "
                 f"(x{speed:.2f})")
-        yield csv_line(
-            f"fig7_search_{name}_best", 0.0,
-            f"alloc=- best backend={best_name} "
-            f"energy={best_energy:.6g} pJ")
+        if best_name is not None:
+            yield csv_line(
+                f"fig7_search_{name}_best", 0.0,
+                f"alloc=- best backend={best_name} "
+                f"energy={best_energy:.6g} pJ")
 
 
 if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--search", action="store_true",
+    ap.add_argument("--search", nargs="?", const="all", default=None,
+                    metavar="BACKENDS",
                     help="race the repro.search backends instead of the "
-                         "ST-vs-SO sweep")
+                         "ST-vs-SO sweep; optional comma-separated subset "
+                         "(e.g. 'portfolio' or 'sa,sobol'; default: all)")
+    ap.add_argument("--fidelity", choices=("analytic", "two", "measured"),
+                    default="analytic",
+                    help="'two'/'measured': the portfolio's final rung "
+                         "re-scores top-K analytic winners with measured "
+                         "Pallas kernel timings and rows report "
+                         "rank_corr= (default: analytic)")
     ap.add_argument("--networks", default=",".join(SEARCH_NETWORKS),
                     help="comma-separated networks for --search")
     args = ap.parse_args()
-    lines = run_search(tuple(args.networks.split(","))) if args.search \
-        else run()
+    if args.search is not None:
+        backends = None if args.search == "all" \
+            else tuple(b for b in args.search.split(",") if b)
+        lines = run_search(tuple(args.networks.split(",")),
+                           backends=backends, fidelity=args.fidelity)
+    else:
+        lines = run()
     for line in lines:
         print(line, flush=True)

@@ -14,7 +14,11 @@ their rows incrementally through the async DSE service.
 ``--trace`` exports the run's span ring buffer as a Chrome trace;
 ``--profile-kernels`` appends a ``_kernel_profile`` pseudo-module record
 (one row per profiled kernel/shape with ``us_per_call``) so
-``plot_trend.py`` trends kernel microseconds alongside the figures.
+``plot_trend.py`` trends kernel microseconds alongside the figures;
+``--two-fidelity`` appends a ``_two_fidelity`` record whose rows track
+the analytic-vs-measured rank gap per network (``(1 - rank_corr) * 1000``
+as ``us_per_call`` so the same trend gate applies -- 0 means the
+calibrated re-scoring agrees with the analytic ranking).
 """
 from __future__ import annotations
 
@@ -66,6 +70,10 @@ def main() -> None:
                     help="run the kernel micro-profile sweep "
                          "(CIM_TUNER_PROFILE) and append a "
                          "_kernel_profile record to the jsonl")
+    ap.add_argument("--two-fidelity", action="store_true",
+                    help="run the two-fidelity portfolio race (measured "
+                         "final rung) and append a _two_fidelity record "
+                         "with analytic-vs-measured rank-gap rows")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else None
     if args.service_url:
@@ -116,13 +124,21 @@ def main() -> None:
         rec = {"module": "_kernel_profile",
                "title": "Pallas kernel micro-profile", "rows": []}
         try:
-            for row in obs.profile.run_microbench():
+            measurements = obs.profile.run_microbench()
+            for row in obs.profile.summary(measurements):
+                flops = row.get("flops")
+                nbytes = row.get("bytes")
+                roofline = row.get("roofline_utilization")
                 rec["rows"].append({
                     "name": f"kernel/{row['kernel']}/{row['bucket']}",
                     "us_per_call": row["us_per_call"],
-                    "derived": (f"flops={row['flops']:.3g} "
-                                f"bytes={row['bytes']:.3g} "
-                                f"roofline={row['roofline_utilization']:.3g}"),
+                    "derived": (
+                        f"flops={flops:.3g} " if flops is not None
+                        else "flops=- ") + (
+                        f"bytes={nbytes:.3g} " if nbytes is not None
+                        else "bytes=- ") + (
+                        f"roofline={roofline:.3g}" if roofline is not None
+                        else "roofline=-"),
                 })
                 print(f"{rec['rows'][-1]['name']},"
                       f"{row['us_per_call']:.3f},"
@@ -133,6 +149,51 @@ def main() -> None:
             rec["status"] = "failed"
             rec["error"] = traceback.format_exc()
             print(f"# _kernel_profile FAILED:\n{rec['error']}", flush=True)
+        rec["elapsed_s"] = round(time.perf_counter() - t0, 3)
+        records.append(rec)
+
+    if args.two_fidelity:
+        print("# === _two_fidelity: measured-rung portfolio race ===",
+              flush=True)
+        t0 = time.perf_counter()
+        rec = {"module": "_two_fidelity",
+               "title": "two-fidelity analytic-vs-measured rank gap",
+               "rows": []}
+        try:
+            from benchmarks.common import get_workload
+            from benchmarks.fig7_mapping import BUDGET, SEARCH_NETWORKS
+            from repro.core import ExplorationEngine, ExploreJob, get_macro
+            from repro.search import PortfolioSettings
+
+            engine = ExplorationEngine()
+            macro = get_macro("vanilla-dcim")
+            for name in SEARCH_NETWORKS:
+                job = ExploreJob(macro, get_workload(name), BUDGET,
+                                 objective="ee", strategy_set="st")
+                (res,) = engine.run(
+                    [job], method="portfolio",
+                    settings=PortfolioSettings(fidelity="measured"))
+                tf = res.search["two_fidelity"]
+                corr = float(tf["rank_correlation"])
+                # rank gap in trend-gate units: 0 = perfect agreement;
+                # floor keeps us_per_call > 0 for plot_trend's numeric gate
+                rec["rows"].append({
+                    "name": f"two_fidelity/{name}/rank_gap",
+                    "us_per_call": max(1e-3, (1.0 - corr) * 1000.0),
+                    "derived": (f"rank_corr={corr:.3f} topk={tf['topk']} "
+                                f"calib={tf['source']} "
+                                f"measurements={tf['measurement_count']} "
+                                f"budget={BUDGET}"),
+                })
+                print(f"{rec['rows'][-1]['name']},"
+                      f"{rec['rows'][-1]['us_per_call']:.3f},"
+                      f"{rec['rows'][-1]['derived']}", flush=True)
+            rec["status"] = "ok"
+        except Exception:   # noqa: BLE001 -- trend row must not fail the run
+            failures += 1
+            rec["status"] = "failed"
+            rec["error"] = traceback.format_exc()
+            print(f"# _two_fidelity FAILED:\n{rec['error']}", flush=True)
         rec["elapsed_s"] = round(time.perf_counter() - t0, 3)
         records.append(rec)
 

@@ -16,7 +16,21 @@ Public API:
                                        evolution / sobol / portfolio)
     distributed_co_explore          -- multi-pod DSE (shard_map)
 """
-from repro.core.calibration import DEFAULT_TECH, TechConstants
+from repro.core.calibration import (
+    CALIBRATION_ENV,
+    DEFAULT_TECH,
+    CorrectionFactors,
+    CostModel,
+    TechConstants,
+    calibration_version,
+    default_cost_model,
+    fit_corrections,
+    fit_report,
+    load_calibration,
+    reset_default_cost_model,
+    resolve_tech,
+    save_calibration,
+)
 from repro.core.compiler import (
     compile_schedule,
     compile_trace,
@@ -49,6 +63,10 @@ from repro.core.template import AcceleratorConfig, accelerator_area_mm2
 
 __all__ = [
     "DEFAULT_TECH", "TechConstants",
+    "CostModel", "CorrectionFactors", "CALIBRATION_ENV",
+    "default_cost_model", "reset_default_cost_model", "resolve_tech",
+    "calibration_version", "fit_corrections", "fit_report",
+    "save_calibration", "load_calibration",
     "MacroSpec", "MACRO_LIBRARY", "get_macro",
     "AcceleratorConfig", "accelerator_area_mm2",
     "MatmulOp", "Workload", "bert_large_workload",

@@ -45,7 +45,7 @@ import typing
 import jax
 import jax.numpy as jnp
 
-from repro.core.calibration import DEFAULT_TECH, TechConstants
+from repro.core.calibration import TechConstants, resolve_tech
 from repro.core.macro import MacroSpec
 from repro.core.strategies import ALL_STRATEGIES, STRATEGY_SETS
 
@@ -93,8 +93,9 @@ class TechParams(typing.NamedTuple):
 
 
 def macro_params(macro: MacroSpec,
-                 tech: TechConstants = DEFAULT_TECH) -> MacroParams:
+                 tech: TechConstants | None = None) -> MacroParams:
     """Scalar (python-float) params of a macro -- the static baked path."""
+    tech = resolve_tech(tech)
     return MacroParams(
         al=float(macro.al), pc=float(macro.pc),
         icw=float(macro.icw), wuw=float(macro.wuw),
@@ -106,7 +107,8 @@ def macro_params(macro: MacroSpec,
     )
 
 
-def tech_params(tech: TechConstants = DEFAULT_TECH) -> TechParams:
+def tech_params(tech: TechConstants | None = None) -> TechParams:
+    tech = resolve_tech(tech)
     return TechParams(
         e_cim_update_pj_bit=float(tech.e_cim_update_pj_bit),
         e_sram_rd_pj_bit=float(tech.e_sram_rd_pj_bit),
@@ -124,10 +126,11 @@ def tech_params(tech: TechConstants = DEFAULT_TECH) -> TechParams:
 
 
 def _as_params(macro, tech):
-    """Normalize (MacroSpec|MacroParams, TechConstants|TechParams)."""
+    """Normalize (MacroSpec|MacroParams, TechConstants|TechParams|None)."""
     mp = macro if isinstance(macro, MacroParams) else macro_params(
-        macro, tech if isinstance(tech, TechConstants) else DEFAULT_TECH)
-    tp = tech if isinstance(tech, TechParams) else tech_params(tech)
+        macro, tech if isinstance(tech, TechConstants) else None)
+    tp = tech if isinstance(tech, TechParams) else tech_params(
+        tech if isinstance(tech, TechConstants) else None)
     return mp, tp
 
 
@@ -188,7 +191,7 @@ def matmul_cost(
     mr, mc, scr, is_kb, os_kb, bw, area_mm2,
     # macro (MacroSpec = static python constants, MacroParams = traceable)
     macro,
-    tech=DEFAULT_TECH,
+    tech=None,
 ) -> CostBreakdown:
     """Cost of one (m x k) @ (k x n) call under one strategy on one config.
 
@@ -366,7 +369,7 @@ _STRAT_BITS = jnp.array(
 )  # [8, 3]
 
 
-def strategy_table(op_row, cfg_row, area_mm2, macro, tech=DEFAULT_TECH):
+def strategy_table(op_row, cfg_row, area_mm2, macro, tech=None):
     """Costs of one op under all 8 strategies.  op_row = (m,k,n,count,static),
     cfg_row = (mr,mc,scr,is_kb,os_kb,bw)."""
     def _one(bits):
@@ -379,7 +382,7 @@ def strategy_table(op_row, cfg_row, area_mm2, macro, tech=DEFAULT_TECH):
     return jax.vmap(_one)(_STRAT_BITS)
 
 
-def area_mm2_jnp(cfg_row, macro, tech=DEFAULT_TECH):
+def area_mm2_jnp(cfg_row, macro, tech=None):
     """jnp version of template.accelerator_area_mm2 (traced cfg and,
     via MacroParams/TechParams, optionally traced macro/tech)."""
     mp, tp = _as_params(macro, tech)
@@ -393,7 +396,7 @@ def area_mm2_jnp(cfg_row, macro, tech=DEFAULT_TECH):
 
 
 def bandwidth_ok_jnp(cfg_row, macro):
-    mp, _ = _as_params(macro, DEFAULT_TECH)
+    mp, _ = _as_params(macro, None)
     bw = cfg_row[5]
     return (mp.icw * cfg_row[0] >= bw) & (
         mp.wuw * cfg_row[0] * cfg_row[1] >= bw
@@ -402,7 +405,7 @@ def bandwidth_ok_jnp(cfg_row, macro):
 
 def workload_cost_core(
     ops_arr, cfg_row, strat_bits, allowed, macro,
-    tech=DEFAULT_TECH, objective="ee",
+    tech=None, objective="ee",
 ):
     """workload_cost with the strategy tables passed in explicitly (lets the
     Pallas strategy_eval kernel feed them through refs instead of capturing
@@ -444,7 +447,7 @@ def workload_cost(
     ops_arr,                # [P, 5] (m, k, n, count, static); count==0 -> pad
     cfg_row,                # [6]
     macro,
-    tech=DEFAULT_TECH,
+    tech=None,
     objective="ee",         # "ee" (energy) | "th" (latency) | "edp"
     strategy_set: str = "st",
 ):
@@ -500,7 +503,7 @@ def job_objective(job: JobParams, cfg_row, penalty_scale: float = 1e3):
 def make_objective_fn(
     ops_arr,
     macro,
-    tech=DEFAULT_TECH,
+    tech=None,
     objective="ee",
     strategy_set: str = "st",
     area_budget_mm2: float | None = None,
@@ -535,7 +538,7 @@ def workload_metrics(
     workload_ops_arr,
     cfg_row,
     macro,
-    tech=DEFAULT_TECH,
+    tech=None,
     objective="ee",
     strategy_set: str = "st",
 ) -> dict:

@@ -40,7 +40,7 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 from repro.core import cost_model
 from repro.core.annealing import SASettings, _axes_matrix
-from repro.core.calibration import DEFAULT_TECH, TechConstants
+from repro.core.calibration import TechConstants, resolve_tech
 from repro.core.engine import ExploreJob, _job_arrays, _stack_jobs
 from repro.core.ir import Workload
 from repro.core.macro import MacroSpec
@@ -306,7 +306,7 @@ def distributed_co_explore(
     strategy_set: str = "st",
     space: DesignSpace | None = None,
     bw: int = 256,
-    tech: TechConstants = DEFAULT_TECH,
+    tech: TechConstants | None = None,
     settings: SASettings = SASettings(),
     chains_per_device: int = 4,
     rounds: int = 8,
@@ -315,6 +315,7 @@ def distributed_co_explore(
     resume: bool = False,
 ) -> DistributedResult:
     """Single-job distributed DSE (a job x chain population of one job)."""
+    tech = resolve_tech(tech)
     job = ExploreJob(
         macro=macro, workload=workload, area_budget_mm2=area_budget_mm2,
         objective=objective, strategy_set=strategy_set, bw=bw, tech=tech,

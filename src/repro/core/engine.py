@@ -240,8 +240,12 @@ class ExploreResult:
 #: the job dataclass; it is normalized OUT of the job's canonical form and
 #: hashed through the key's single ``settings`` slot instead, so the
 #: "settings on the job" and "settings as an argument" spellings of one
-#: exploration share a key.
-JOB_KEY_SCHEMA = 3
+#: exploration share a key.  Schema 4: a ``calibration`` slot joined the
+#: payload -- the active calibration version when the settings request
+#: measured fidelity, ``None`` otherwise -- so warm analytic results can
+#: never answer calibrated queries (and a re-fit calibration can never be
+#: answered by a stale measured result).
+JOB_KEY_SCHEMA = 4
 
 
 def valid_methods() -> tuple[str, ...]:
@@ -319,8 +323,13 @@ def job_key(
     """
     method = method or job.search_method
     settings = preferred_settings(job, method, settings)
+    calibration = None
+    if getattr(settings, "fidelity", "analytic") == "measured":
+        from repro.core.calibration import active_calibration_version
+        calibration = active_calibration_version()
     payload = {
         "schema": JOB_KEY_SCHEMA,
+        "calibration": calibration,
         # normalize search_method into the job (so "method override" and
         # "job field" spellings of the same exploration share a key) and
         # search_settings OUT of it (hashed via the "settings" slot below,
@@ -368,6 +377,26 @@ def _job_arrays(p: _PreparedJob) -> cost_model.JobParams:
 
 def _stack_jobs(rows: list[cost_model.JobParams]) -> cost_model.JobParams:
     return jax.tree.map(lambda *xs: np.stack(xs), *rows)
+
+
+def _spearman(a: np.ndarray, b: np.ndarray) -> float:
+    """Spearman rank correlation between two value vectors (1.0 for
+    degenerate inputs: fewer than two points, or zero rank variance).
+    The two-fidelity report uses it to quantify how well the analytic
+    ranking predicted the measured one."""
+    a = np.asarray(a, dtype=float)
+    b = np.asarray(b, dtype=float)
+    if len(a) < 2:
+        return 1.0
+    ra = np.argsort(np.argsort(a, kind="stable"),
+                    kind="stable").astype(float)
+    rb = np.argsort(np.argsort(b, kind="stable"),
+                    kind="stable").astype(float)
+    da, db = ra - ra.mean(), rb - rb.mean()
+    denom = float(np.sqrt((da ** 2).sum() * (db ** 2).sum()))
+    if denom == 0.0:                                   # pragma: no cover
+        return 1.0
+    return float((da * db).sum() / denom)
 
 
 def clone_result(r: ExploreResult) -> ExploreResult:
@@ -896,6 +925,10 @@ class ExplorationEngine:
         # so min(best_per_chain) == min(trace_best) == the reported value
         member_vals: list[np.ndarray | None] = [None] * n_jobs
         traces: list[np.ndarray | None] = [None] * n_jobs
+        # per-job candidate pool across every phase (axis-index tuple ->
+        # best analytic value seen); the measured fidelity's final phase
+        # re-scores the top-K of this pool with calibrated constants
+        pool: list[dict[tuple, float]] = [dict() for _ in range(n_jobs)]
 
         def _launch(b_idx: int, scaled, sel: list[int],
                     seed_rows=None):
@@ -932,6 +965,14 @@ class ExplorationEngine:
                     best_idx[j] = idx_a[pos, w]
                     member_vals[j] = val_a[pos]
                     traces[j] = tr_a[pos]
+                pj = pool[j]
+                for m in range(len(val_a[pos])):
+                    vm = float(val_a[pos, m])
+                    if not np.isfinite(vm):
+                        continue
+                    t = tuple(int(x) for x in idx_a[pos, m])
+                    if vm < pj.get(t, np.inf):
+                        pj[t] = vm
             return out
 
         pulls = np.zeros((n_jobs, n_back), dtype=np.int64)
@@ -1070,6 +1111,79 @@ class ExplorationEngine:
                     continue
                 for j, (v, _r) in _collect(h, fold_race=False).items():
                     final_best[j] = v
+
+        # measured fidelity: re-score each job's top-K analytic
+        # candidates under kernel-measurement-calibrated tech constants
+        # and report both rankings plus their rank correlation
+        two_fidelity: list[dict | None] = [None] * n_jobs
+        measured_prep: list[_PreparedJob | None] = [None] * n_jobs
+        measured_idx: list[np.ndarray | None] = [None] * n_jobs
+        measured_val = np.full(n_jobs, np.inf)
+        if getattr(settings, "fidelity", "analytic") == "measured":
+            from repro.core.calibration import (
+                calibration_version,
+                resolve_corrections,
+            )
+
+            with obs.span("engine.portfolio.measured",
+                          allocator=settings.allocator, jobs=n_jobs):
+                cf, source, meas_records = resolve_corrections()
+                version = calibration_version(cf)
+                topk = int(getattr(settings, "topk", 8))
+                p_cal = [
+                    p._replace(job=dataclasses.replace(
+                        p.job, tech=p.job.tech.with_corrections(cf)))
+                    for p in batch]
+                stacked_a = _stack_jobs([_job_arrays(p) for p in batch])
+                stacked_m = _stack_jobs([_job_arrays(p) for p in p_cal])
+                top_rows, cand_rows = [], []
+                for j, p in enumerate(batch):
+                    # deterministic top-K: analytic value, then axis
+                    # indices break ties
+                    ranked = sorted(pool[j].items(),
+                                    key=lambda kv: (kv[1], kv[0]))[:topk]
+                    top_rows.append([t for t, _v in ranked])
+                    cand_rows.append(np.stack([
+                        np.concatenate(
+                            [p.mat[np.arange(5), np.asarray(t)],
+                             [float(p.job.bw)]])
+                        for t, _v in ranked]))
+                vals_a = self._sweep_values(
+                    batch[0].ops_pad, stacked_a, cand_rows)
+                vals_m = self._sweep_values(
+                    batch[0].ops_pad, stacked_m, cand_rows)
+                for j, p in enumerate(batch):
+                    va, vm = vals_a[j], vals_m[j]
+                    order_a = np.argsort(va, kind="stable")
+                    order_m = np.argsort(vm, kind="stable")
+                    w = int(order_m[0])
+                    measured_prep[j] = p_cal[j]
+                    measured_idx[j] = np.asarray(top_rows[j][w],
+                                                 dtype=np.int64)
+                    measured_val[j] = float(vm[w])
+                    two_fidelity[j] = {
+                        "source": source,
+                        "calibration_version": version,
+                        "corrections": cf.as_dict(),
+                        "topk": len(va),
+                        "measurement_count": len(meas_records),
+                        "analytic_ranking": [int(x) for x in order_a],
+                        "measured_ranking": [int(x) for x in order_m],
+                        "analytic_values": [float(x) for x in va],
+                        "measured_values": [float(x) for x in vm],
+                        "rank_correlation": _spearman(va, vm),
+                        "analytic_winner": [
+                            int(x)
+                            for x in cand_rows[j][int(order_a[0])][:5]],
+                        "measured_winner": [
+                            int(x) for x in cand_rows[j][w][:5]],
+                    }
+                    if job_keys is not None:
+                        # parked for the queue to persist as the result's
+                        # .measurements.json store sidecar
+                        obs.profile.record_measurements(
+                            job_keys[j], meas_records)
+
         if job_keys is not None:
             for j in range(n_jobs):
                 payload = dict(
@@ -1081,6 +1195,18 @@ class ExplorationEngine:
                     devices=n_devices)
                 bus.publish(job_keys[j], **payload)
                 recorder.event(job_keys[j], payload)
+                if two_fidelity[j] is not None:
+                    mp = dict(
+                        phase="measured", allocator=settings.allocator,
+                        best=_fin(measured_val[j]),
+                        rank_correlation=two_fidelity[j][
+                            "rank_correlation"],
+                        topk=two_fidelity[j]["topk"],
+                        calibration=two_fidelity[j][
+                            "calibration_version"],
+                        devices=n_devices)
+                    bus.publish(job_keys[j], **mp)
+                    recorder.event(job_keys[j], mp)
                 recorder.finish(
                     job_keys[j], winner=payload["winner"],
                     best=payload["best"], final=payload["final"],
@@ -1088,9 +1214,17 @@ class ExplorationEngine:
 
         results = []
         for j, p in enumerate(batch):
-            out = self._wrap_search_winner(
-                p, "portfolio", best_idx[j][None, :],
-                np.asarray([best_val[j]]), traces[j])
+            if measured_prep[j] is not None:
+                # the measured winner, finished under calibrated
+                # constants, IS the answer of a two-fidelity race
+                out = self._wrap_search_winner(
+                    measured_prep[j], "portfolio",
+                    measured_idx[j][None, :],
+                    np.asarray([measured_val[j]]), traces[j])
+            else:
+                out = self._wrap_search_winner(
+                    p, "portfolio", best_idx[j][None, :],
+                    np.asarray([best_val[j]]), traces[j])
             out.search["portfolio"] = {
                 "winner": names[int(winners[j])],
                 "allocator": settings.allocator,
@@ -1102,7 +1236,10 @@ class ExplorationEngine:
                 "rungs": settings.rungs,
                 "total_evals": settings.total_evals,
                 "devices": sum(d is not None for d in devices) or 1,
+                "fidelity": getattr(settings, "fidelity", "analytic"),
             }
+            if two_fidelity[j] is not None:
+                out.search["two_fidelity"] = two_fidelity[j]
             out.sa = out.sa._replace(
                 best_per_chain=jnp.asarray(member_vals[j]))
             results.append(out)

@@ -40,7 +40,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.annealing import SASettings
-from repro.core.calibration import DEFAULT_TECH, TechConstants
+from repro.core.calibration import TechConstants, resolve_tech
 from repro.core.engine import (
     ExplorationEngine,
     ExploreJob,
@@ -90,7 +90,7 @@ def co_explore(
     space: DesignSpace | None = None,
     fixed: dict | None = None,
     bw: int = 256,
-    tech: TechConstants = DEFAULT_TECH,
+    tech: TechConstants | None = None,
     sa_settings: SASettings = SASettings(),
     merge_ops: bool = True,
     engine: ExplorationEngine | None = None,
@@ -105,6 +105,7 @@ def co_explore(
     space = space or DesignSpace()
     if fixed:
         space = space.fix(**fixed)
+    tech = resolve_tech(tech)
     job = ExploreJob(
         macro=macro, workload=workload, area_budget_mm2=area_budget_mm2,
         objective=objective, strategy_set=strategy_set, bw=bw, tech=tech,
@@ -157,7 +158,7 @@ def pareto_explore(
     strategy_set: str = "st",
     space: DesignSpace | None = None,
     bw: int = 256,
-    tech: TechConstants = DEFAULT_TECH,
+    tech: TechConstants | None = None,
     engine: ExplorationEngine | None = None,
 ) -> list[dict]:
     """Energy-efficiency vs throughput Pareto frontier over the pruned
@@ -171,6 +172,7 @@ def pareto_explore(
     from repro.core.pruning import candidates_with_bw, prune_space
 
     space = space or DesignSpace()
+    tech = resolve_tech(tech)
     cands, _ = prune_space(space, macro, area_budget_mm2, bw, tech)
     if len(cands) == 0:
         raise ValueError("no feasible hardware point under budget")
@@ -231,7 +233,7 @@ def evaluate_config(
     workload: Workload,
     objective: str = "ee",
     strategy_set: str = "st",
-    tech: TechConstants = DEFAULT_TECH,
+    tech: TechConstants | None = None,
 ) -> dict:
     """PPA of a *given* accelerator on a workload (used for the Table II
     baselines and for Fig. 8's fixed-hardware breakdowns)."""

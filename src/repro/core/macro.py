@@ -23,7 +23,7 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from repro.core.calibration import DEFAULT_TECH, TechConstants
+from repro.core.calibration import TechConstants, resolve_tech
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,13 +78,15 @@ class MacroSpec:
         """Total storage bits with ``scr`` resident planes."""
         return self.al * self.pc * scr * self.dw_w
 
-    def area_mm2(self, scr: int, tech: TechConstants = DEFAULT_TECH) -> float:
+    def area_mm2(self, scr: int, tech: TechConstants | None = None) -> float:
         """Macro area: bit-cells (scale with SCR) + compute units (don't)."""
+        tech = resolve_tech(tech)
         cells = self.cells_bits(scr) * tech.a_cell_um2_bit
         cus = self.al * self.pc * tech.a_cu_um2
         return (cells + cus) * 1e-6 + tech.a_macro_fixed_mm2
 
-    def mac_energy_pj(self, tech: TechConstants = DEFAULT_TECH) -> float:
+    def mac_energy_pj(self, tech: TechConstants | None = None) -> float:
+        tech = resolve_tech(tech)
         return self.e_mac_pj if self.e_mac_pj is not None else tech.e_mac_pj
 
     def peak_macs_per_cycle(self, mr: int, mc: int) -> float:

@@ -14,7 +14,7 @@ import itertools
 
 import numpy as np
 
-from repro.core.calibration import DEFAULT_TECH, TechConstants
+from repro.core.calibration import TechConstants, resolve_tech
 from repro.core.macro import MacroSpec
 
 MR_CHOICES = (1, 2, 3, 4, 6, 8)
@@ -59,12 +59,13 @@ def prune_space(
     macro: MacroSpec,
     area_budget_mm2: float,
     bw: int = 256,
-    tech: TechConstants = DEFAULT_TECH,
+    tech: TechConstants | None = None,
 ) -> tuple[np.ndarray, dict]:
     """Returns ([C_valid, 5] candidates, stats) after bandwidth+area pruning.
 
     Vectorized (the same closed-form area/bandwidth rules as template.py --
     pinned against the scalar path in tests/test_explorer.py)."""
+    tech = resolve_tech(tech)
     raw = enumerate_space(space)
     mr, mc, scr, is_kb, os_kb = (raw[:, i].astype(np.float64)
                                  for i in range(5))

@@ -11,7 +11,7 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from repro.core.calibration import DEFAULT_TECH, TechConstants
+from repro.core.calibration import TechConstants, resolve_tech
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,8 +25,9 @@ class SystolicConfig:
 
 
 def systolic_area_mm2(
-    cfg: SystolicConfig, tech: TechConstants = DEFAULT_TECH
+    cfg: SystolicConfig, tech: TechConstants | None = None
 ) -> float:
+    tech = resolve_tech(tech)
     pe = cfg.rows * cfg.cols * tech.a_cu_um2 * 1e-6
     sram = (cfg.buf_kb + cfg.other_buf_kb) * 8 / 1024.0 * tech.a_sram_mm2_per_mb
     return pe + sram + tech.a_fixed_mm2
@@ -86,10 +87,11 @@ def buffer_sweep(
     n: int,
     buf_choices_kb=(8, 16, 32, 64, 128, 256, 512, 1024),
     dataflow: str = "ws",
-    tech: TechConstants = DEFAULT_TECH,
+    tech: TechConstants | None = None,
 ) -> list[dict]:
     """Fig. 1: fixed area budget, sweep buffer size; the PE array takes the
     remaining area (square-ish aspect)."""
+    tech = resolve_tech(tech)
     out = []
     for buf in buf_choices_kb:
         sram_mm2 = (buf + 64) * 8 / 1024.0 * tech.a_sram_mm2_per_mb

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.calibration import DEFAULT_TECH, TechConstants
+from repro.core.calibration import TechConstants, resolve_tech
 from repro.core.macro import MacroSpec
 
 
@@ -52,7 +52,8 @@ class AcceleratorConfig:
         return (self.mr, self.mc, self.scr, self.is_kb, self.os_kb)
 
 
-def sram_area_mm2(kb: int, tech: TechConstants = DEFAULT_TECH) -> float:
+def sram_area_mm2(kb: int, tech: TechConstants | None = None) -> float:
+    tech = resolve_tech(tech)
     mb = kb * 8 / 1024.0  # KB -> Mb
     return mb * tech.a_sram_mm2_per_mb + tech.a_sram_fixed_mm2
 
@@ -60,9 +61,10 @@ def sram_area_mm2(kb: int, tech: TechConstants = DEFAULT_TECH) -> float:
 def accelerator_area_mm2(
     cfg: AcceleratorConfig,
     macro: MacroSpec,
-    tech: TechConstants = DEFAULT_TECH,
+    tech: TechConstants | None = None,
 ) -> float:
     """Area model: macros (cells scale with SCR) + IS + OS + fixed overhead."""
+    tech = resolve_tech(tech)
     macros = cfg.mr * cfg.mc * macro.area_mm2(cfg.scr, tech)
     return (
         macros
@@ -93,7 +95,7 @@ def bandwidth_ok(cfg: AcceleratorConfig, macro: MacroSpec) -> bool:
 
 
 def peak_tops(cfg: AcceleratorConfig, macro: MacroSpec,
-              tech: TechConstants = DEFAULT_TECH) -> float:
+              tech: TechConstants | None = None) -> float:
     """Peak INT8 throughput (TOPS, 1 MAC = 2 OPs) of the configured grid."""
     macs_per_s = macro.peak_macs_per_cycle(cfg.mr, cfg.mc) * macro.freq_mhz * 1e6
     return 2.0 * macs_per_s / 1e12

@@ -6,7 +6,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.calibration import DEFAULT_TECH
+from repro.core.calibration import resolve_tech
 
 
 def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
@@ -31,8 +31,9 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 def strategy_eval_ref(candidates, ops_arr, macro, *, objective="ee",
-                      strategy_set="st", tech=DEFAULT_TECH):
+                      strategy_set="st", tech=None):
     """Identical math to the kernel, no pallas_call."""
+    tech = resolve_tech(tech)
     from repro.kernels.strategy_eval import _objective_block, _strat_tables
     bits, allowed = _strat_tables(strategy_set)
     return _objective_block(

@@ -18,7 +18,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core import cost_model
-from repro.core.calibration import DEFAULT_TECH
+from repro.core.calibration import resolve_tech
 from repro.core.macro import MacroSpec
 from repro.core.strategies import ALL_STRATEGIES, STRATEGY_SETS
 
@@ -62,10 +62,11 @@ def strategy_eval(
     *,
     objective: str = "ee",
     strategy_set: str = "st",
-    tech=DEFAULT_TECH,
+    tech=None,
     tile: int = CAND_TILE,
     interpret: bool = False,
 ) -> jax.Array:
+    tech = resolve_tech(tech)
     c = candidates.shape[0]
     pad = (-c) % tile
     if pad:

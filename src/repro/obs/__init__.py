@@ -16,6 +16,12 @@ See ``docs/observability.md`` for the metric catalog and span names.
 """
 from repro.obs import profile
 from repro.obs.events import ProgressBus, progress_bus
+from repro.obs.profile import (
+    MeasurementRecord,
+    record_measurements,
+    run_microbench,
+    take_measurements,
+)
 from repro.obs.log import configure_logging, get_logger
 from repro.obs.metrics import (
     DEFAULT_BUCKETS,
@@ -56,6 +62,10 @@ __all__ = [
     "regret_curve",
     "TIMELINE_SCHEMA",
     "profile",
+    "MeasurementRecord",
+    "run_microbench",
+    "record_measurements",
+    "take_measurements",
     "configure_logging",
     "get_logger",
     "ProgressBus",

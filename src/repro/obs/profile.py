@@ -20,6 +20,24 @@ hooks cost one env lookup when off).  Peak rates default to the TPU v5e
 constants shared with ``repro.launch.roofline`` and can be overridden via
 ``CIM_TUNER_PEAK_FLOPS`` / ``CIM_TUNER_PEAK_BW`` (interpret-mode CPU runs
 report honest-but-tiny utilizations against TPU peaks).
+
+This module is a STABLE PUBLIC SURFACE (re-exported from ``repro.obs``):
+:func:`run_microbench` is the measurement half of the calibration tier --
+it times the real Pallas kernels over a small tiling sweep and returns
+:class:`MeasurementRecord` dicts with the documented schema
+
+    {"kernel": str,   # cim_matmul | flash_attention | selective_scan
+                      # | strategy_eval
+     "bucket": str,   # shape bucket, e.g. "128x128x128"
+     "tiling": str,   # tiling variant, e.g. "AF", "bq64xbk64", "ct16xci16"
+     "us":     float, # one call's wall clock, microseconds
+     "flops":  float | None,   # compiled cost analysis (None: unavailable)
+     "bytes":  float | None,
+     "seed":   int}   # RNG seed the inputs were drawn from
+
+which ``repro.core.calibration.fit_corrections`` consumes.  Names with a
+leading underscore (``_cost_analysis``, ``_env_float``, ...) are
+implementation details and may change without notice.
 """
 from __future__ import annotations
 
@@ -34,6 +52,7 @@ from repro.obs import trace as _trace
 __all__ = [
     "PROFILE_ENV",
     "KERNEL_US_BUCKETS",
+    "MeasurementRecord",
     "profiling_enabled",
     "instrument",
     "roofline_utilization",
@@ -41,6 +60,8 @@ __all__ = [
     "peak_bw",
     "summary",
     "run_microbench",
+    "record_measurements",
+    "take_measurements",
 ]
 
 PROFILE_ENV = "CIM_TUNER_PROFILE"
@@ -183,13 +204,58 @@ def instrument(kernel: str, fn, bucket_fn) -> typing.Callable:
     wrapper.__qualname__ = getattr(fn, "__qualname__", kernel)
     wrapper.__doc__ = getattr(fn, "__doc__", None)
     wrapper.__wrapped__ = fn
+    wrapper.__bucket_fn__ = bucket_fn
     return wrapper
 
 
-def summary() -> list[dict]:
-    """Per-(kernel, bucket) profile rows from the registry, sorted:
-    call count, mean microseconds, FLOPs/bytes and roofline utilization
-    (0.0 when cost analysis was unavailable)."""
+class MeasurementRecord(typing.TypedDict):
+    """One timed kernel call -- the calibration tier's unit of evidence.
+
+    The documented schema (see the module docstring): ``kernel``,
+    ``bucket``, ``tiling``, ``us``, ``flops``, ``bytes``, ``seed``.
+    ``flops``/``bytes`` are ``None`` when XLA's compiled cost analysis
+    was unavailable for the series (the fit skips such records)."""
+    kernel: str
+    bucket: str
+    tiling: str
+    us: float
+    flops: typing.Optional[float]
+    bytes: typing.Optional[float]
+    seed: int
+
+
+def summary(records: typing.Sequence[MeasurementRecord] | None = None,
+            ) -> list[dict]:
+    """Per-(kernel, bucket) profile rows, sorted: call count, mean
+    microseconds, FLOPs/bytes and roofline utilization (0.0 when cost
+    analysis was unavailable).
+
+    With ``records`` (e.g. the return of :func:`run_microbench`) the rows
+    aggregate exactly those measurements; without, they come from the
+    process-wide metrics registry (everything profiled so far)."""
+    if records is not None:
+        acc: dict[tuple[str, str], list[MeasurementRecord]] = {}
+        for r in records:
+            acc.setdefault((r["kernel"], r["bucket"]), []).append(r)
+        rows = []
+        for (kernel, bucket), group in acc.items():
+            us = sum(r["us"] for r in group) / len(group)
+            flops = next((r["flops"] for r in group
+                          if r["flops"] is not None), 0.0) or 0.0
+            nbytes = next((r["bytes"] for r in group
+                           if r["bytes"] is not None), 0.0) or 0.0
+            rows.append({
+                "kernel": kernel,
+                "bucket": bucket,
+                "calls": len(group),
+                "us_per_call": us,
+                "flops": flops,
+                "bytes": nbytes,
+                "roofline_utilization": roofline_utilization(
+                    flops, nbytes, us * 1e-6),
+            })
+        rows.sort(key=lambda r: (r["kernel"], r["bucket"]))
+        return rows
     rows = []
     for values, child in _M_US.samples():
         kernel, bucket = values
@@ -217,22 +283,82 @@ _ALL_KERNELS = ("cim_matmul", "flash_attention", "selective_scan",
                 "strategy_eval")
 
 
-def run_microbench(kernels: typing.Sequence[str] | None = None,
-                   repeats: int = 3, seed: int = 0) -> list[dict]:
-    """Run a small profiled pass over the Pallas kernels and return
-    :func:`summary` rows.
+def _microbench_cases(kernels: tuple[str, ...], rng) -> list[tuple]:
+    """(kernel, tiling, fn, args, kwargs) cases for the tiling sweep.
 
-    This is the shared body of ``repro-service profile``, the server's
-    ``CIM_TUNER_PROFILE`` warm-up and ``benchmarks/run.py
-    --profile-kernels`` -- tiny canonical shapes, interpret mode on CPU
-    hosts, so the ``cim_kernel_*`` families always have real series to
-    scrape.  Enables ``CIM_TUNER_PROFILE`` for this process if unset."""
-    if not profiling_enabled():
-        os.environ[PROFILE_ENV] = "1"
+    Inputs are drawn once from ``rng`` (shared across tiling variants of
+    a kernel) so variant timings differ only by tiling, not data."""
     import jax.numpy as jnp
     import numpy as np
 
     from repro.kernels import ops
+
+    cases: list[tuple] = []
+    if "cim_matmul" in kernels:
+        a = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+        for tiling in ("AF", "PF"):
+            cases.append(("cim_matmul", tiling, ops.cim_matmul, (a, b),
+                          {"tiling": tiling}))
+    if "flash_attention" in kernels:
+        q = jnp.asarray(rng.standard_normal((1, 128, 64)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((1, 128, 64)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((1, 128, 64)), jnp.float32)
+        for bq, bk in ((128, 128), (64, 64)):
+            cases.append(("flash_attention", f"bq{bq}xbk{bk}",
+                          ops.flash_attention, (q, k, v),
+                          {"causal": True, "bq": bq, "bk": bk}))
+    if "selective_scan" in kernels:
+        bs, t, i, s = 1, 64, 32, 8
+        xi = jnp.asarray(rng.standard_normal((bs, t, i)), jnp.float32)
+        dt = jnp.asarray(np.abs(rng.standard_normal((bs, t, i))) * 0.1,
+                         jnp.float32)
+        bm = jnp.asarray(rng.standard_normal((bs, t, s)), jnp.float32)
+        cm = jnp.asarray(rng.standard_normal((bs, t, s)), jnp.float32)
+        aa = jnp.asarray(-np.abs(rng.standard_normal((i, s))),
+                         jnp.float32)
+        h0 = jnp.zeros((bs, i, s), jnp.float32)
+        for ct, ci in ((16, 16), (32, 32)):
+            cases.append(("selective_scan", f"ct{ct}xci{ci}",
+                          ops.selective_scan, (xi, dt, bm, cm, aa, h0),
+                          {"ct": ct, "ci": ci}))
+    if "strategy_eval" in kernels:
+        from repro.core.ir import bert_large_workload
+        from repro.core.macro import get_macro
+        from repro.core.pruning import (
+            DesignSpace,
+            candidates_with_bw,
+            enumerate_space,
+        )
+        cands = candidates_with_bw(enumerate_space(DesignSpace(
+            mr=(1, 2), mc=(1, 2), scr=(1, 4), is_kb=(4, 64),
+            os_kb=(4, 64))), 256)
+        wl = bert_large_workload().merged().as_arrays()
+        cases.append(("strategy_eval", "default", ops.strategy_eval,
+                      (cands, wl, get_macro("vanilla-dcim")), {}))
+    return cases
+
+
+def run_microbench(kernels: typing.Sequence[str] | None = None,
+                   repeats: int = 3, seed: int = 0,
+                   ) -> list[MeasurementRecord]:
+    """Time the real Pallas kernels over a small tiling sweep and return
+    one :class:`MeasurementRecord` per (case, repeat).
+
+    This is the measurement half of the two-fidelity calibration tier
+    (``repro.core.calibration.fit_corrections`` fits correction factors
+    from these records) and the shared body of ``repro-service profile``
+    / ``calibrate``, the server's ``CIM_TUNER_PROFILE`` warm-up and
+    ``benchmarks/run.py --profile-kernels`` -- tiny canonical shapes,
+    interpret mode on CPU hosts.  Each case is warmed once (tracing +
+    cost analysis) before the timed repeats, and the ``cim_kernel_*``
+    registry families are populated as a side effect.  Enables
+    ``CIM_TUNER_PROFILE`` for this process if unset."""
+    if not profiling_enabled():
+        os.environ[PROFILE_ENV] = "1"
+    import jax
+
+    import numpy as np
 
     kernels = tuple(kernels) if kernels else _ALL_KERNELS
     unknown = sorted(set(kernels) - set(_ALL_KERNELS))
@@ -241,43 +367,52 @@ def run_microbench(kernels: typing.Sequence[str] | None = None,
                          f"pick from {_ALL_KERNELS}")
     rng = np.random.default_rng(seed)
     t0 = time.perf_counter()
-    for _ in range(max(1, repeats)):
-        if "cim_matmul" in kernels:
-            a = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
-            b = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
-            ops.cim_matmul(a, b, tiling="AF")
-        if "flash_attention" in kernels:
-            q = jnp.asarray(rng.standard_normal((1, 128, 64)),
-                            jnp.float32)
-            k = jnp.asarray(rng.standard_normal((1, 128, 64)),
-                            jnp.float32)
-            v = jnp.asarray(rng.standard_normal((1, 128, 64)),
-                            jnp.float32)
-            ops.flash_attention(q, k, v, causal=True)
-        if "selective_scan" in kernels:
-            bs, t, i, s = 1, 64, 32, 8
-            xi = jnp.asarray(rng.standard_normal((bs, t, i)), jnp.float32)
-            dt = jnp.asarray(np.abs(rng.standard_normal((bs, t, i))) * 0.1,
-                             jnp.float32)
-            bm = jnp.asarray(rng.standard_normal((bs, t, s)), jnp.float32)
-            cm = jnp.asarray(rng.standard_normal((bs, t, s)), jnp.float32)
-            aa = jnp.asarray(-np.abs(rng.standard_normal((i, s))),
-                             jnp.float32)
-            h0 = jnp.zeros((bs, i, s), jnp.float32)
-            ops.selective_scan(xi, dt, bm, cm, aa, h0, ct=16, ci=16)
-        if "strategy_eval" in kernels:
-            from repro.core.ir import bert_large_workload
-            from repro.core.macro import get_macro
-            from repro.core.pruning import (
-                DesignSpace,
-                candidates_with_bw,
-                enumerate_space,
-            )
-            cands = candidates_with_bw(enumerate_space(DesignSpace(
-                mr=(1, 2), mc=(1, 2), scr=(1, 4), is_kb=(4, 64),
-                os_kb=(4, 64))), 256)
-            wl = bert_large_workload().merged().as_arrays()
-            ops.strategy_eval(cands, wl, get_macro("vanilla-dcim"))
-    rows = [r for r in summary() if r["kernel"] in kernels]
+    records: list[MeasurementRecord] = []
+    for kernel, tiling, fn, args, kwargs in _microbench_cases(kernels,
+                                                              rng):
+        bucket_fn = getattr(fn, "__bucket_fn__", None)
+        bucket = bucket_fn(*args, **kwargs) if bucket_fn else tiling
+        # warm-up: tracing/compile + one-time cost analysis stay out of
+        # the timed repeats
+        jax.block_until_ready(fn(*args, **kwargs))
+        with _COST_LOCK:
+            cost = _COST_CACHE.get((kernel, bucket))
+        for _ in range(max(1, repeats)):
+            t1 = time.perf_counter()
+            jax.block_until_ready(fn(*args, **kwargs))
+            records.append(MeasurementRecord(
+                kernel=kernel, bucket=bucket, tiling=tiling,
+                us=(time.perf_counter() - t1) * 1e6,
+                flops=cost[0] if cost else None,
+                bytes=cost[1] if cost else None, seed=seed))
     _M_RUNTIME.set(time.perf_counter() - t0)
-    return rows
+    return records
+
+
+# --------------------------------------------------------------------- #
+# per-job measurement stash (engine -> queue -> store sidecar)
+# --------------------------------------------------------------------- #
+#: measured-fidelity runs park their records here keyed by job key; the
+#: queue drains the stash into the result store's ``.measurements.json``
+#: sidecar right before publishing the result (mirrors the timeline
+#: recorder hand-off)
+_MEASUREMENTS: dict[str, list[MeasurementRecord]] = {}
+_MEAS_LOCK = threading.Lock()
+_MEAS_CAP = 512
+
+
+def record_measurements(key: str,
+                        records: typing.Sequence[MeasurementRecord],
+                        ) -> None:
+    """Stash the measurement records backing one job's measured-fidelity
+    re-score, keyed by the job's content address (bounded FIFO)."""
+    with _MEAS_LOCK:
+        if len(_MEASUREMENTS) >= _MEAS_CAP and key not in _MEASUREMENTS:
+            _MEASUREMENTS.pop(next(iter(_MEASUREMENTS)))
+        _MEASUREMENTS[key] = list(records)
+
+
+def take_measurements(key: str) -> list[MeasurementRecord] | None:
+    """Pop (and return) the stashed records for ``key``, or None."""
+    with _MEAS_LOCK:
+        return _MEASUREMENTS.pop(key, None)

@@ -32,7 +32,8 @@ from repro.search.base import (SearchBackend, SearchResult,
                                get_backend, register_backend)
 from repro.search.evolution import DESettings, DifferentialEvolutionBackend
 from repro.search.genetic import GASettings, GeneticBackend
-from repro.search.portfolio import (ALLOCATORS, PortfolioBackend,
+from repro.search.portfolio import (ALLOCATORS, FIDELITIES,
+                                    PortfolioBackend,
                                     PortfolioSettings, bandit_pull_plan,
                                     bandit_rounds, bandit_slice,
                                     final_plan, race_plan, ucb_scores)
@@ -48,6 +49,6 @@ __all__ = [
     "DESettings", "DifferentialEvolutionBackend",
     "SobolSettings", "SobolBackend", "sobol_index_population",
     "PortfolioSettings", "PortfolioBackend", "race_plan", "final_plan",
-    "ALLOCATORS", "bandit_pull_plan", "bandit_rounds", "bandit_slice",
-    "ucb_scores",
+    "ALLOCATORS", "FIDELITIES", "bandit_pull_plan", "bandit_rounds",
+    "bandit_slice", "ucb_scores",
 ]

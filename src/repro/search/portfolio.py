@@ -56,10 +56,17 @@ from repro.search.base import SearchBackend, get_backend, register_backend
 
 __all__ = ["PortfolioSettings", "PortfolioBackend", "race_plan",
            "final_plan", "derived_seed", "bandit_slice", "bandit_rounds",
-           "bandit_pull_plan", "ucb_scores", "pull_reward", "ALLOCATORS"]
+           "bandit_pull_plan", "ucb_scores", "pull_reward", "ALLOCATORS",
+           "FIDELITIES"]
 
 #: valid ``PortfolioSettings.allocator`` values
 ALLOCATORS = ("bandit", "halving")
+
+#: valid ``PortfolioSettings.fidelity`` values: "analytic" scores with the
+#: closed-form cost model only; "measured" adds a final re-scoring phase
+#: where the top-K analytic winners are re-ranked under kernel-calibrated
+#: tech constants (repro.core.calibration)
+FIDELITIES = ("analytic", "measured")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +88,27 @@ class PortfolioSettings:
     #: UCB exploration constant (bandit allocator only)
     ucb_c: float = 0.5
     seed: int = 0
+    #: scoring fidelity: "analytic" (default) or "measured" (two-fidelity
+    #: race -- the final phase re-scores the top-K candidates with
+    #: kernel-measurement-calibrated tech constants)
+    fidelity: str = "analytic"
+    #: how many analytic front-runners the measured phase re-scores
+    topk: int = 8
+
+    def __post_init__(self):
+        # field-local checks fail fast at construction; registry-dependent
+        # checks (backend names, composites) stay in _validate so custom
+        # backends can be registered after settings are built
+        if self.fidelity not in FIDELITIES:
+            raise ValueError(
+                f"unknown portfolio fidelity {self.fidelity!r}; "
+                f"valid: {FIDELITIES}")
+        if self.topk < 1:
+            raise ValueError("portfolio topk must be >= 1")
+        if self.allocator not in ALLOCATORS:
+            raise ValueError(
+                f"unknown portfolio allocator {self.allocator!r}; "
+                f"valid: {ALLOCATORS}")
 
 
 def derived_seed(seed: int, backend_index: int, rung: int) -> int:
@@ -95,6 +123,12 @@ def _validate(settings: PortfolioSettings) -> None:
         raise ValueError(
             f"unknown portfolio allocator {settings.allocator!r}; "
             f"valid: {ALLOCATORS}")
+    if settings.fidelity not in FIDELITIES:
+        raise ValueError(
+            f"unknown portfolio fidelity {settings.fidelity!r}; "
+            f"valid: {FIDELITIES}")
+    if settings.topk < 1:
+        raise ValueError("portfolio topk must be >= 1")
     for name in settings.backends:
         b = get_backend(name)
         if b.composite:

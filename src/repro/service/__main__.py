@@ -236,11 +236,12 @@ def _cmd_profile(args) -> int:
 
     kernels = [k for k in (args.kernels or "").split(",") if k] or None
     try:
-        rows = obs.profile.run_microbench(kernels=kernels,
-                                          repeats=args.repeats)
+        records = obs.profile.run_microbench(kernels=kernels,
+                                             repeats=args.repeats)
     except ValueError as exc:
         print(f"error: {exc}", file=sys.stderr)
         return 2
+    rows = obs.profile.summary(records)
     if args.json:
         print(json.dumps(rows, indent=2))
     else:
@@ -256,6 +257,69 @@ def _cmd_profile(args) -> int:
             f.write(obs.registry().render())
         print(f"# wrote metrics exposition to {args.metrics_out}",
               file=sys.stderr)
+    return 0
+
+
+def _cmd_calibrate(args) -> int:
+    """Measure -> fit -> (optionally) pin: the calibration tier's CLI.
+
+    Runs the kernel microbench sweep (or reads measurements from a prior
+    artifact via ``--input``), fits correction factors with a held-out
+    split, prints the fit report, and writes a calibration artifact that
+    ``CIM_TUNER_CALIBRATION`` can pin (see docs/calibration.md)."""
+    from repro.core import calibration as cal
+
+    if args.input:
+        try:
+            _cf, payload = cal.load_calibration(args.input)
+            records = payload.get("measurements") or []
+            if not records:
+                raise ValueError("artifact carries no measurements")
+        except (OSError, ValueError) as exc:
+            print(f"error: cannot reuse {args.input!r}: {exc}",
+                  file=sys.stderr)
+            return 2
+    else:
+        from repro import obs
+        kernels = [k for k in (args.kernels or "").split(",") if k] or None
+        try:
+            records = obs.run_microbench(kernels=kernels,
+                                         repeats=args.repeats,
+                                         seed=args.seed)
+        except ValueError as exc:
+            print(f"error: {exc}", file=sys.stderr)
+            return 2
+    try:
+        report = cal.fit_report(records, holdout_fraction=args.holdout,
+                                seed=args.seed)
+        corrections = cal.fit_corrections(records)
+    except ValueError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+    payload = None
+    if args.output:
+        payload = cal.save_calibration(args.output, corrections,
+                                       records=records, report=report)
+    if args.json:
+        out = {"records": len(records), "report": report,
+               "corrections": corrections.as_dict(),
+               "version": cal.calibration_version(corrections)}
+        if args.output:
+            out["artifact"] = args.output
+        print(json.dumps(out, indent=2))
+        return 0
+    print(f"measurements : {len(records)} records")
+    print(f"corrections  : compute={corrections.compute:.4g} "
+          f"memory={corrections.memory:.4g} "
+          f"update={corrections.update:.4g}")
+    print(f"version      : {cal.calibration_version(corrections)}")
+    print(f"holdout RMS  : uncalibrated "
+          f"{report['uncalibrated_rms_us']:.2f}us -> calibrated "
+          f"{report['calibrated_rms_us']:.2f}us "
+          f"(improvement {report['improvement']:.2f}x)")
+    if payload is not None:
+        print(f"artifact     : {args.output}  "
+              f"(pin with {cal.CALIBRATION_ENV}={args.output})")
     return 0
 
 
@@ -377,6 +441,31 @@ def main(argv: list[str] | None = None) -> int:
     pr.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="also dump the Prometheus exposition here")
     pr.set_defaults(fn=_cmd_profile)
+
+    ca = sub.add_parser(
+        "calibrate", help="fit measured-kernel correction factors and "
+                          "write a calibration artifact")
+    ca.add_argument("--kernels", default=None, metavar="A,B",
+                    help="comma-separated kernel subset to microbench "
+                         "(default: all)")
+    ca.add_argument("--repeats", type=int, default=3,
+                    help="timed calls per kernel/tiling case (default 3)")
+    ca.add_argument("--seed", type=int, default=0,
+                    help="seed for microbench inputs and the held-out "
+                         "split (default 0)")
+    ca.add_argument("--input", default=None, metavar="PATH",
+                    help="refit from the measurements stored in an "
+                         "existing artifact instead of re-running the "
+                         "microbench")
+    ca.add_argument("--holdout", type=float, default=0.25,
+                    help="held-out fraction for the fit report "
+                         "(default 0.25)")
+    ca.add_argument("-o", "--output", default=None, metavar="PATH",
+                    help="write the calibration artifact here (pin it "
+                         "via CIM_TUNER_CALIBRATION)")
+    ca.add_argument("--json", action="store_true",
+                    help="machine-readable report")
+    ca.set_defaults(fn=_cmd_calibrate)
 
     args = ap.parse_args(argv)
     from repro.obs import configure_logging

@@ -39,12 +39,11 @@ import urllib.request
 import numpy as np
 
 from repro.core.annealing import SASettings
-from repro.core.calibration import DEFAULT_TECH, TechConstants
+from repro.core.calibration import TechConstants, resolve_tech
 from repro.core.engine import (
     ExplorationEngine,
     ExploreJob,
     clone_result,
-    job_key,
     valid_methods,
 )
 from repro.core.ir import MatmulOp, Workload, bert_large_workload
@@ -54,8 +53,8 @@ from repro.search.base import get_backend
 from repro.service.queue import (
     JobQueue,
     QueueConfig,
+    _normalize_submit_args,
     _tag_job_exc,
-    resolve_settings,
     values_key,
 )
 from repro.service.store import (
@@ -177,7 +176,7 @@ def job_from_spec(spec: dict) -> tuple[ExploreJob, str]:
     macro = spec["macro"]
     macro = MacroSpec(**macro) if isinstance(macro, dict) else \
         get_macro(macro)
-    tech = TechConstants(**spec["tech"]) if "tech" in spec else DEFAULT_TECH
+    tech = TechConstants(**spec["tech"]) if "tech" in spec else resolve_tech()
     job = ExploreJob(
         macro=macro,
         workload=_workload_from_spec(spec["workload"]),
@@ -357,10 +356,12 @@ class RemoteQueue:
     # ------------------------------------------------------------- #
     def submit(self, job: ExploreJob, method: str | None = None,
                sa_settings: SASettings | None = None, priority: int = 0,
-               meta=None, settings=None) -> ExploreFuture:
+               meta=None, settings=None,
+               fidelity: str | None = None) -> ExploreFuture:
         """Admit one job (a batch of one through :meth:`submit_many`)."""
         return self.submit_many([job], method, sa_settings, priority,
-                                metas=[meta], settings=settings)[0]
+                                metas=[meta], settings=settings,
+                                fidelity=fidelity)[0]
 
     def submit_many(
         self,
@@ -370,6 +371,7 @@ class RemoteQueue:
         priority: int = 0,
         metas: typing.Sequence | None = None,
         settings=None,
+        fidelity: str | None = None,
     ) -> list[ExploreFuture]:
         """Admit a job batch; returns one future per job immediately.
 
@@ -394,10 +396,10 @@ class RemoteQueue:
         # inline from the same store at admission anyway
         probe_remote = len(jobs) <= self.REMOTE_PROBE_MAX_JOBS
         for job, meta in zip(jobs, metas):
-            m = method or job.search_method
-            eff = settings if settings is not None else sa_settings
-            eff = resolve_settings(m, eff, job=job)
-            key = job_key(job, m, eff)
+            # the one shared submit contract (repro.service.queue): the
+            # canonical key computed here matches the server's exactly
+            m, eff, key = _normalize_submit_args(
+                job, method, settings, sa_settings, fidelity)
             fut = ExploreFuture(job, m, key, meta=meta)
             futures.append(fut)
             self._bump("submitted")
@@ -438,12 +440,13 @@ class RemoteQueue:
         return fut
 
     def run_sync(self, jobs, method=None, sa_settings=None,
-                 timeout: float | None = None, settings=None):
+                 timeout: float | None = None, settings=None,
+                 fidelity: str | None = None):
         """Blocking batch call: submit, then wait for every result in
         submission order (the remote analogue of ``JobQueue.run_sync``).
         """
         futures = self.submit_many(jobs, method, sa_settings,
-                                   settings=settings)
+                                   settings=settings, fidelity=fidelity)
         return [f.result(timeout) for f in futures]
 
     # ------------------------------------------------------------- #
@@ -644,18 +647,20 @@ class ServiceClient:
     # passthroughs --------------------------------------------------- #
     def submit(self, job: ExploreJob, method: str | None = None,
                sa_settings: SASettings | None = None, priority: int = 0,
-               meta=None, settings=None) -> ExploreFuture:
+               meta=None, settings=None,
+               fidelity: str | None = None) -> ExploreFuture:
         """Admit one job (see :meth:`JobQueue.submit`); per-job
         ``job.search_settings`` apply when ``settings`` is ``None``."""
         return self.queue.submit(job, method, sa_settings, priority, meta,
-                                 settings=settings)
+                                 settings=settings, fidelity=fidelity)
 
     def submit_many(self, jobs, method=None, sa_settings=None,
-                    priority=0, metas=None,
-                    settings=None) -> list[ExploreFuture]:
+                    priority=0, metas=None, settings=None,
+                    fidelity: str | None = None) -> list[ExploreFuture]:
         """Admit a job batch (see :meth:`JobQueue.submit_many`)."""
         return self.queue.submit_many(jobs, method, sa_settings, priority,
-                                      metas, settings=settings)
+                                      metas, settings=settings,
+                                      fidelity=fidelity)
 
     def submit_values(self, job, candidates, priority=0, meta=None):
         """Admit a ``[C, 6]`` candidate sweep; the future resolves to the
@@ -687,6 +692,7 @@ class ServiceClient:
         metas: typing.Sequence | None = None,
         timeout: float | None = None,
         settings=None,
+        fidelity: str | None = None,
     ):
         """Run a job list through the service.
 
@@ -699,7 +705,7 @@ class ServiceClient:
         if metas is None:
             metas = list(range(len(jobs)))
         futures = self.submit_many(jobs, method, sa_settings, metas=metas,
-                                   settings=settings)
+                                   settings=settings, fidelity=fidelity)
         if stream:
             return stream_results(futures, timeout=timeout)
         return [f.result(timeout) for f in futures]

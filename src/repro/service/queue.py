@@ -131,6 +131,48 @@ def resolve_settings(method: str, settings=None, engine=None, job=None):
     return backend.default_settings()
 
 
+#: accepted ``fidelity=`` spellings; "two" is the CLI/benchmark shorthand
+#: for a two-fidelity race and normalizes to "measured"
+_FIDELITY_ALIASES = {"two": "measured"}
+_FIDELITY_VALUES = ("analytic", "measured")
+
+
+def _normalize_submit_args(job: ExploreJob, method=None, settings=None,
+                           sa_settings=None, fidelity=None, engine=None):
+    """THE shared submit contract: every submit surface (``JobQueue``,
+    ``ServiceClient``, ``RemoteQueue``) normalizes its keywords through
+    this one helper, so ``(method, settings, priority, fidelity)`` mean
+    exactly the same thing everywhere and the canonical ``job_key`` can
+    never diverge between local and remote spellings.
+
+    Returns ``(method, effective_settings, key)``.  ``sa_settings`` is
+    the legacy SA spelling of ``settings``; ``fidelity`` (``"analytic"``,
+    ``"measured"``, or the shorthand ``"two"``) overrides the settings'
+    own ``fidelity`` field and requires a fidelity-capable backend
+    (currently the portfolio racer)."""
+    method = method or job.search_method
+    if settings is None:
+        settings = sa_settings
+    settings = resolve_settings(method, settings, engine=engine, job=job)
+    if fidelity is not None:
+        fid = _FIDELITY_ALIASES.get(fidelity, fidelity)
+        if fid not in _FIDELITY_VALUES:
+            raise ValueError(
+                f"unknown fidelity {fidelity!r}; valid: "
+                f"{_FIDELITY_VALUES + tuple(_FIDELITY_ALIASES)}")
+        if not hasattr(settings, "fidelity"):
+            # every backend is implicitly analytic; only a non-analytic
+            # request needs a fidelity-capable backend
+            if fid != "analytic":
+                raise ValueError(
+                    f"method {method!r} does not support fidelity="
+                    f"{fidelity!r}; two-fidelity runs need the portfolio "
+                    f"backend")
+        elif getattr(settings, "fidelity") != fid:
+            settings = dataclasses.replace(settings, fidelity=fid)
+    return method, settings, job_key(job, method, settings)
+
+
 def _tag_job_exc(exc: BaseException, key: str) -> BaseException:
     """Per-future copy of a dispatch failure, carrying the originating
     ``job_key`` both in the message and as a ``.job_key`` attribute (one
@@ -205,6 +247,7 @@ class JobQueue:
         priority: int = 0,
         meta=None,
         settings=None,
+        fidelity: str | None = None,
     ) -> ExploreFuture:
         """Admit one exploration job; returns immediately with a future.
 
@@ -212,17 +255,17 @@ class JobQueue:
         ``"exhaustive"`` (``None`` uses ``job.search_method``);
         ``settings`` carries the backend's settings object
         (``sa_settings`` is the legacy SA spelling; ``None`` falls back
-        to the job's own ``search_settings``, then backend defaults)."""
-        method = method or job.search_method
-        if settings is None:
-            settings = sa_settings
+        to the job's own ``search_settings``, then backend defaults);
+        ``fidelity`` ("analytic" | "measured" | shorthand "two")
+        overrides the settings' fidelity for fidelity-capable backends
+        (the portfolio racer)."""
         # resolve the effective settings WITHOUT instantiating the default
         # engine (store-only submissions skip engine construction and its
         # persistent-cache setup); a default-constructed engine uses
         # SASettings() too, so the canonical key matches either way
-        settings = resolve_settings(method, settings, engine=self._engine,
-                                    job=job)
-        key = job_key(job, method, settings)
+        method, settings, key = _normalize_submit_args(
+            job, method, settings, sa_settings, fidelity,
+            engine=self._engine)
         future = ExploreFuture(job, method, key, meta=meta)
         # submissions arrive from concurrent threads (the HTTP front
         # door); StatCounters locks each bump so increments never race
@@ -247,13 +290,14 @@ class JobQueue:
         priority: int = 0,
         metas: typing.Sequence | None = None,
         settings=None,
+        fidelity: str | None = None,
     ) -> list[ExploreFuture]:
         metas = metas if metas is not None else [None] * len(jobs)
         if len(metas) != len(jobs):
             raise ValueError(
                 f"metas length {len(metas)} != jobs length {len(jobs)}")
         return [self.submit(j, method, sa_settings, priority, meta=m,
-                            settings=settings)
+                            settings=settings, fidelity=fidelity)
                 for j, m in zip(jobs, metas)]
 
     def submit_values(
@@ -280,11 +324,12 @@ class JobQueue:
         sa_settings: SASettings | None = None,
         timeout: float | None = None,
         settings=None,
+        fidelity: str | None = None,
     ) -> list[ExploreResult]:
         """Blocking batch call with service semantics (store, dedup) --
         what the ``co_explore`` family uses under the hood."""
         futures = self.submit_many(jobs, method, sa_settings,
-                                   settings=settings)
+                                   settings=settings, fidelity=fidelity)
         return [f.result(timeout) for f in futures]
 
     # ------------------------------------------------------------- #
@@ -444,6 +489,14 @@ class JobQueue:
                     timeline = obs.flight_recorder().timeline(e.key)
                     if timeline is not None:
                         put_timeline(e.key, timeline)
+                # measured-fidelity runs park their kernel measurement
+                # records under the job key; they become the result's
+                # .measurements.json sidecar (same lifecycle)
+                put_meas = getattr(self.store, "put_measurements", None)
+                if callable(put_meas):
+                    records = obs.profile.take_measurements(e.key)
+                    if records is not None:
+                        put_meas(e.key, records)
             with self._lock:
                 self._inflight.pop(e.key, None)
                 futures = list(e.futures)

@@ -83,7 +83,7 @@ _M_EVENTS = _REG.counter(
 #: normalized route labels -- key-bearing paths collapse onto one child so
 #: label cardinality stays bounded no matter how many job keys exist
 _ROUTES = ("/healthz", "/v1/stats", "/v1/metrics", "/v1/trace",
-           "/v1/jobs", "/v1/stream", "/v1/pareto")
+           "/v1/jobs", "/v1/stream", "/v1/pareto", "/v1/calibration")
 
 
 def _route(path: str) -> str:
@@ -93,6 +93,8 @@ def _route(path: str) -> str:
     if path.startswith("/v1/jobs/"):
         if path.endswith("/timeline"):
             return "/v1/jobs/{key}/timeline"
+        if path.endswith("/measurements"):
+            return "/v1/jobs/{key}/measurements"
         return "/v1/jobs/{key}"
     if path.startswith("/v1/store/"):
         return "/v1/store/{key}"
@@ -413,10 +415,16 @@ class _Handler(BaseHTTPRequestHandler):
                 elif path == "/v1/trace":
                     self._send_json(
                         200, obs.chrome_trace(obs.tracer().events()))
+                elif path == "/v1/calibration":
+                    self._get_calibration()
                 elif path.startswith("/v1/jobs/") and \
                         path.endswith("/timeline"):
                     key = path[len("/v1/jobs/"):-len("/timeline")]
                     self._get_timeline(key.rstrip("/"))
+                elif path.startswith("/v1/jobs/") and \
+                        path.endswith("/measurements"):
+                    key = path[len("/v1/jobs/"):-len("/measurements")]
+                    self._get_measurements(key.rstrip("/"))
                 elif path.startswith("/v1/jobs/"):
                     self._get_job(path.rsplit("/", 1)[1], q)
                 elif path == "/v1/stream":
@@ -550,6 +558,24 @@ class _Handler(BaseHTTPRequestHandler):
             return
         self._send_json(200, {"key": key, "source": source,
                               "timeline": timeline})
+
+    def _get_calibration(self) -> None:
+        """The process's active kernel calibration: source (pinned
+        artifact / live fit / none), version, correction factors and fit
+        diagnostics (see docs/calibration.md)."""
+        from repro.core.calibration import calibration_record
+        self._send_json(200, calibration_record())
+
+    def _get_measurements(self, key: str) -> None:
+        """The measurement records behind one measured-fidelity result,
+        from the store's ``.measurements.json`` sidecar."""
+        store = self.dse.client.store
+        get_meas = getattr(store, "get_measurements", None)
+        records = get_meas(key) if callable(get_meas) else None
+        if records is None:
+            self._bad(f"no measurements for job {key!r}", code=404)
+            return
+        self._send_json(200, {"key": key, "measurements": records})
 
     def _get_store(self, key: str) -> None:
         store = self.dse.client.store

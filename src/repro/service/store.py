@@ -155,22 +155,57 @@ class ResultStore:
     def _timeline_path(self, key: str) -> str:
         return os.path.join(self.root, key[:2], f"{key}.timeline.json")
 
-    def put_timeline(self, key: str, timeline: dict) -> None:
-        """Persist one flight-recorder timeline next to its result
-        (atomic publish; write failures degrade to a no-op, exactly like
-        :meth:`put`) -- warm-store hits after a server restart still
-        serve ``GET /v1/jobs/<key>/timeline`` from this sidecar."""
-        path = self._timeline_path(key)
+    def _measurements_path(self, key: str) -> str:
+        return os.path.join(self.root, key[:2],
+                            f"{key}.measurements.json")
+
+    def _sidecar_paths(self, key: str) -> tuple[str, ...]:
+        """Every sidecar that shares its parent record's lifecycle --
+        evicted/expired with it, recency-refreshed on its hits."""
+        return (self._timeline_path(key), self._measurements_path(key))
+
+    def _write_sidecar(self, path: str, payload, op: str) -> None:
         try:
             os.makedirs(os.path.dirname(path), exist_ok=True)
             fd, tmp = tempfile.mkstemp(
                 dir=os.path.dirname(path), suffix=".tmp")
             with os.fdopen(fd, "w") as f:
-                json.dump(timeline, f)
+                json.dump(payload, f)
             os.replace(tmp, path)                      # atomic publish
         except (OSError, TypeError, ValueError):       # pragma: no cover
             return
-        _M_OPS.inc(tier="local", op="timeline_put")
+        _M_OPS.inc(tier="local", op=op)
+
+    def put_timeline(self, key: str, timeline: dict) -> None:
+        """Persist one flight-recorder timeline next to its result
+        (atomic publish; write failures degrade to a no-op, exactly like
+        :meth:`put`) -- warm-store hits after a server restart still
+        serve ``GET /v1/jobs/<key>/timeline`` from this sidecar."""
+        self._write_sidecar(self._timeline_path(key), timeline,
+                            "timeline_put")
+
+    def put_measurements(self, key: str, records: list) -> None:
+        """Persist the kernel measurement records backing one measured-
+        fidelity result next to it (same lifecycle as the timeline
+        sidecar: atomic publish, evicted/expired with the parent) -- so
+        a two-fidelity race replays bit-for-bit from the store and
+        ``GET /v1/jobs/<key>/measurements`` survives server restarts."""
+        self._write_sidecar(self._measurements_path(key), list(records),
+                            "measurements_put")
+
+    def get_measurements(self, key: str) -> list | None:
+        """The persisted measurement records for a canonical job key
+        (``None`` on any kind of miss -- absent, corrupt, non-list)."""
+        try:
+            with open(self._measurements_path(key)) as f:
+                records = json.load(f)
+            if not isinstance(records, list):
+                raise ValueError("malformed measurements")
+        except (OSError, ValueError):
+            _M_OPS.inc(tier="local", op="measurements_miss")
+            return None
+        _M_OPS.inc(tier="local", op="measurements_hit")
+        return records
 
     def get_timeline(self, key: str) -> dict | None:
         """The persisted timeline for a canonical job key (``None`` on
@@ -203,10 +238,11 @@ class ResultStore:
             if self.ttl_s is not None and \
                     time.time() - rec.get("created_s", 0.0) > self.ttl_s:
                 self._bump("expired")
-                try:
-                    os.remove(path)
-                except OSError:                        # pragma: no cover
-                    pass
+                for p in (path, *self._sidecar_paths(key)):
+                    try:
+                        os.remove(p)
+                    except OSError:
+                        pass
                 raise ValueError("expired")
             payload = rec["result"]
             if not isinstance(payload, dict):
@@ -221,6 +257,11 @@ class ResultStore:
             os.utime(path)             # LRU-ish: hits refresh the mtime
         except OSError:                                # pragma: no cover
             pass
+        for p in self._sidecar_paths(key):
+            try:                       # sidecars share the hit's recency
+                os.utime(p)
+            except OSError:
+                pass
         return payload
 
     def get(self, key: str) -> ExploreResult | None:
@@ -295,10 +336,11 @@ class ResultStore:
                 os.remove(p)
             except OSError:                            # pragma: no cover
                 continue
-            try:                       # the timeline sidecar goes with it
-                os.remove(self._timeline_path(k))
-            except OSError:
-                pass
+            for sp in self._sidecar_paths(k):
+                try:                   # every sidecar goes with it
+                    os.remove(sp)
+                except OSError:
+                    pass
             self._bump("evicted")
             total -= size
         self._approx_bytes = total
@@ -338,10 +380,11 @@ class ResultStore:
                 n += 1
             except OSError:                            # pragma: no cover
                 pass
-            try:
-                os.remove(self._timeline_path(key))
-            except OSError:
-                pass
+            for sp in self._sidecar_paths(key):
+                try:
+                    os.remove(sp)
+                except OSError:
+                    pass
         self._approx_bytes = None
         return n
 
@@ -410,6 +453,17 @@ class RemoteStoreTier:
         if self.local is not None:
             self.local.put(key, result)
         self._bump("puts")
+
+    def put_measurements(self, key: str, records: list) -> None:
+        """Measurement sidecars follow :meth:`put`'s local-only rule."""
+        if self.local is not None:
+            self.local.put_measurements(key, records)
+
+    def get_measurements(self, key: str) -> list | None:
+        """Local tier only (no remote fall-through for sidecars)."""
+        if self.local is not None:
+            return self.local.get_measurements(key)
+        return None
 
     def _remote_get(self, key: str) -> dict | None:
         import urllib.error

@@ -85,3 +85,71 @@ def test_uncapped_store_never_evicts(tmp_path):
         store.put(_key(i), _result(str(i)))
     assert store.stats["evicted"] == 0
     assert len(store.keys()) == 5
+
+
+_MEAS = [{"kernel": "cim_matmul", "bucket": "128x128x128", "tiling": "AF",
+          "us": 12.5, "flops": 4.2e6, "bytes": 2.0e5, "seed": 0}]
+
+
+def test_measurements_sidecar_round_trip(tmp_path):
+    store = ResultStore(str(tmp_path), ttl_s=None, max_mb=None)
+    store.put(_key(1), _result())
+    assert store.get_measurements(_key(1)) is None, \
+        "no sidecar yet -> miss"
+    store.put_measurements(_key(1), _MEAS)
+    assert store.get_measurements(_key(1)) == _MEAS
+    assert os.path.exists(store._measurements_path(_key(1)))
+
+
+def test_measurements_sidecar_ttl_expires_with_parent(tmp_path):
+    store = ResultStore(str(tmp_path), ttl_s=0.05, max_mb=None)
+    store.put(_key(1), _result())
+    store.put_measurements(_key(1), _MEAS)
+    time.sleep(0.08)
+    assert store.get(_key(1)) is None
+    assert not os.path.exists(store._measurements_path(_key(1))), \
+        "expired record must take its measurements sidecar with it"
+    assert store.get_measurements(_key(1)) is None
+
+
+def test_measurements_sidecar_recency_refreshed_on_hit(tmp_path):
+    store = ResultStore(str(tmp_path), ttl_s=None, max_mb=None)
+    store.put(_key(1), _result())
+    store.put_measurements(_key(1), _MEAS)
+    sidecar = store._measurements_path(_key(1))
+    mtime0 = os.path.getmtime(sidecar)
+    time.sleep(0.05)
+    assert store.get(_key(1)) is not None
+    assert os.path.getmtime(sidecar) > mtime0, \
+        "a hit on the parent must refresh the sidecar's LRU recency too"
+
+
+def test_measurements_sidecar_evicted_with_parent(tmp_path):
+    probe = ResultStore(str(tmp_path), ttl_s=None, max_mb=None)
+    probe.put(_key(0), _result())
+    rec_bytes = os.path.getsize(probe._path(_key(0)))
+    probe.clear()
+
+    store = ResultStore(str(tmp_path), ttl_s=None,
+                        max_mb=3.5 * rec_bytes / 1e6)
+    for i in range(3):
+        store.put(_key(i), _result(str(i)))
+        store.put_measurements(_key(i), _MEAS)
+        time.sleep(0.02)
+    assert store.get(_key(0)) is not None     # key 1 becomes the LRU
+    time.sleep(0.02)
+    store.put(_key(3), _result("3"))
+    assert store.get(_key(1)) is None, "LRU record must be evicted"
+    assert not os.path.exists(store._measurements_path(_key(1))), \
+        "eviction must remove the measurements sidecar, not orphan it"
+    assert store.get_measurements(_key(0)) == _MEAS, \
+        "surviving record keeps its sidecar"
+
+
+def test_clear_removes_measurement_sidecars(tmp_path):
+    store = ResultStore(str(tmp_path), ttl_s=None, max_mb=None)
+    store.put(_key(1), _result())
+    store.put_measurements(_key(1), _MEAS)
+    store.clear()
+    assert store.get_measurements(_key(1)) is None
+    assert not os.path.exists(store._measurements_path(_key(1)))
