@@ -18,7 +18,11 @@ their rows incrementally through the async DSE service.
 ``--two-fidelity`` appends a ``_two_fidelity`` record whose rows track
 the analytic-vs-measured rank gap per network (``(1 - rank_corr) * 1000``
 as ``us_per_call`` so the same trend gate applies -- 0 means the
-calibrated re-scoring agrees with the analytic ranking).
+calibrated re-scoring agrees with the analytic ranking);
+``--load-test`` appends a ``_load_test`` record from the Poisson
+scheduler load test (``benchmarks.load_test``) with one
+``us_per_job = 1e6 / jobs_per_s`` row per scheduler leg, so the trend
+gate flags jobs/sec regressions in either scheduler.
 """
 from __future__ import annotations
 
@@ -74,6 +78,10 @@ def main() -> None:
                     help="run the two-fidelity portfolio race (measured "
                          "final rung) and append a _two_fidelity record "
                          "with analytic-vs-measured rank-gap rows")
+    ap.add_argument("--load-test", action="store_true",
+                    help="run the Poisson scheduler load test "
+                         "(continuous vs window legs) and append a "
+                         "_load_test record with us-per-job rows")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else None
     if args.service_url:
@@ -194,6 +202,44 @@ def main() -> None:
             rec["status"] = "failed"
             rec["error"] = traceback.format_exc()
             print(f"# _two_fidelity FAILED:\n{rec['error']}", flush=True)
+        rec["elapsed_s"] = round(time.perf_counter() - t0, 3)
+        records.append(rec)
+
+    if args.load_test:
+        print("# === _load_test: Poisson scheduler load test ===",
+              flush=True)
+        t0 = time.perf_counter()
+        rec = {"module": "_load_test",
+               "title": "Poisson scheduler load test "
+                        "(continuous vs window)", "rows": []}
+        try:
+            from benchmarks.load_test import run_load_test
+
+            out = run_load_test()
+            for leg in out["legs"]:
+                rec["rows"].append({
+                    "name": f"load_test/{leg['scheduler']}/us_per_job",
+                    "us_per_call": 1e6 / leg["jobs_per_s"],
+                    "derived": (f"jobs_per_s={leg['jobs_per_s']:.2f} "
+                                f"p50_s={leg['p50_s']:.3f} "
+                                f"p95_s={leg['p95_s']:.3f} "
+                                f"admission_rate="
+                                f"{leg['admission_rate']:.2f} "
+                                f"dispatches={leg['dispatches']}"),
+                })
+                print(f"{rec['rows'][-1]['name']},"
+                      f"{rec['rows'][-1]['us_per_call']:.1f},"
+                      f"{rec['rows'][-1]['derived']}", flush=True)
+            print(f"# continuous vs window speedup: "
+                  f"{out['speedup']:.2f}x", flush=True)
+            if any(leg["failed"] for leg in out["legs"]):
+                raise RuntimeError("load test had failed submissions")
+            rec["status"] = "ok"
+        except Exception:   # noqa: BLE001 -- trend row must not fail the run
+            failures += 1
+            rec["status"] = "failed"
+            rec["error"] = traceback.format_exc()
+            print(f"# _load_test FAILED:\n{rec['error']}", flush=True)
         rec["elapsed_s"] = round(time.perf_counter() - t0, 3)
         records.append(rec)
 

@@ -58,7 +58,7 @@ class DistributedResult:
 
 
 def race_devices() -> list:
-    """Visible JAX devices the engine's portfolio racer round-robins
+    """Visible JAX devices the engine's portfolio racer places
     constituent backends across (``ExplorationEngine._run_portfolio_batch``
     dispatches each race wave's runs asynchronously, one backend per
     device, and folds the wave's results into per-job incumbents -- the
@@ -66,8 +66,24 @@ def race_devices() -> list:
     Multi-CPU-device processes (``XLA_FLAGS=
     --xla_force_host_platform_device_count=N``) race exactly like real
     multi-chip hosts; a 1-device list makes the engine fall back to the
-    default-placement path."""
-    return list(jax.devices())
+    default-placement path.
+
+    ``CIM_TUNER_RACE_DEVICES="0,2"`` restricts (and orders) the raced
+    devices by index -- the process-level complement of
+    ``PortfolioSettings.device_affinity``, which pins each constituent to
+    a slot *within* this list.  Placement never feeds the RNG, so any
+    subset produces bit-identical results."""
+    devs = list(jax.devices())
+    spec = os.environ.get("CIM_TUNER_RACE_DEVICES", "").strip()
+    if spec:
+        try:
+            slots = [int(x) for x in spec.split(",") if x.strip()]
+        except ValueError as exc:
+            raise ValueError(
+                f"CIM_TUNER_RACE_DEVICES must be comma-separated device "
+                f"indices, got {spec!r}") from exc
+        devs = [devs[s % len(devs)] for s in slots] or devs
+    return devs
 
 
 def _round_body(

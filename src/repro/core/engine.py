@@ -115,6 +115,19 @@ _M_PULLS = _REG.counter(
 _M_RUNGS = _REG.counter(
     "cim_search_rungs_total",
     "Portfolio race rungs / bandit waves executed", ("allocator",))
+# continuous-batching scheduler families (docs/scheduler.md); the queue
+# owns the admission counters, the engine owns the budget-flow ones
+_M_SCHED_RELEASED = _REG.counter(
+    "cim_sched_budget_released_pulls_total",
+    "Race pulls released into the shared pool by flatlined jobs")
+_M_SCHED_ABSORBED = _REG.counter(
+    "cim_sched_budget_absorbed_pulls_total",
+    "Shared-pool race pulls absorbed by still-improving jobs")
+_M_SCHED_FLATLINED = _REG.counter(
+    "cim_sched_flatlined_jobs_total",
+    "Jobs whose bandit improvement rate flatlined mid-race")
+for _m in (_M_SCHED_RELEASED, _M_SCHED_ABSORBED, _M_SCHED_FLATLINED):
+    _m.inc(0)              # eager child: families render even when idle
 
 
 # --------------------------------------------------------------------- #
@@ -244,8 +257,12 @@ class ExploreResult:
 #: payload -- the active calibration version when the settings request
 #: measured fidelity, ``None`` otherwise -- so warm analytic results can
 #: never answer calibrated queries (and a re-fit calibration can never be
-#: answered by a stale measured result).
-JOB_KEY_SCHEMA = 4
+#: answered by a stale measured result).  Schema 5: ``PortfolioSettings``
+#: grew the budget-flow / device-affinity knobs (``flatline_waves``,
+#: ``flatline_eps``, ``device_affinity``); they hash through the
+#: ``settings`` slot, and the explicit bump retires every pre-scheduler
+#: stored result at once instead of only the portfolio ones.
+JOB_KEY_SCHEMA = 5
 
 
 def valid_methods() -> tuple[str, ...]:
@@ -597,6 +614,7 @@ class ExplorationEngine:
         settings=None,
         sa_settings: SASettings | None = None,
         keys: typing.Sequence[str] | None = None,
+        admit: typing.Callable[[], list] | None = None,
     ) -> list[ExploreResult]:
         """Co-explore every job; results come back in submission order.
 
@@ -614,6 +632,17 @@ class ExplorationEngine:
         the legacy alias.  ``keys`` lets callers that already computed
         :func:`job_key` for each job (the service queue) skip re-hashing;
         when given it must align 1:1 with ``jobs``.
+
+        ``admit`` is the continuous-batching admission hook (see
+        docs/scheduler.md): a callable polled once per bandit wave that
+        returns late-arriving ``(job, key)`` pairs to join the in-flight
+        race at the next rung boundary.  It requires a single-bucket
+        batch running a bandit-allocator portfolio (the only phase
+        structure with rung boundaries that keeps per-job schedules
+        independent); admitted jobs start their own pull schedule from
+        zero, so each one's result is bit-identical to a solo
+        submission.  Their results are appended AFTER the initial jobs'
+        results, in admission order.
         """
         t_start = time.perf_counter()
         if settings is None:
@@ -649,10 +678,14 @@ class ExplorationEngine:
         self.stats.bump("jobs", len(jobs))
 
         results: list[ExploreResult | None] = [None] * len(jobs)
+        admitted_results: list[ExploreResult] = []
+        bucket_groups = self._buckets(
+            [(i, prepared[i]) for i in unique], methods, eff)
+        if admit is not None:
+            self._check_admittable(bucket_groups)
         with obs.span("engine.run", histogram=_M_RUN_S,
                       jobs=len(jobs), unique=len(unique)):
-            for (bucket, group_settings), members in self._buckets(
-                    [(i, prepared[i]) for i in unique], methods, eff).items():
+            for (bucket, group_settings), members in bucket_groups.items():
                 m = bucket[0]
                 idxs = [i for i, _ in members]
                 batch = [p for _, p in members]
@@ -668,7 +701,14 @@ class ExplorationEngine:
                         if backend.composite:
                             outs = self._run_portfolio_batch(
                                 batch, group_settings,
-                                job_keys=[keys[i] for i in idxs])
+                                job_keys=[keys[i] for i in idxs],
+                                admit=None if admit is None else
+                                self._wrap_admit(admit, bucket, m))
+                            # rung-admitted jobs ride behind the initial
+                            # batch; their results resolve positionally
+                            # after every submitted job's
+                            admitted_results = list(outs[len(idxs):])
+                            outs = outs[:len(idxs)]
                         else:
                             outs = self._run_search_batch(batch, backend,
                                                           group_settings)
@@ -685,10 +725,11 @@ class ExplorationEngine:
         for k, n in fanout.items():
             recorder.annotate(k, dedup_fanout=n)
 
+        results.extend(admitted_results)
         runtime = time.perf_counter() - t_start
         for r in results:
             r.search["runtime_s"] = runtime
-            r.search["batch_jobs"] = len(jobs)
+            r.search["batch_jobs"] = len(results)
         return typing.cast("list[ExploreResult]", results)
 
     def candidate_values(
@@ -752,6 +793,47 @@ class ExplorationEngine:
             key = (self._bucket_key(p, methods[i]), eff[i])
             groups.setdefault(key, []).append((i, p))
         return groups
+
+    # ---- continuous-batching admission (docs/scheduler.md) -------- #
+    @staticmethod
+    def _check_admittable(bucket_groups: dict) -> None:
+        """Reject ``admit=`` for batches that have no rung boundaries to
+        admit at: admission needs exactly one executable bucket, running
+        the composite portfolio under the bandit allocator (halving
+        culls across rungs and plain backends are single-shot, so a
+        late join would perturb the in-flight jobs)."""
+        if len(bucket_groups) != 1:
+            raise ValueError(
+                "rung admission requires a single executable bucket per "
+                f"run() call, got {len(bucket_groups)} groups")
+        ((bucket, group_settings),) = bucket_groups.keys()
+        m = bucket[0]
+        if m == "exhaustive" or not get_backend(m).composite or \
+                getattr(group_settings, "allocator", None) != "bandit":
+            raise ValueError(
+                "rung admission requires a bandit-allocator portfolio "
+                f"group, got method={m!r} allocator="
+                f"{getattr(group_settings, 'allocator', None)!r}")
+
+    def _wrap_admit(self, admit, bucket: tuple, method: str):
+        """Engine-side admission shim: prepares each late ``(job, key)``
+        pair the caller's hook returns and verifies it really belongs to
+        the in-flight executable bucket (the queue only offers
+        compatible entries; a mismatch is a programming error that would
+        silently corrupt the batched launch shapes)."""
+        def engine_admit() -> list:
+            out = []
+            for job, key in admit():
+                p = self._prepare(job)
+                got = self._bucket_key(p, method)
+                if got != bucket:
+                    raise ValueError(
+                        f"admitted job bucket {got} does not match the "
+                        f"in-flight group bucket {bucket}")
+                self.stats.bump("jobs")
+                out.append((key, p))
+            return out
+        return engine_admit
 
     # ---- pluggable search-backend path ---------------------------- #
     def _dispatch_backend_async(
@@ -865,6 +947,7 @@ class ExplorationEngine:
     def _run_portfolio_batch(
         self, batch: list[_PreparedJob], settings,
         job_keys: typing.Sequence[str] | None = None,
+        admit: typing.Callable[[], list] | None = None,
     ) -> list[ExploreResult]:
         """Race the constituent backends per job under the settings'
         budget allocator, then spend the remaining budget on each job's
@@ -882,15 +965,36 @@ class ExplorationEngine:
         ``allocator="halving"``: fixed rungs, per-job culling to the best
         ``ceil(k/2)`` each rung.
 
+        The bandit race runs as a continuous-batching wave scheduler
+        (docs/scheduler.md): every bandit state (pull counters, rewards,
+        UCB choice, derived seeds) is per-job, so the wave loop carries
+        each job through its OWN schedule and two extensions fall out
+        without perturbing anyone's trajectory:
+
+        * ``admit`` -- prepared late jobs returned by the hook (see
+          :meth:`run`) join the next wave at pull 0 and race to
+          completion inside this call; with no arrivals the loop is
+          bit-identical to the classic closed-batch race.
+        * cross-job budget flow -- with ``settings.flatline_waves > 0``,
+          a job whose last ``flatline_waves`` adaptive pulls each earned
+          reward below ``flatline_eps`` releases its remaining race
+          pulls into a shared pool that still-improving jobs drain one
+          pull per wave; per-job accounting lands in
+          ``search["budget_flow"]`` and as ``phase="budget_flow"``
+          SSE/recorder events.
+
         Every wave's constituent runs are dispatched asynchronously and
-        round-robined across the visible JAX devices
-        (:meth:`_race_devices`); the fold of each wave's results into the
-        per-job incumbents is the per-rung best exchange (the host-side
-        analogue of ``core/distributed.py``'s ``pmin`` collective).
+        placed across the visible JAX devices (:meth:`_race_devices`;
+        round-robin, or pinned per constituent via
+        ``settings.device_affinity``); the fold of each wave's results
+        into the per-job incumbents is the per-rung best exchange (the
+        host-side analogue of ``core/distributed.py``'s ``pmin``
+        collective).
         """
         from repro.search.portfolio import (
             bandit_pull_plan,
             bandit_rounds,
+            constituent_devices,
             derived_seed,
             final_plan,
             pull_reward,
@@ -898,19 +1002,23 @@ class ExplorationEngine:
             ucb_scores,
         )
 
+        batch = list(batch)
+        job_keys = None if job_keys is None else list(job_keys)
+        if admit is not None and job_keys is None:
+            raise ValueError("rung admission requires job_keys")
         names = settings.backends
         n_jobs, n_back = len(batch), len(names)
         devices = self._race_devices()
         n_devices = sum(d is not None for d in devices) or 1
+        dev_of = constituent_devices(settings, devices)
         bus = obs.progress_bus()
         recorder = obs.flight_recorder()
+        # the flight recorder opens one decision timeline per job,
+        # capturing the same per-rung payloads the SSE bus publishes
+        # (so the two reconcile exactly) plus bandit internals
+        device_map = {name: str(dev_of[b_idx] or "default")
+                      for b_idx, name in enumerate(names)}
         if job_keys is not None:
-            # the flight recorder opens one decision timeline per job,
-            # capturing the same per-rung payloads the SSE bus publishes
-            # (so the two reconcile exactly) plus bandit internals
-            device_map = {name: str(devices[b_idx % len(devices)]
-                                    or "default")
-                          for b_idx, name in enumerate(names)}
             for j in range(n_jobs):
                 recorder.start(
                     job_keys[j], method="portfolio",
@@ -939,7 +1047,7 @@ class ExplorationEngine:
                 return None
             arrays = self._dispatch_backend_async(
                 [batch[j] for j in sel], get_backend(names[b_idx]), scaled,
-                device=devices[b_idx % len(devices)], seed_rows=seed_rows)
+                device=dev_of[b_idx], seed_rows=seed_rows)
             return (b_idx, sel, arrays)
 
         def _collect(handle, prev=None,
@@ -990,13 +1098,17 @@ class ExplorationEngine:
         def _publish(phase: str, rung: int,
                      jobs_touched: typing.Iterable[int],
                      rewards: dict | None = None,
-                     ucb=None, chosen=None) -> None:
+                     ucb=None, chosen: dict | None = None) -> None:
             """One progress event per touched job after a race wave (the
             SSE ``progress`` payload; no-op when the caller didn't pass
             ``job_keys``).  The identical payload lands on the flight
             recorder, extended with the wave's bandit internals
             (``rewards`` per job, UCB ``scores`` and the ``chosen``
-            arm) so timelines reconcile with the SSE stream exactly."""
+            arm) so timelines reconcile with the SSE stream exactly.
+            ``chosen`` maps job -> backend index for the jobs that made
+            an ADAPTIVE pull this wave; initialization pulls carry no
+            UCB state, so a mixed wave (admitted jobs initializing next
+            to veterans) only attaches ucb/chosen to the veterans."""
             if job_keys is None:
                 return
             for j in jobs_touched:
@@ -1011,12 +1123,21 @@ class ExplorationEngine:
                 bus.publish(job_keys[j], **payload)
                 if rewards is not None and j in rewards:
                     payload["rewards"] = rewards[j]
-                if ucb is not None:
-                    payload["ucb"] = {name: _fin(ucb[j, b])
-                                      for b, name in enumerate(names)}
-                if chosen is not None:
+                if chosen is not None and j in chosen:
+                    if ucb is not None:
+                        payload["ucb"] = {name: _fin(ucb[j, b])
+                                          for b, name in enumerate(names)}
                     payload["chosen"] = names[int(chosen[j])]
                 recorder.event(job_keys[j], payload)
+
+        # cross-job budget-flow accounting (bandit allocator only; the
+        # halving branch leaves the defaults, so ``search["budget_flow"]``
+        # reads uniformly for every portfolio result)
+        flatlined = [False] * n_jobs
+        released = [0] * n_jobs
+        absorbed = [0] * n_jobs
+        admit_wave = [0] * n_jobs
+        spare_pulls = 0
 
         if settings.allocator == "halving":
             alive = np.ones((n_jobs, n_back), dtype=bool)
@@ -1042,41 +1163,107 @@ class ExplorationEngine:
                                             kind="stable")]
                     alive[j, order[keep:]] = False
         else:                                          # "bandit"
+            # continuous-batching wave scheduler: every job carries its
+            # OWN pull schedule (counters, rewards, derived seeds), so a
+            # closed batch replays the classic init-then-adaptive race
+            # bit-for-bit while late-admitted jobs start at pull 0 and
+            # follow exactly their solo trajectory (the seed of pull p
+            # is derived_seed(seed, backend, p) -- batch-independent)
             sum_reward = np.zeros((n_jobs, n_back))
-            # init wave: one pull per backend for every job (== rung 0)
-            _M_RUNGS.inc(allocator="bandit")
-            prev = best_val.copy()
-            wave_rewards: dict[int, dict[str, float]] = {}
-            with obs.span("engine.portfolio.rung", allocator="bandit",
-                          rung=0, jobs=n_jobs):
-                handles = [
-                    _launch(b_idx, bandit_pull_plan(settings, b_idx, 0),
-                            list(range(n_jobs)))
-                    for b_idx in range(n_back)]
-                for h in handles:
-                    for j, (_v, r) in _collect(h, prev).items():
-                        sum_reward[j, h[0]] += r
-                        _record_pull(j, h[0])
-                        wave_rewards.setdefault(j, {})[names[h[0]]] = \
-                            float(r)
-            _publish("race", 0, range(n_jobs), rewards=wave_rewards)
-            # adaptive pulls: per-job UCB argmax (stable: ties resolve to
-            # the lower backend index, so the schedule is deterministic)
-            for wave in range(bandit_rounds(settings) - n_back):
+            base_rounds = bandit_rounds(settings)
+            flow_on = settings.flatline_waves > 0
+            needs_init = [True] * n_jobs
+            race_budget = [base_rounds] * n_jobs
+            flat_run = [0] * n_jobs   # consecutive flat adaptive pulls
+            wave = 0
+
+            def _admit_pending() -> None:
+                """Pull the caller's admission hook and extend every
+                per-job state row for the newcomers (they join the next
+                wave's initialization pulls)."""
+                nonlocal n_jobs, best_val, best_idx, per_backend, \
+                    pulls, sum_reward
+                for key, p in admit():
+                    batch.append(p)
+                    job_keys.append(key)
+                    best_val = np.append(best_val, np.inf)
+                    best_idx = np.concatenate(
+                        [best_idx, np.zeros((1, 5), dtype=np.int64)])
+                    per_backend = np.concatenate(
+                        [per_backend, np.full((1, n_back), np.inf)])
+                    pulls = np.concatenate(
+                        [pulls, np.zeros((1, n_back), dtype=np.int64)])
+                    sum_reward = np.concatenate(
+                        [sum_reward, np.zeros((1, n_back))])
+                    member_vals.append(None)
+                    traces.append(None)
+                    pool.append(dict())
+                    needs_init.append(True)
+                    race_budget.append(base_rounds)
+                    flat_run.append(0)
+                    flatlined.append(False)
+                    released.append(0)
+                    absorbed.append(0)
+                    admit_wave.append(wave)
+                    n_jobs += 1
+                    recorder.start(
+                        key, method="portfolio",
+                        allocator=settings.allocator,
+                        backends=list(names), devices=n_devices,
+                        device_map=device_map,
+                        total_evals=settings.total_evals,
+                        rungs=settings.rungs, seed=settings.seed,
+                        admitted_wave=wave)
+
+            while True:
+                if admit is not None:
+                    _admit_pending()
+                # plan the wave: newcomers initialize (one pull per
+                # backend, == halving's rung 0); veterans with budget
+                # make their UCB-argmax adaptive pull (stable: ties
+                # resolve to the lower backend index); spent-but-hot
+                # jobs drain the shared pool one pull per wave
+                init_jobs = [j for j in range(n_jobs) if needs_init[j]]
+                chosen: dict[int, int] = {}
+                scores = None
+                spent = pulls.sum(axis=1)
+                ready = [j for j in range(n_jobs)
+                         if not needs_init[j] and not flatlined[j]]
+                if ready:
+                    scores = ucb_scores(
+                        sum_reward / np.maximum(pulls, 1), pulls,
+                        settings.ucb_c)
+                    choice = np.argmax(scores, axis=1)
+                    for j in ready:
+                        if spent[j] < race_budget[j]:
+                            chosen[j] = int(choice[j])
+                        elif spare_pulls > 0:
+                            spare_pulls -= 1
+                            absorbed[j] += 1
+                            chosen[j] = int(choice[j])
+                            _M_SCHED_ABSORBED.inc()
+                            if job_keys is not None:
+                                fp = dict(
+                                    phase="budget_flow", action="absorb",
+                                    allocator=settings.allocator,
+                                    rung=wave, absorbed=absorbed[j],
+                                    pool=spare_pulls)
+                                bus.publish(job_keys[j], **fp)
+                                recorder.event(job_keys[j], fp)
+                if not init_jobs and not chosen:
+                    break
                 _M_RUNGS.inc(allocator="bandit")
-                scores = ucb_scores(
-                    sum_reward / np.maximum(pulls, 1), pulls,
-                    settings.ucb_c)
-                choice = np.argmax(scores, axis=1)
                 prev = best_val.copy()
                 touched: set[int] = set()
-                wave_rewards = {}
-                with obs.span("engine.portfolio.rung", allocator="bandit",
-                              rung=wave + 1, jobs=n_jobs):
+                wave_rewards: dict[int, dict[str, float]] = {}
+                with obs.span("engine.portfolio.rung",
+                              allocator="bandit", rung=wave,
+                              jobs=n_jobs):
                     handles = []
                     for b_idx in range(n_back):
-                        sel = [j for j in range(n_jobs)
-                               if choice[j] == b_idx]
+                        sel = sorted(set(init_jobs) |
+                                     {j for j, b in chosen.items()
+                                      if b == b_idx})
                         if not sel:
                             continue
                         handles.append(_launch(
@@ -1092,8 +1279,39 @@ class ExplorationEngine:
                             touched.add(j)
                             wave_rewards.setdefault(j, {})[
                                 names[h[0]]] = float(r)
-                _publish("race", wave + 1, sorted(touched),
-                         rewards=wave_rewards, ucb=scores, chosen=choice)
+                            if flow_on and j in chosen:
+                                flat_run[j] = 0 \
+                                    if r >= settings.flatline_eps \
+                                    else flat_run[j] + 1
+                for j in init_jobs:
+                    needs_init[j] = False
+                _publish("race", wave, sorted(touched),
+                         rewards=wave_rewards, ucb=scores, chosen=chosen)
+                if flow_on:
+                    # flatline release: a job whose improvement rate
+                    # dried up hands its unspent race pulls to the pool
+                    spent = pulls.sum(axis=1)
+                    for j in range(n_jobs):
+                        if flatlined[j] or needs_init[j] or \
+                                flat_run[j] < settings.flatline_waves:
+                            continue
+                        rem = int(race_budget[j] - spent[j])
+                        flatlined[j] = True
+                        _M_SCHED_FLATLINED.inc()
+                        if rem > 0:
+                            released[j] = rem
+                            race_budget[j] = int(spent[j])
+                            spare_pulls += rem
+                            _M_SCHED_RELEASED.inc(rem)
+                        if job_keys is not None:
+                            fp = dict(
+                                phase="budget_flow", action="release",
+                                allocator=settings.allocator, rung=wave,
+                                released=rem, pool=spare_pulls,
+                                spent=int(spent[j]))
+                            bus.publish(job_keys[j], **fp)
+                            recorder.event(job_keys[j], fp)
+                wave += 1
 
         # exploitation: the per-job winner gets the remaining budget
         # (kept out of per_backend so `race` stays race-phase-only)
@@ -1237,6 +1455,16 @@ class ExplorationEngine:
                 "total_evals": settings.total_evals,
                 "devices": sum(d is not None for d in devices) or 1,
                 "fidelity": getattr(settings, "fidelity", "analytic"),
+            }
+            out.search["budget_flow"] = {
+                "enabled": settings.allocator == "bandit"
+                and settings.flatline_waves > 0,
+                "flatlined": bool(flatlined[j]),
+                "released": int(released[j]),
+                "absorbed": int(absorbed[j]),
+                "race_pulls": int(pulls[j].sum()),
+                "pool_leftover": int(spare_pulls),
+                "admitted_wave": int(admit_wave[j]),
             }
             if two_fidelity[j] is not None:
                 out.search["two_fidelity"] = two_fidelity[j]

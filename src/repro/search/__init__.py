@@ -36,7 +36,8 @@ from repro.search.portfolio import (ALLOCATORS, FIDELITIES,
                                     PortfolioBackend,
                                     PortfolioSettings, bandit_pull_plan,
                                     bandit_rounds, bandit_slice,
-                                    final_plan, race_plan, ucb_scores)
+                                    constituent_devices, final_plan,
+                                    race_plan, ucb_scores)
 from repro.search.sa import SASettings, SimulatedAnnealingBackend
 from repro.search.sobol import (SobolBackend, SobolSettings,
                                 sobol_index_population)
@@ -50,5 +51,5 @@ __all__ = [
     "SobolSettings", "SobolBackend", "sobol_index_population",
     "PortfolioSettings", "PortfolioBackend", "race_plan", "final_plan",
     "ALLOCATORS", "FIDELITIES", "bandit_pull_plan", "bandit_rounds",
-    "bandit_slice", "ucb_scores",
+    "bandit_slice", "ucb_scores", "constituent_devices",
 ]

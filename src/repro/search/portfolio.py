@@ -57,7 +57,7 @@ from repro.search.base import SearchBackend, get_backend, register_backend
 __all__ = ["PortfolioSettings", "PortfolioBackend", "race_plan",
            "final_plan", "derived_seed", "bandit_slice", "bandit_rounds",
            "bandit_pull_plan", "ucb_scores", "pull_reward", "ALLOCATORS",
-           "FIDELITIES"]
+           "FIDELITIES", "constituent_devices"]
 
 #: valid ``PortfolioSettings.allocator`` values
 ALLOCATORS = ("bandit", "halving")
@@ -94,6 +94,20 @@ class PortfolioSettings:
     fidelity: str = "analytic"
     #: how many analytic front-runners the measured phase re-scores
     topk: int = 8
+    #: cross-job budget flow (bandit allocator only): a job whose last
+    #: ``flatline_waves`` consecutive adaptive pulls each earned reward
+    #: below ``flatline_eps`` releases its remaining race pulls into a
+    #: shared group pool that still-improving jobs drain.  0 disables
+    #: reallocation entirely (the bit-for-bit-deterministic default).
+    flatline_waves: int = 0
+    #: reward threshold below which an adaptive pull counts as flat
+    flatline_eps: float = 1e-6
+    #: per-constituent device pin: ``device_affinity[b]`` is the race
+    #: device slot backend ``b`` runs on every wave (``None`` keeps the
+    #: engine's round-robin placement).  Slots index the visible race
+    #: devices modulo their count, so a pinning stays valid -- and the
+    #: results stay bit-identical -- whatever hardware is present.
+    device_affinity: tuple[int, ...] | None = None
 
     def __post_init__(self):
         # field-local checks fail fast at construction; registry-dependent
@@ -109,6 +123,21 @@ class PortfolioSettings:
             raise ValueError(
                 f"unknown portfolio allocator {self.allocator!r}; "
                 f"valid: {ALLOCATORS}")
+        if self.flatline_waves < 0:
+            raise ValueError("portfolio flatline_waves must be >= 0")
+        if self.flatline_waves and self.allocator != "bandit":
+            raise ValueError(
+                "budget flow (flatline_waves > 0) needs the bandit "
+                "allocator: rewards come from its pull traces")
+        if self.flatline_eps < 0:
+            raise ValueError("portfolio flatline_eps must be >= 0")
+        if self.device_affinity is not None:
+            if len(self.device_affinity) != len(self.backends):
+                raise ValueError(
+                    f"device_affinity length {len(self.device_affinity)} "
+                    f"!= backend count {len(self.backends)}")
+            if any(int(d) < 0 for d in self.device_affinity):
+                raise ValueError("device_affinity slots must be >= 0")
 
 
 def derived_seed(seed: int, backend_index: int, rung: int) -> int:
@@ -237,6 +266,22 @@ def pull_reward(incumbent_before: float, trace: np.ndarray) -> float:
         ref = float(trace.flat[0])
     gain = max(0.0, ref - run_best)
     return float(min(1.0, gain / (abs(ref) + 1e-30)))
+
+
+def constituent_devices(settings: PortfolioSettings,
+                        devices: list) -> list:
+    """The race device each constituent backend runs on, as a list
+    aligned with ``settings.backends``.  ``device_affinity`` pins
+    constituents to explicit slots (e.g. SA on device 0, Sobol on device
+    1); ``None`` keeps the historical round-robin over the visible race
+    devices.  Either way slots wrap modulo ``len(devices)``, so a pinned
+    settings object runs unchanged on any machine (device placement
+    never feeds the RNG, so results are identical regardless)."""
+    aff = settings.device_affinity
+    if aff is None:
+        return [devices[b % len(devices)]
+                for b in range(len(settings.backends))]
+    return [devices[int(slot) % len(devices)] for slot in aff]
 
 
 def ucb_scores(mean_reward: np.ndarray, pulls: np.ndarray,

@@ -1,4 +1,4 @@
-"""Thread-backed exploration job queue: priorities, micro-batching, dedup.
+"""Thread-backed exploration job queue: continuous batching, dedup.
 
 Submissions accumulate for a small window (or until a batch-size threshold),
 dedup by canonical job key, and dispatch as ONE ``ExplorationEngine.run()``
@@ -14,11 +14,23 @@ Three admission tiers, checked in order at submit time:
 2. **in-flight dedup** -- an identical pending/running job fans its result
    out to every duplicate future;
 3. **queue** -- new work enters the micro-batch window.
+
+On top of the window, the queue runs a **continuous-batching scheduler**
+(docs/scheduler.md): while a bandit-allocator portfolio group races, the
+engine polls :meth:`JobQueue._admission_hook`'s callback at every rung
+boundary, and pending submissions that match the in-flight ``(kind,
+method, settings, bucket)`` signature join the running race instead of
+waiting out the window behind it.  Admitted entries keep full queue
+semantics -- they stay in the in-flight dedup map, their results persist
+to the store, and their futures resolve exactly once -- and with no late
+arrivals the dispatch is bit-identical to the plain window path
+(``QueueConfig(continuous=False)``).
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import inspect
 import threading
 import time
 import typing
@@ -67,14 +79,39 @@ _M_DEPTH = _REG.gauge(
 _M_WAIT_S = _REG.histogram(
     "cim_queue_wait_seconds",
     "Submit-to-dispatch latency per queue entry")
+# continuous-batching scheduler families (docs/scheduler.md); the engine
+# owns the budget-flow counters, the queue owns the admission ones
+_M_SCHED_ADMISSIONS = _REG.counter(
+    "cim_sched_admissions_total",
+    "Late submissions admitted into an in-flight group at a rung boundary")
+_M_SCHED_CHECKS = _REG.counter(
+    "cim_sched_admission_checks_total",
+    "Rung-boundary admission polls made by in-flight groups")
+_M_SCHED_GROUPS = _REG.gauge(
+    "cim_sched_inflight_groups",
+    "Executable-bucket groups currently inside an engine call")
+_M_SCHED_GROUP_JOBS = _REG.gauge(
+    "cim_sched_inflight_group_jobs",
+    "Jobs in the currently dispatched group, rung admissions included")
+_M_SCHED_GROUPS.set(0)
+_M_SCHED_GROUP_JOBS.set(0)
 
 
 @dataclasses.dataclass(frozen=True)
 class QueueConfig:
     #: micro-batch accumulation window after the first pending submission
     batch_window_s: float = 0.02
-    #: dispatch early once this many submissions are pending
+    #: hard cap on jobs per dispatch (and per admission poll): a bigger
+    #: backlog dispatches as successive bounded batches -- or, under the
+    #: continuous scheduler, joins the in-flight race in ``max_batch``
+    #: slices at successive rung boundaries
     max_batch_jobs: int = 64
+    #: continuous batching: let pending submissions that match an
+    #: in-flight bandit-portfolio group join its race at the next rung
+    #: boundary instead of waiting for the group to finish.  ``False``
+    #: restores the pure fixed-window scheduler (every dispatch is a
+    #: closed world until it returns)
+    continuous: bool = True
 
 
 class _Entry:
@@ -226,6 +263,15 @@ class JobQueue:
             "completed": _M_COMPLETED.labels(),
             "failed": _M_FAILED.labels(),
         })
+        # scheduler counters live in their own /v1/stats section so the
+        # legacy "queue" shape stays exactly as pre-scheduler clients
+        # (and the CI fleet smoke) expect it
+        self.sched_stats = obs.StatCounters({
+            "admitted": _M_SCHED_ADMISSIONS.labels(),
+            "admission_checks": _M_SCHED_CHECKS.labels(),
+        })
+        self._running_group: list[_Entry] | None = None
+        self._engine_admits: bool | None = None   # lazy capability probe
 
     # ------------------------------------------------------------- #
     # engine access (lazy so tests can build queues without JAX work)
@@ -347,9 +393,22 @@ class JobQueue:
         return d
 
     def stats_snapshot(self) -> dict:
-        """One JSON-able view of queue + store + engine counters (engine
-        stats appear only once an engine was actually instantiated)."""
+        """One JSON-able view of queue + scheduler + store + engine
+        counters (engine stats appear only once an engine was actually
+        instantiated).  The ``scheduler`` section carries the
+        continuous-batching state: cumulative rung admissions and polls,
+        plus the in-flight group depth (groups inside an engine call and
+        the job count of the running group, admissions included)."""
         out: dict = {"queue": {**self.stats.snapshot(), **self.depth()}}
+        with self._lock:
+            running = self._running_group
+            group_jobs = len(running) if running is not None else 0
+        out["scheduler"] = {
+            **self.sched_stats.snapshot(),
+            "continuous": bool(self.config.continuous),
+            "inflight_groups": 1 if running is not None else 0,
+            "inflight_group_jobs": group_jobs,
+        }
         out["store"] = dict(self.store.stats) \
             if self.store is not None else None
         eng = self._engine
@@ -360,8 +419,19 @@ class JobQueue:
     # ------------------------------------------------------------- #
     # lifecycle
     # ------------------------------------------------------------- #
-    def close(self, timeout: float | None = 10.0) -> None:
-        """Drain pending work, then stop the worker thread."""
+    def close(self, timeout: float | None = None) -> None:
+        """Reject new submissions, drain everything admitted, then stop
+        the worker thread.
+
+        Close is a DRAIN, not an abort: entries already queued when the
+        flag flips are still dispatched (the worker loops until pending
+        is empty, skipping the accumulation window once closed), and a
+        race in flight keeps absorbing compatible pending entries at its
+        rung boundaries -- so shutdown under active load resolves every
+        accepted future instead of stranding whatever the window timer
+        had not yet collected.  ``timeout=None`` (the default) waits for
+        the full drain; pass a number to give up waiting after that many
+        seconds (the daemon worker keeps draining in the background)."""
         with self._cv:
             self._closed = True
             self._cv.notify_all()
@@ -417,9 +487,14 @@ class JobQueue:
                     if remaining <= 0 or self._closed:
                         break
                     self._cv.wait(remaining)
-                batch = sorted(self._pending, key=_Entry.order)
-                self._pending = []
-                _M_DEPTH.set(0, state="pending")
+                # max_batch_jobs is a hard cap per dispatch: the overflow
+                # stays pending, where the continuous scheduler admits it
+                # into the dispatched race at rung boundaries and the
+                # window scheduler picks it up as the next bounded batch
+                cap = max(1, self.config.max_batch_jobs)
+                ordered = sorted(self._pending, key=_Entry.order)
+                batch, self._pending = ordered[:cap], ordered[cap:]
+                _M_DEPTH.set(len(self._pending), state="pending")
             _M_WINDOW.inc()
             try:
                 with obs.span("queue.batch", jobs=len(batch)):
@@ -447,6 +522,86 @@ class JobQueue:
             groups.setdefault(e.bucket, []).append(e)
         return list(groups.values())
 
+    def _admission_hook(self, group: list[_Entry]):
+        """The continuous-batching admission callback for one in-flight
+        group, or ``None`` when the group has no rung boundaries to admit
+        at (admission needs a bandit-allocator portfolio race; halving
+        culls across rungs and every other method is single-shot).
+
+        The engine polls the callback between bandit waves ON the worker
+        thread.  Under the queue lock it sweeps ``_pending`` for entries
+        matching the group's exact ``(kind, method, settings, bucket)``
+        signature and moves them into the group -- they never leave the
+        in-flight dedup map, so duplicate submissions keep folding onto
+        them, and ``_resolve_group`` later persists + resolves them
+        exactly like window-dispatched entries (the engine appends their
+        results in admission order).  Entries that fail bucketing stay
+        pending for the window path to reject individually."""
+        if not self.config.continuous:
+            return None
+        head = group[0]
+        if head.kind != "explore" or head.method != "portfolio" or \
+                getattr(head.settings, "allocator", None) != "bandit":
+            return None
+        if self._engine_admits is None:
+            # stub/legacy engines without an ``admit=`` parameter keep
+            # the plain window path instead of failing the dispatch
+            try:
+                params = inspect.signature(
+                    self.engine.run).parameters.values()
+                self._engine_admits = any(
+                    p.name == "admit" or p.kind == p.VAR_KEYWORD
+                    for p in params)
+            except (TypeError, ValueError):
+                self._engine_admits = False
+        if not self._engine_admits:
+            return None
+        sig = head.bucket
+
+        def admit() -> list[tuple[ExploreJob, str]]:
+            self.sched_stats.bump("admission_checks")
+            taken: list[_Entry] = []
+            cap = max(1, self.config.max_batch_jobs)
+            with self._cv:
+                if self._pending:
+                    rest = []
+                    for e in self._pending:
+                        (taken if len(taken) < cap
+                         and self._admissible(e, sig)
+                         else rest).append(e)
+                    if taken:
+                        self._pending = rest
+                        _M_DEPTH.set(len(self._pending), state="pending")
+            if not taken:
+                return []
+            now = time.perf_counter()
+            for e in taken:
+                group.append(e)
+                _M_WAIT_S.observe(now - e.t_submit)
+            self.sched_stats.bump("admitted", len(taken))
+            _M_SCHED_GROUP_JOBS.set(len(group))
+            _LOG.debug("admitted %d job(s) into in-flight group %s",
+                       len(taken), sig)
+            return [(e.job, e.key) for e in taken]
+
+        return admit
+
+    def _admissible(self, e: _Entry, sig: tuple) -> bool:
+        """Does pending entry ``e`` match an in-flight group signature?
+        Settings compare by dataclass equality; the executable bucket is
+        computed lazily (and cached on the entry) exactly as the window
+        path's ``_groups`` would."""
+        if e.kind != "explore" or e.method != sig[1] or \
+                e.settings != sig[2]:
+            return False
+        try:
+            if e.bucket is None:
+                e.bucket = (e.kind, e.method, e.settings,
+                            self.engine.bucket_key(e.job, e.method))
+        except Exception:        # noqa: BLE001 -- window path rejects it
+            return False
+        return e.bucket == sig
+
     def _dispatch(self, batch: list[_Entry]) -> None:
         for group in self._groups(batch):
             self.stats.bump("dispatches")
@@ -456,20 +611,35 @@ class JobQueue:
             _LOG.debug("dispatch %d job(s) kind=%s method=%s wait=%.3fs",
                        len(group), group[0].kind, group[0].method,
                        now - min(e.t_submit for e in group))
+            with self._lock:
+                self._running_group = group
+            _M_SCHED_GROUPS.set(1)
+            _M_SCHED_GROUP_JOBS.set(len(group))
             try:
                 if group[0].kind == "values":
                     outs = self.engine.candidate_values(
                         [e.job for e in group], [e.payload for e in group])
                 else:
                     # pass the canonical keys computed at submit time so
-                    # the engine's dedup pass skips re-hashing
+                    # the engine's dedup pass skips re-hashing; the
+                    # admission hook (None for non-admittable groups)
+                    # lets compatible late arrivals join mid-race, and
+                    # the engine returns their results appended behind
+                    # the dispatched entries' -- group grows in lockstep
+                    admit = self._admission_hook(group)
+                    kwargs = {} if admit is None else {"admit": admit}
                     outs = self.engine.run(
                         [e.job for e in group], method=group[0].method,
                         settings=group[0].settings,
-                        keys=[e.key for e in group])
+                        keys=[e.key for e in group], **kwargs)
             except Exception as exc:              # noqa: BLE001 -- reject group
                 self._resolve_group(group, None, exc)
                 continue
+            finally:
+                with self._lock:
+                    self._running_group = None
+                _M_SCHED_GROUPS.set(0)
+                _M_SCHED_GROUP_JOBS.set(0)
             self._resolve_group(group, outs, None)
 
     def _resolve_group(self, group, outs, exc) -> None:

@@ -5,6 +5,15 @@ turns any collection of them into an iterator that yields each future the
 moment its micro-batch bucket finishes -- callers see the fast bucket's
 results while the slow bucket is still annealing.  :func:`stream_pareto`
 builds on the same machinery to stream per-workload Pareto frontiers.
+
+Under the continuous-batching scheduler (docs/scheduler.md) a future may
+resolve from *inside* another group's engine call: a submission admitted
+at a rung boundary rides the in-flight race and its future resolves when
+that race's group drains.  Nothing changes for consumers -- ``source``
+still reads ``"engine"`` and every future resolves exactly once -- but
+arrival order and resolution order decouple further than window batching
+alone allowed, which is why every iterator here keys on completion
+events rather than submission order.
 """
 from __future__ import annotations
 

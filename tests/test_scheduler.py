@@ -1,0 +1,306 @@
+"""Continuous-batching scheduler: admission, budget flow, drain.
+
+Engine-level tests drive ``ExplorationEngine.run(..., admit=...)``
+directly with scripted admission hooks on a small real design space --
+proving the scheduler's core claims bit-for-bit (a rung-admitted job
+equals its solo run; budget is conserved under flatline release; the
+quiesced path is unchanged).  Queue-level tests use stub engines (no
+JAX) so admission wiring, the ``max_batch_jobs`` lane cap, and the
+close()-drain contract cannot flake on timing.
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+from test_service import _fake_result, _job
+
+from repro.core import ExplorationEngine, job_key
+from repro.search import PortfolioSettings
+from repro.search.portfolio import bandit_rounds
+from repro.service import JobQueue, QueueConfig, ResultStore
+
+#: small real-engine race: 2 backends x 2 rungs = 4 bandit pulls/job
+PS = dict(backends=("sa", "sobol"), total_evals=64, rungs=2)
+
+
+def _equal_results(a, b) -> None:
+    assert a.config.as_tuple() == b.config.as_tuple()
+    for k in ("energy_pj", "latency_cycles", "tops_w", "gops", "area_mm2"):
+        assert a.metrics[k] == b.metrics[k], k
+
+
+# ------------------------------------------------------------------ #
+# engine-level admission (tentpole: late join at a rung boundary)
+# ------------------------------------------------------------------ #
+def test_rung_admitted_job_matches_solo_run_bitwise():
+    """A job admitted mid-race gets the same answer as running alone:
+    per-job bandit state is independent and pull seeds derive only from
+    ``(seed, backend, pull index)``, not from when the job joined."""
+    eng = ExplorationEngine()
+    settings = PortfolioSettings(**PS)
+    early, late = _job(budget=2.23), _job(budget=2.24)
+    solo_early = eng.run([early], method="portfolio", settings=settings)[0]
+    solo_late = eng.run([late], method="portfolio", settings=settings)[0]
+
+    polls = {"n": 0}
+
+    def admit():
+        polls["n"] += 1
+        if polls["n"] == 3:     # join at the boundary before wave 2
+            return [(late, job_key(late, "portfolio", settings))]
+        return []
+
+    outs = eng.run([early], method="portfolio", settings=settings,
+                   keys=[job_key(early, "portfolio", settings)],
+                   admit=admit)
+    assert len(outs) == 2, "admitted result must ride behind the batch"
+    _equal_results(outs[0], solo_early)
+    _equal_results(outs[1], solo_late)
+    flow = outs[1].search["budget_flow"]
+    assert flow["admitted_wave"] == 2
+    assert outs[0].search["budget_flow"]["admitted_wave"] == 0
+    assert polls["n"] >= 3, "hook must be polled at every boundary"
+
+
+def test_admit_requires_single_bandit_portfolio_group():
+    """``admit=`` has no rung boundaries to join outside a one-bucket
+    bandit portfolio race -- the engine must reject it loudly instead of
+    silently stranding admitted jobs."""
+    eng = ExplorationEngine()
+    with pytest.raises(ValueError, match="admission"):
+        eng.run([_job()], method="exhaustive",
+                settings=None, admit=lambda: [])
+    with pytest.raises(ValueError, match="admission"):
+        eng.run([_job()], method="portfolio",
+                settings=PortfolioSettings(**PS, allocator="halving"),
+                admit=lambda: [])
+
+
+# ------------------------------------------------------------------ #
+# budget flow (tentpole: flatline release + conservation)
+# ------------------------------------------------------------------ #
+def test_budget_flow_conserves_total_pulls():
+    """Released + absorbed + spent must add back up to the configured
+    budget: ``sum(race_pulls) + pool_leftover == n_jobs * rounds``."""
+    eng = ExplorationEngine()
+    # flatline_eps high enough that every adaptive pull "flatlines"
+    settings = PortfolioSettings(**PS, flatline_waves=1, flatline_eps=0.5)
+    jobs = [_job(budget=2.23), _job(budget=2.24)]
+    outs = eng.run(jobs, method="portfolio", settings=settings)
+    flows = [r.search["budget_flow"] for r in outs]
+    assert all(f["enabled"] for f in flows)
+    total = sum(f["race_pulls"] for f in flows) + flows[0]["pool_leftover"]
+    assert total == len(jobs) * bandit_rounds(settings)
+    assert all(f["pool_leftover"] == flows[0]["pool_leftover"]
+               for f in flows)
+
+
+def test_flatline_release_is_deterministic():
+    """Same seed, same jobs -> identical budget-flow trace and identical
+    winning configs across runs (reallocation must not break replay)."""
+    settings = PortfolioSettings(**PS, flatline_waves=1, flatline_eps=0.5)
+    jobs = [_job(budget=2.23), _job(budget=2.24)]
+    a = ExplorationEngine().run(jobs, method="portfolio", settings=settings)
+    b = ExplorationEngine().run(jobs, method="portfolio", settings=settings)
+    for ra, rb in zip(a, b):
+        _equal_results(ra, rb)
+        assert ra.search["budget_flow"] == rb.search["budget_flow"]
+
+
+def test_quiesced_continuous_equals_window_bitwise(tmp_path):
+    """With no late arrivals the scheduler must be invisible: the same
+    two-job batch through a continuous queue and a window queue produces
+    bit-identical results (and both match engine defaults)."""
+    eng = ExplorationEngine()
+    settings = PortfolioSettings(**PS)
+    jobs = [_job(budget=2.23), _job(budget=2.24)]
+    legs = {}
+    for continuous in (True, False):
+        q = JobQueue(engine=eng, store=None,
+                     config=QueueConfig(batch_window_s=0.2,
+                                        continuous=continuous))
+        futs = [q.submit(j, method="portfolio", settings=settings)
+                for j in jobs]
+        legs[continuous] = [f.result(timeout=600) for f in futs]
+        q.close()
+    for ra, rb in zip(legs[True], legs[False]):
+        _equal_results(ra, rb)
+        assert ra.search["portfolio"] == rb.search["portfolio"]
+        assert ra.search["budget_flow"] == rb.search["budget_flow"]
+
+
+# ------------------------------------------------------------------ #
+# queue-level admission wiring (stub engine, no JAX)
+# ------------------------------------------------------------------ #
+class WaveStubEngine:
+    """Holds its first ``run()`` open, polling ``admit`` like the real
+    engine does between waves, until ``release`` is set."""
+
+    def __init__(self):
+        self.release = threading.Event()
+        self.started = threading.Event()
+        self.admitted_keys = []
+        self.calls = 0
+
+    def bucket_key(self, job, method=None):
+        return ("stub-bucket",)
+
+    def run(self, jobs, method=None, settings=None, sa_settings=None,
+            keys=None, admit=None):
+        self.calls += 1
+        jobs = list(jobs)
+        self.started.set()
+        if admit is not None:
+            deadline = time.monotonic() + 30
+            while not self.release.is_set():
+                assert time.monotonic() < deadline, "never released"
+                for job, key in admit():
+                    jobs.append(job)
+                    self.admitted_keys.append(key)
+                time.sleep(0.005)
+        return [_fake_result(j) for j in jobs]
+
+
+def test_queue_admits_compatible_pending_into_inflight_group(tmp_path):
+    eng = WaveStubEngine()
+    settings = PortfolioSettings(**PS)
+    store = ResultStore(str(tmp_path))
+    q = JobQueue(engine=eng, store=store,
+                 config=QueueConfig(batch_window_s=0.01))
+    try:
+        f_a = q.submit(_job(budget=2.23), method="portfolio",
+                       settings=settings)
+        assert eng.started.wait(10), "first dispatch never started"
+        f_b = q.submit(_job(budget=2.24), method="portfolio",
+                       settings=settings)
+        deadline = time.monotonic() + 10
+        while not eng.admitted_keys and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert eng.admitted_keys == [f_b.key], "late job never admitted"
+        snap = q.stats_snapshot()
+        assert snap["scheduler"]["inflight_groups"] == 1
+        assert snap["scheduler"]["inflight_group_jobs"] == 2
+        eng.release.set()
+        assert f_a.result(timeout=30) is not None
+        assert f_b.result(timeout=30) is not None
+        snap = q.stats_snapshot()
+        assert snap["scheduler"]["admitted"] == 1
+        assert snap["scheduler"]["admission_checks"] >= 1
+        assert snap["queue"]["dispatches"] == 1, \
+            "admitted job must not trigger a second engine call"
+        assert snap["scheduler"]["inflight_groups"] == 0
+        # admitted entries persist exactly like window-dispatched ones
+        assert sorted(store.keys()) == sorted([f_a.key, f_b.key])
+    finally:
+        eng.release.set()
+        q.close()
+
+
+def test_queue_incompatible_pending_waits_for_own_dispatch():
+    """A pending job with different settings must NOT join the in-flight
+    group -- it dispatches separately once the race drains."""
+    eng = WaveStubEngine()
+    q = JobQueue(engine=eng, store=None,
+                 config=QueueConfig(batch_window_s=0.01))
+    try:
+        f_a = q.submit(_job(budget=2.23), method="portfolio",
+                       settings=PortfolioSettings(**PS))
+        assert eng.started.wait(10)
+        other = PortfolioSettings(backends=("sa", "sobol"),
+                                  total_evals=128, rungs=2)
+        f_b = q.submit(_job(budget=2.24), method="portfolio",
+                       settings=other)
+        time.sleep(0.1)          # give a wrong admission time to happen
+        assert eng.admitted_keys == []
+        eng.release.set()
+        assert f_a.result(timeout=30) is not None
+        assert f_b.result(timeout=30) is not None
+        snap = q.stats_snapshot()
+        assert snap["scheduler"]["admitted"] == 0
+        assert snap["queue"]["dispatches"] == 2
+    finally:
+        eng.release.set()
+        q.close()
+
+
+def test_max_batch_jobs_caps_each_dispatch():
+    """``max_batch_jobs`` is a hard lane cap: a bigger backlog dispatches
+    as successive bounded batches on the window path."""
+    class CountingEngine:
+        def __init__(self):
+            self.batch_sizes = []
+
+        def bucket_key(self, job, method=None):
+            return ("stub-bucket",)
+
+        def run(self, jobs, method=None, settings=None, sa_settings=None,
+                keys=None):
+            self.batch_sizes.append(len(jobs))
+            return [_fake_result(j) for j in jobs]
+
+    eng = CountingEngine()
+    q = JobQueue(engine=eng, store=None,
+                 config=QueueConfig(batch_window_s=0.2, max_batch_jobs=2,
+                                    continuous=False))
+    try:
+        futs = [q.submit(_job(budget=2.23 + i * 1e-6), method="portfolio",
+                         settings=PortfolioSettings(**PS))
+                for i in range(5)]
+        for f in futs:
+            assert f.result(timeout=30) is not None
+        assert eng.batch_sizes == [2, 2, 1]
+    finally:
+        q.close()
+
+
+# ------------------------------------------------------------------ #
+# close() drains instead of stranding (satellite: shutdown fix)
+# ------------------------------------------------------------------ #
+def test_close_drains_accepted_futures_under_load():
+    class SlowStubEngine:
+        def bucket_key(self, job, method=None):
+            return ("stub-bucket",)
+
+        def run(self, jobs, method=None, settings=None, sa_settings=None,
+                keys=None, admit=None):
+            time.sleep(0.05)
+            jobs = list(jobs)
+            if admit is not None:
+                for job, _key in admit():
+                    jobs.append(job)
+            return [_fake_result(j) for j in jobs]
+
+    q = JobQueue(engine=SlowStubEngine(), store=None,
+                 config=QueueConfig(batch_window_s=0.02, max_batch_jobs=2))
+    futs = [q.submit(_job(budget=2.23 + i * 1e-6), method="portfolio",
+                     settings=PortfolioSettings(**PS))
+            for i in range(8)]
+    q.close()                    # default: full drain
+    for f in futs:
+        assert f.done(), "close() stranded an accepted future"
+        assert f.exception(0) is None
+    with pytest.raises(RuntimeError, match="closed"):
+        q.submit(_job(), method="portfolio",
+                 settings=PortfolioSettings(**PS))
+
+
+@pytest.mark.slow
+def test_poisson_load_test_smoke_exits_zero(tmp_path):
+    """The scheduler's whole reason to exist: under Poisson load the
+    continuous leg sustains materially more jobs/sec than the window
+    leg, and shutdown under load exits cleanly."""
+    import os
+
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(root, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.load_test", "--smoke",
+         "--min-speedup", "1.2"],
+        capture_output=True, text=True, timeout=300, cwd=root, env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "speedup" in proc.stdout

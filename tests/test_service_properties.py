@@ -79,3 +79,78 @@ def test_streamed_best_cost_equals_single_job_bitwise(ops, objective):
                 "area_mm2"):
         assert streamed.metrics[key] == solo.metrics[key], \
             (key, "padded/streamed value differs from solo run")
+
+
+# ------------------------------------------------------------------ #
+# scheduler liveness: arbitrary submit/close interleavings (stub
+# engine, no JAX) -- every accepted future resolves exactly once and
+# the store ends up holding exactly the resolved job keys
+# ------------------------------------------------------------------ #
+op_seq_st = st.lists(st.integers(0, 5), min_size=1, max_size=10)
+
+
+class _PropEngine:
+    """Instant stub that still exercises the admission path: one
+    admission poll per dispatch, results in engine order."""
+
+    def bucket_key(self, job, method=None):
+        return ("prop-bucket",)
+
+    def run(self, jobs, method=None, settings=None, sa_settings=None,
+            keys=None, admit=None):
+        from test_service import _fake_result
+        jobs = list(jobs)
+        if admit is not None:
+            for job, _key in admit():
+                jobs.append(job)
+        return [_fake_result(j) for j in jobs]
+
+
+@settings(max_examples=25, deadline=None)
+@given(ops=op_seq_st, close_at=st.integers(0, 10))
+def test_submit_close_interleavings_resolve_exactly_once(ops, close_at):
+    import shutil
+    import tempfile
+
+    from repro.search import PortfolioSettings
+    from repro.service import ResultStore
+
+    bandit = PortfolioSettings(backends=("sa", "sobol"),
+                               total_evals=64, rungs=2)
+    root = tempfile.mkdtemp(prefix="cim-sched-prop-")
+    q = JobQueue(engine=_PropEngine(), store=ResultStore(root),
+                 config=QueueConfig(batch_window_s=0.005,
+                                    max_batch_jobs=3))
+    futures, counts = [], {}
+    try:
+        for i, v in enumerate(ops):
+            if i == close_at:
+                q.close()
+            job = ExploreJob(
+                MACRO, _workload([(8, 8, 8, 1, True)], name=f"wl{v % 3}"),
+                3.0 + v * 1e-6, objective="ee", space=TINY)
+            # odd variants ride the continuous bandit-portfolio path,
+            # even ones the plain window path
+            kwargs = ({"method": "portfolio", "settings": bandit}
+                      if v % 2 else {"method": "exhaustive"})
+            try:
+                f = q.submit(job, **kwargs)
+            except RuntimeError:
+                assert i >= close_at, "open queue rejected a submission"
+                continue
+            counts[id(f)] = 0
+            f.add_done_callback(
+                lambda fut: counts.__setitem__(
+                    id(fut), counts[id(fut)] + 1))
+            futures.append(f)
+        q.close()
+        for f in futures:
+            assert f.wait(30), "close() stranded an accepted future"
+            assert f.exception(0) is None
+            assert counts[id(f)] == 1, "future resolved more than once"
+        store = ResultStore(root)
+        assert set(store.keys()) == {f.key for f in futures}, \
+            "store contents != resolved job keys"
+    finally:
+        q.close()
+        shutil.rmtree(root, ignore_errors=True)
